@@ -1,0 +1,25 @@
+"""Fig. 3 — Ape-X DPG on continuous control.
+
+Paper: performance improves with actor count on the control suite tasks.
+Here: the DPG preset on PointMass at two lane counts + the prioritized
+eviction strategy exercised (Appendix D)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_apex
+from repro.configs import apex_dpg
+
+
+def main():
+    preset = apex_dpg.reduced()
+    for lanes in (4, 16):
+        cfg = dataclasses.replace(preset.apex, lanes_per_shard=lanes)
+        r = run_apex(cfg, preset, iters=50, seed=3)
+        emit(f"fig3/actors={lanes}/final_return", r["us_per_iter"],
+             f"{r['final_return']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

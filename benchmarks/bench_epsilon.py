@@ -1,0 +1,24 @@
+"""Fig. 7 (Appendix B) — varying the data-generating policies.
+
+Paper: the full eps-ladder is slightly better overall than a fixed set of 6
+eps values, but the fixed set still works. Both variants benchmarked."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_apex
+from repro.configs import apex_dqn
+
+
+def main():
+    preset = apex_dqn.reduced()
+    for mode in ("ladder", "fixed_set"):
+        cfg = dataclasses.replace(preset.apex, eps_mode=mode)
+        r = run_apex(cfg, preset, iters=80, seed=8)
+        emit(f"fig7/eps={mode}/final_return", r["us_per_iter"],
+             f"{r['final_return']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

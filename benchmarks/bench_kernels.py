@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks (§Contention / Appendix F): the replay's batched
+sampling op and the n-step builder, XLA path vs Pallas-interpret oracle-check
+timing. Wall numbers are CPU artifacts; the row exists to track relative
+regressions."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import sumtree
+from repro.core.nstep import from_trajectory
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def main():
+    cap, batch = 1 << 15, 512
+    leaves = jax.random.uniform(jax.random.key(0), (cap,))
+    tree = sumtree.rebuild(leaves)
+    u = jax.random.uniform(jax.random.key(1), (batch,)) * sumtree.total(tree)
+
+    sample = jax.jit(sumtree.sample)
+    us = timeit(sample, tree, u)
+    emit(f"replay/sumtree_sample_xla/cap={cap}/b={batch}", us,
+         f"{batch / us:.1f}samples_per_us")
+
+    wr = jax.jit(sumtree.write)
+    idx = jnp.arange(batch, dtype=jnp.int32)
+    us = timeit(wr, tree, idx, u)
+    emit(f"replay/sumtree_write/cap={cap}/b={batch}", us, "rebuild")
+
+    r = jax.random.normal(jax.random.key(2), (256, 64))
+    g = jnp.full((256, 64), 0.99)
+    ns = jax.jit(lambda r, g: from_trajectory(r, g, 3))
+    us = timeit(ns, r, g)
+    emit("replay/nstep_from_trajectory/lanes=256/T=64", us, "n=3")
+
+
+if __name__ == "__main__":
+    main()

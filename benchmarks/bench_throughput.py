@@ -1,0 +1,34 @@
+"""Table 1 / §4.1 — system throughput accounting.
+
+The paper reports ~50K env FPS from 360 actors (139 FPS each), ~12.5K
+transitions/s generated, and ~9.7K transitions/s consumed by the learner
+(19 batches of 512 per second). Here we measure the same three rates for the
+reduced preset and derive the generate:consume ratio, the paper's key
+asynchrony budget (theirs: 12.5K/9.7K ~ 1.29)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_apex
+from repro.configs import apex_dqn
+
+
+def main():
+    preset = apex_dqn.reduced()
+    cfg = preset.apex
+    r = run_apex(cfg, preset, iters=40)
+    gen_rate = cfg.lanes_per_shard * cfg.window / (r["us_per_iter"] / 1e6)
+    consume_rate = (cfg.learner_steps_per_iter * cfg.batch_size
+                    / (r["us_per_iter"] / 1e6))
+    emit("table1/env_fps", r["us_per_iter"], f"{r['fps']:.0f}")
+    emit("table1/transitions_generated_per_s", r["us_per_iter"],
+         f"{gen_rate:.0f}")
+    emit("table1/transitions_consumed_per_s", r["us_per_iter"],
+         f"{consume_rate:.0f}")
+    emit("table1/generate_consume_ratio", r["us_per_iter"],
+         f"{gen_rate / max(consume_rate, 1e-9):.2f}")
+
+
+if __name__ == "__main__":
+    main()

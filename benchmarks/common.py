@@ -1,0 +1,53 @@
+"""Shared benchmark machinery: timed Ape-X runs at reduced scale + CSV rows.
+
+Every benchmark maps to a paper table/figure and prints
+``name,us_per_call,derived`` rows (derived = the figure's headline quantity).
+Wall-clock absolute numbers are CPU-container artifacts; the *relative*
+structure (scaling slopes, orderings) is what reproduces the paper's claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import apex
+
+
+def run_apex(cfg, preset, iters: int, seed: int = 0, warmup: int = 2):
+    """Run a preset; returns dict of aggregates + us/iteration."""
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(cfg, preset.env, preset.agent,
+                                          optimizer)
+    state = init_fn(jax.random.key(seed))
+    for _ in range(warmup):
+        state, m = step_fn(state)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    returns = []
+    for _ in range(iters):
+        state, m = step_fn(state)
+        r = float(m["mean_ep_return"])
+        if not np.isnan(r):
+            returns.append(r)
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    frames = float(state.frames)
+    transitions_trained = int(state.learner_step) * cfg.batch_size
+    return {
+        "us_per_iter": 1e6 * dt / iters,
+        "fps": frames / dt if dt > 0 else 0.0,   # approx: counts warmup frames too
+        "frames": frames,
+        "transitions_trained": transitions_trained,
+        "final_return": float(np.mean(returns[-15:])) if returns else float("nan"),
+        "mean_return": float(np.mean(returns)) if returns else float("nan"),
+        "learner_steps": int(state.learner_step),
+        "seconds": dt,
+    }
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,70 @@
+"""§Perf hillclimb driver: re-run a dry-run combo with a named variant
+(config override set) and report the roofline-term deltas vs baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch llama3.2-1b \
+      --shape train_4k --variant fsdp_resid
+
+Variants (each is one hypothesis from EXPERIMENTS.md §Perf):
+  fsdp_resid   residual stream sharded over data axes only — gather weights
+               per layer (small) instead of activations (large)
+  seq_resid    sequence parallelism: residual (batch over data, seq over
+               model) — sharded activations without hidden-dim gathers
+  p_bf16       bf16 softmax-probability matmul inputs (halves quadratic
+               score traffic; exp/max/denominator stay f32)
+  p_bf16_fsdp  both of the above
+  chunk1k      KV chunk 1024 (fewer online-softmax correction passes)
+  chunk256     KV chunk 256
+  ssd_q128     Mamba2 SSD chunk 128 (bigger intra-chunk matmuls)
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+
+VARIANTS = {
+    "fsdp_resid": {"act_sharding": "data_only"},
+    "seq_resid": {"act_sharding": "seq"},
+    "p_bf16": {"attn_p_bf16": True},
+    "p_bf16_fsdp": {"attn_p_bf16": True, "act_sharding": "data_only"},
+    "chunk1k": {"attn_chunk": 1024},
+    "chunk256": {"attn_chunk": 256},
+    "moe_local": {"moe_groups": 16},
+    "wkv_heads_seq": {"mixer_head_shard": True, "act_sharding": "seq"},
+    "moe_local_seq": {"moe_groups": 16, "act_sharding": "seq"},
+    "swa_ring": {"swa_ring_cache": True},
+}
+
+
+def main():
+    from repro.launch import dryrun
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=tuple(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    overrides = VARIANTS[args.variant]
+    rec = dryrun.run_combo(args.arch, args.shape, args.multi_pod,
+                           overrides=overrides, tag=args.variant)
+    path = dryrun.artifact_path(args.arch, args.shape, args.multi_pod,
+                                tag=args.variant)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+    base_path = dryrun.artifact_path(args.arch, args.shape, args.multi_pod)
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+        if base["status"] == "ok" and rec["status"] == "ok":
+            print("\n=== delta vs baseline ===")
+            for term in ("compute_s", "memory_s", "collective_s"):
+                b, n = base[term], rec[term]
+                pct = 100 * (n - b) / b if b else float("nan")
+                print(f"{term:14s} {b:10.4f} -> {n:10.4f}  ({pct:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) roofline table (compute/memory/collective terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio).
+
+Reads benchmarks/artifacts/dryrun_*.json (written by repro.launch.dryrun) and
+prints a markdown table + emits CSV rows. Use --write-experiments to refresh
+the table block in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+COLUMNS = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+           "collective_s", "bottleneck", "useful_flops_ratio")
+
+
+def load(mesh_filter: str | None = None, variants: bool = False):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "dryrun_*.json"))):
+        is_variant = "__" in os.path.basename(path)
+        if is_variant != variants:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        recs.append(rec)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    return recs
+
+
+def fmt(v, spec=".4f"):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return format(v, spec)
+    return str(v)
+
+
+def markdown_table(recs) -> str:
+    lines = ["| arch | shape | mesh | status | compute (s) | memory (s) | "
+             "collective (s) | bottleneck | useful-FLOPs ratio |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']}: {r.get('reason', r.get('error', ''))[:60]} "
+                f"| - | - | - | - | - |")
+            continue
+        variant = r.get("variant", "baseline")
+        tag = "" if variant == "baseline" else f" ({variant})"
+        lines.append(
+            f"| {r['arch']}{tag} | {r['shape']} | {r['mesh']} | ok | "
+            f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | {r['bottleneck']} | "
+            f"{fmt(r.get('useful_flops_ratio'), '.3f')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("16x16", "2x16x16"))
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--variants", action="store_true",
+                    help="show §Perf variant runs instead of baselines")
+    args = ap.parse_args()
+    recs = load(args.mesh, variants=args.variants)
+    if args.markdown:
+        print(markdown_table(recs))
+        return
+    for r in recs:
+        if r["status"] == "ok":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                  f"bottleneck={r['bottleneck']};compute={r['compute_s']:.4f}"
+                  f";memory={r['memory_s']:.4f}"
+                  f";collective={r['collective_s']:.4f}")
+        else:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                  f"{r['status']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring for
+the claim it reproduces). The roofline rows are read from the dry-run
+artifacts if present (run ``python -m repro.launch.dryrun --all`` first for
+the full table).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = {
+    "table1": "benchmarks.bench_throughput",
+    "fig3": "benchmarks.bench_dpg",
+    "fig4": "benchmarks.bench_actor_scaling",
+    "fig5": "benchmarks.bench_replay_capacity",
+    "fig6": "benchmarks.bench_recency",
+    "fig7": "benchmarks.bench_epsilon",
+    "fig12": "benchmarks.bench_prioritization",
+    "kernels": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        mod_name = SUITES[name]
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving example: batched greedy decode with prefill + one-token steps —
+the exact step the decode dry-runs lower at 32k/500k, at CPU scale, for an
+attention arch, an SSM (RWKV6), and the MLA latent-cache arch.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("llama3.2-1b", "rwkv6-1.6b", "deepseek-v2-236b"):
+        serve(arch, batch=2, prompt_len=12, new_tokens=12, reduced=True)
+
+
+if __name__ == "__main__":
+    main()

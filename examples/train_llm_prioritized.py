@@ -1,0 +1,60 @@
+"""The paper's technique as an LLM data-selection layer (paper §6): train a
+reduced llama3.2-style model with prioritized *sequence* replay on the
+synthetic Markov-mixture corpus, and show the selection signal — hard
+(high-entropy) documents get sampled more than easy ones.
+
+  PYTHONPATH=src python examples/train_llm_prioritized.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import replay as replay_lib, sequence_replay as seqrep, sumtree
+from repro.data import pipeline as data_lib
+from repro.models import registry, transformer
+from repro.optim import optimizers as optim
+
+
+def main():
+    seq_len, batch = 64, 8
+    cfg = registry.get_config("llama3.2-1b").reduced(d_model=128, vocab=512)
+    params = transformer.init(cfg, jax.random.key(0))
+    optimizer = optim.adamw(1e-3)
+    scfg = seqrep.SeqReplayConfig(
+        replay=replay_lib.ReplayConfig(capacity=512, min_fill=batch),
+        seq_len=seq_len, batch_size=batch, ingest_batch=batch,
+        param_sync_period=4, learner_steps_per_round=2)
+    pcfg = data_lib.PipelineConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                   batch_size=batch)
+    apply_fn = lambda p, toks: transformer.apply(p, toks, cfg=cfg)
+    state = seqrep.init_state(scfg, params, optimizer, jax.random.key(1))
+
+    @jax.jit
+    def round_step(state, step):
+        b = data_lib.make_batch(pcfg, jax.random.key(7), step)
+        return seqrep.round_step(scfg, apply_fn, optimizer, state,
+                                 b["tokens"], b["labels"])
+
+    for it in range(60):
+        state, m = round_step(state, it)
+        if (it + 1) % 10 == 0:
+            print(f"round {it+1:3d}  loss={float(m['loss']):.4f}  "
+                  f"mean_priority={float(m['mean_priority']):.4f}  "
+                  f"replay={int(state.replay.size)}")
+
+    # Show the selection signal: priority mass vs document diversity.
+    leaves = np.asarray(sumtree.leaves(state.replay.tree))
+    toks = np.asarray(state.replay.storage["tokens"])
+    live = leaves > 0
+    uniq = np.array([len(set(r.tolist())) for r in toks])
+    lo = leaves[live & (uniq < np.median(uniq[live]))].mean()
+    hi = leaves[live & (uniq >= np.median(uniq[live]))].mean()
+    print(f"\npriority mass: low-diversity docs {lo:.4f} vs "
+          f"high-diversity docs {hi:.4f}")
+    print("prioritized replay focuses the learner on the harder documents."
+          if hi > lo else "(signal not yet separated at this tiny scale)")
+
+
+if __name__ == "__main__":
+    main()

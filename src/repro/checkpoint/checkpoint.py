@@ -1,0 +1,84 @@
+"""Checkpointing — the paper's failure-tolerance story (Appendix F).
+
+"All stateful parts of the system must periodically save their work and be
+able to resume": here the learner state (params, optimizer, counters) and the
+replay state are saved; actor state is deliberately *not* — actors are pure
+functions of (params, rng) and are rebuilt on restart, exactly as the paper's
+actors are restartable at any time with only a temporary dip in ingest rate.
+
+Format: a single ``.npz`` per checkpoint with flattened pytree paths as keys,
+plus a tiny JSON sidecar for tree structure. Device-sharded arrays are pulled
+to host; restore re-shards via the caller's jit/sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, step: int | None = None) -> str:
+    """Atomically write ``tree`` to ``path`` (a .npz file)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    # np.savez appends .npz to names without it
+    actual_tmp = tmp if tmp.endswith(".npz") else tmp + ".npz"
+    os.replace(actual_tmp, path)
+    meta = {"step": step, "keys": sorted(flat.keys())}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(path: str, example: Any) -> Any:
+    """Load into the structure of ``example`` (shapes/dtypes must match)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(example)
+    leaves = []
+    for path_elems, leaf in paths_leaves:
+        key = "/".join(_path_str(p) for p in path_elems)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(jax.numpy.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs example {jax.numpy.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest(directory: str, prefix: str = "ckpt_") -> str | None:
+    """Newest checkpoint path in ``directory`` by step number, or None."""
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best

@@ -1,0 +1,67 @@
+"""Ape-X DPG — the paper's continuous-control configuration (§4.2, Appendix D),
+plus a CPU-scale reduced preset.
+
+Paper values: 64 actors, Gaussian exploration noise sigma=0.3 (explicitly not
+OU noise), critic 400-tanh-300, actor 300-tanh-200 with element-wise action
+gradient clip to [-1,1], Adam lr 1e-4, n-step critic targets, target nets
+copied every 100 batches, replay capacity 1e6 with *prioritized eviction*
+(alpha_evict = -0.4), batch 256.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import apex, replay as replay_lib
+from repro.core.agents import DPGAgent
+from repro.envs.synthetic import PointMass
+from repro.models.qnetworks import DPGActor, DPGCritic
+from repro.optim import optimizers as optim
+
+
+@dataclasses.dataclass(frozen=True)
+class ApexDPGPreset:
+    apex: apex.ApexConfig
+    env: PointMass
+    agent: DPGAgent
+    learning_rate: float = 1e-4
+
+    def make_optimizer(self):
+        return optim.adam(self.learning_rate)
+
+
+def full(num_shards: int = 16) -> ApexDPGPreset:
+    env = PointMass(max_steps=200)
+    agent = DPGAgent(actor_net=DPGActor(action_dim=env.action_dim,
+                                        hidden=(300, 200)),
+                     critic_net=DPGCritic(hidden=(400, 300)),
+                     sigma=0.3, action_grad_clip=1.0)
+    cap = 1_048_576 // num_shards
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(
+            capacity=cap, soft_capacity=int(cap * 0.95),
+            alpha=0.6, beta=0.4, evict_alpha=-0.4,
+            min_fill=10_000 // num_shards),
+        lanes_per_shard=max(1, 64 // num_shards), num_shards=num_shards,
+        rollout_len=50, n_step=5, batch_size=256 // num_shards,
+        learner_steps_per_iter=2, param_sync_period=1,
+        target_update_period=100, evict_interval=100,
+        eviction="prioritized", evict_num=256,
+        eps_base=0.4, eps_alpha=7.0)
+    return ApexDPGPreset(apex=cfg, env=env, agent=agent)
+
+
+def reduced(num_shards: int = 1) -> ApexDPGPreset:
+    env = PointMass(max_steps=60)
+    agent = DPGAgent(actor_net=DPGActor(action_dim=env.action_dim,
+                                        hidden=(32, 32)),
+                     critic_net=DPGCritic(hidden=(32, 32)),
+                     sigma=0.3)
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(capacity=2048, min_fill=128),
+        lanes_per_shard=8, num_shards=num_shards,
+        rollout_len=20, n_step=5, batch_size=32,
+        learner_steps_per_iter=2, param_sync_period=2,
+        target_update_period=50, evict_interval=25,
+        eviction="prioritized", evict_num=64)
+    return ApexDPGPreset(apex=cfg, env=env, agent=agent, learning_rate=1e-3)

@@ -1,0 +1,152 @@
+"""Config schema: architectures + input shapes + smoke-reduction rules.
+
+Each assigned architecture gets a ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (exact published spec, source cited) built on this schema. The
+four benchmark input shapes are global (sharded over the data axes by the
+launcher):
+
+  train_4k     seq 4096   global_batch 256   training step
+  prefill_32k  seq 32768  global_batch 32    inference prefill / actor scoring
+  decode_32k   seq 32768  global_batch 128   one-token decode vs KV cache
+  long_500k    seq 524288 global_batch 1     long-context decode (sub-quadratic archs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models.layers import MLAConfig, MoEConfig
+from repro.models.ssm import SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""                 # paper / model-card citation
+
+    mixer: str = "attn"              # attn | mla | mamba2 | rwkv6
+    mlp: str = "dense"               # dense | moe | rwkv_cm
+    act: str = "swiglu"
+    norm: str = "rmsnorm"
+    rope_theta: float = 1e4
+    rope_pct: float = 1.0
+    sliding_window: int | None = None
+    causal: bool = True
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    shared_attn_every: int = 0       # zamba2: shared attention block cadence
+    input_mode: str = "tokens"       # tokens | embeddings | mixed
+    prefix_len: int = 1024           # vlm: patch tokens per sequence
+    tie_embeddings: bool = False
+
+    dtype: str = "bfloat16"          # activation dtype
+    param_dtype: str = "bfloat16"
+    attn_impl: str = "einsum"
+    attn_chunk: int = 512
+    remat: bool = False
+    scan_layers: bool = True         # False: unroll (exact HLO cost/collective
+                                     # accounting — XLA counts while bodies once)
+    attn_unroll: bool = False        # unroll the chunked-attention KV loop
+                                     # (exact accounting in dry-run probes)
+    attn_p_bf16: bool = False        # store/multiply softmax probabilities in
+                                     # bf16 (exp/max/denominator stay f32)
+    mixer_head_shard: bool = False   # constrain SSM/WKV mixer tensors to
+                                     # head-parallel (heads over `model`,
+                                     # sequence local) around the recurrence
+    swa_ring_cache: bool = False     # sliding-window archs: decode KV cache
+                                     # is a ring of `sliding_window` slots
+                                     # instead of the full sequence (O(w)
+                                     # memory; prefill must fit the window)
+    act_sharding: tuple | None = None  # P spec for (B, S, d) residual stream
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.mixer in ("mamba2", "rwkv6") and self.shared_attn_every == 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM/hybrid or sliding-window attention."""
+        return (self.mixer in ("mamba2", "rwkv6")
+                or self.sliding_window is not None)
+
+    @property
+    def encoder_only(self) -> bool:
+        return not self.causal
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256,
+                vocab: int = 512) -> "ModelConfig":
+        """Smoke-test variant of the same family (brief: <=2 layers,
+        d_model<=512, <=4 experts) runnable on CPU."""
+        head_dim = max(32, d_model // max(self.n_heads, 1))
+        n_heads = min(self.n_heads, max(2, d_model // head_dim))
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        if n_heads % n_kv:
+            n_kv = 1
+        changes: dict[str, Any] = dict(
+            n_layers=n_layers, d_model=d_model,
+            n_heads=n_heads, n_kv_heads=n_kv, head_dim=d_model // n_heads,
+            d_ff=2 * d_model, vocab_size=vocab,
+            dtype="float32", param_dtype="float32",
+        )
+        if self.moe is not None:
+            # capacity 4.0: no token dropping in smoke tests, so prefill+decode
+            # match full-sequence apply exactly
+            changes["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2, d_expert=d_model,
+                num_shared=min(self.moe.num_shared, 1), capacity_factor=4.0)
+        if self.mla is not None:
+            changes["mla"] = MLAConfig(q_lora=64, kv_lora=32, rope_head_dim=16,
+                                       nope_head_dim=32, v_head_dim=32)
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, headdim=32)
+        if self.sliding_window is not None:
+            changes["sliding_window"] = 32
+        if self.shared_attn_every:
+            changes["shared_attn_every"] = 1
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """The brief's skip rules; reasons are recorded in EXPERIMENTS.md."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full attention: 500k decode requires sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,19 @@
+"""deepseek-v2-236b — MLA latent attention (kv_lora=512) + 160-routed/2-shared
+top-6 MoE [arXiv:2405.04434]. Simplification: every layer is MoE (the real
+model's layer-0 dense MLP is folded into the uniform scanned stack;
+DESIGN.md §7)."""
+from repro.configs.base import ModelConfig
+from repro.models.layers import MLAConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v2-236b", family="moe",
+    n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128, head_dim=128,
+    d_ff=1536, vocab_size=102400,
+    mixer="mla",
+    mla=MLAConfig(q_lora=1536, kv_lora=512, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    mlp="moe",
+    moe=MoEConfig(num_experts=160, top_k=6, d_expert=1536, num_shared=2),
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+)

@@ -1,0 +1,15 @@
+"""hubert-xlarge — encoder-only audio transformer (wav2vec2 arch); the conv
+feature-extractor frontend is a stub providing 1280-d frame embeddings
+[arXiv:2106.07447]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    causal=False, input_mode="embeddings",
+    act="gelu", norm="layernorm",
+    # adaptation: rope in place of the conv positional embedding (DESIGN.md)
+    rope_theta=10000.0,
+    source="arXiv:2106.07447 (HuBERT X-Large)",
+)

@@ -1,0 +1,12 @@
+"""internvl2-2b — VLM: InternLM2-1.8B language backbone consuming a stub
+InternViT patch-embedding prefix [arXiv:2404.16821]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=92553,
+    input_mode="mixed", prefix_len=1024,   # stub ViT/projector output
+    act="swiglu", norm="rmsnorm", rope_theta=1000000.0,
+    source="arXiv:2404.16821 (InternVL2-2B / InternLM2 backbone)",
+)

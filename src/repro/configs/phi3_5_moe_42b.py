@@ -1,0 +1,14 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE decoder
+[hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.configs.base import ModelConfig
+from repro.models.layers import MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size=32064,
+    mlp="moe",
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=6400, num_shared=0),
+    act="swiglu", norm="layernorm",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

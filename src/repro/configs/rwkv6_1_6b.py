@@ -1,0 +1,12 @@
+"""rwkv6-1.6b ("Finch") — attention-free RNN with data-dependent decay
+[arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=7168, vocab_size=65536,
+    mixer="rwkv6", mlp="rwkv_cm",
+    norm="layernorm",
+    source="arXiv:2404.05892 (RWKV-6 Finch 1.6B)",
+)

@@ -1,0 +1,15 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone + weight-shared full-attention block
+applied every 6 layers [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig
+from repro.models.ssm import SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000,
+    mixer="mamba2", mlp="none",          # mamba blocks carry no per-layer MLP
+    ssm=SSMConfig(d_state=64, headdim=64, conv_width=4, expand=2, ngroups=1),
+    shared_attn_every=6,                 # the shared attn+MLP block (d_ff used there)
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2411.15242 (Zamba2-2.7B)",
+)

@@ -1,0 +1,68 @@
+"""Acting: exploration policies and actor-side initial priorities (Alg. 1).
+
+The Ape-X actor's defining move is computing *suitable initial priorities
+online* from the Q-values it already evaluated while acting (paper §3,
+Appendix F) — not max-priority like Schaul et al. 2016, which at Ape-X ingest
+rates would collapse sampling onto the newest data. Everything here is pure
+and vectorized over actor lanes; the stale parameter copy the actor acts with
+is managed by ``repro.core.apex`` (``param_sync_period``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+
+
+def egreedy_action(rng: jax.Array, qvals: jax.Array, epsilon: jax.Array) -> jax.Array:
+    """Per-lane epsilon-greedy over (lanes, num_actions) Q-values.
+
+    ``epsilon`` is (lanes,) — each lane is one "actor" of the paper's ladder.
+    """
+    lanes, num_actions = qvals.shape
+    explore_rng, action_rng = jax.random.split(rng)
+    greedy = jnp.argmax(qvals, axis=-1)
+    random = jax.random.randint(action_rng, (lanes,), 0, num_actions)
+    explore = jax.random.uniform(explore_rng, (lanes,)) < epsilon
+    return jnp.where(explore, random, greedy).astype(jnp.int32)
+
+
+def gaussian_action(rng: jax.Array, mean_action: jax.Array, sigma: float = 0.3,
+                    low: float = -1.0, high: float = 1.0) -> jax.Array:
+    """DPG exploration (Appendix D): N(0, sigma) noise per action dim, clipped.
+
+    The paper deliberately replaces the original DDPG's Ornstein-Uhlenbeck
+    process with uncorrelated Gaussian noise.
+    """
+    noise = sigma * jax.random.normal(rng, mean_action.shape, mean_action.dtype)
+    return jnp.clip(mean_action + noise, low, high)
+
+
+def initial_priorities_dqn(
+    q_first: jax.Array,       # (B, A) buffered q(S_t, *) from acting time
+    action: jax.Array,        # (B,)   A_t
+    returns: jax.Array,       # (B,)   R_{t:t+n}
+    discount_n: jax.Array,    # (B,)   gamma^n (0 past terminal)
+    q_last: jax.Array,        # (B, A) buffered q(S_{t+n}, *)
+) -> jax.Array:
+    """|n-step TD| from the actor's buffered Q-values (Appendix F).
+
+    Bootstrap is greedy w.r.t. the actor's own (stale) copy — the actor holds
+    a single parameter set, so no online/target split here; the learner
+    refreshes the priority with the full double-Q error after sampling.
+    """
+    q_sa = jnp.take_along_axis(q_first, action[:, None], axis=-1)[:, 0]
+    bootstrap = q_last.max(axis=-1)
+    return jnp.abs(prio.td_error_nstep(q_sa, returns, discount_n, bootstrap))
+
+
+def initial_priorities_dpg(
+    q_sa_first: jax.Array,    # (B,) buffered critic value q(S_t, A_t)
+    returns: jax.Array,
+    discount_n: jax.Array,
+    q_boot_last: jax.Array,   # (B,) buffered q(S_{t+n}, pi(S_{t+n}))
+) -> jax.Array:
+    """|n-step TD| as given by the (stale) critic (Appendix D)."""
+    return jnp.abs(prio.td_error_nstep(q_sa_first, returns, discount_n, q_boot_last))

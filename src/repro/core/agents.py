@@ -1,0 +1,134 @@
+"""Agent plug-ins: Ape-X DQN and Ape-X DPG behind one protocol.
+
+The paper stresses the framework "may be combined with any off-policy
+reinforcement learning update" (§6); ``repro.core.apex`` is generic over this
+protocol:
+
+  init(rng, obs_example) -> params
+  act(params, rng, obs, eps) -> (action, act_aux)      # aux buffers the
+      Q-values evaluated while acting, so initial priorities come for free
+      (Appendix F "Adding Data")
+  initial_priorities(first_aux, action, returns, discount_n, last_aux)
+  update(params, target_params, opt_state, optimizer, items, is_weights,
+         axis_name) -> (params, opt_state, new_priorities, metrics)
+
+``axis_name`` is the ``data`` mesh axis: gradients are psum-averaged across
+shards (the learner is data-parallel), everything else is shard-local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import actor as actor_lib
+from repro.core import learner as learner_lib
+from repro.models.qnetworks import DPGActor, DPGCritic, DuelingDQN
+from repro.optim import optimizers as optim
+
+
+def _pmean(tree: Any, axis_name: str | None) -> Any:
+    if axis_name is None:
+        return tree
+    return jax.lax.pmean(tree, axis_name)
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNAgent:
+    """Double-Q + n-step + dueling (paper §3.1, Appendix C)."""
+
+    net: DuelingDQN
+    grad_clip: float = 40.0
+
+    def init(self, rng: jax.Array, obs_example: jax.Array) -> Any:
+        return self.net.init(rng, obs_example)
+
+    def act(self, params: Any, rng: jax.Array, obs: jax.Array,
+            eps: jax.Array) -> tuple[jax.Array, dict]:
+        q = self.net.apply(params, obs)                       # (lanes, A)
+        a = actor_lib.egreedy_action(rng, q, eps)
+        return a, {"q": q}
+
+    def initial_priorities(self, first_aux, action, returns, discount_n, last_aux):
+        return actor_lib.initial_priorities_dqn(
+            first_aux["q"], action, returns, discount_n, last_aux["q"])
+
+    def update(self, params, target_params, opt_state, optimizer, items,
+               is_weights, axis_name=None):
+        def loss_fn(p):
+            out = learner_lib.dqn_loss(
+                p, target_params, self.net.apply,
+                items["obs"], items["action"], items["returns"],
+                items["discount_n"], items["next_obs"], is_weights)
+            return out.loss, out
+
+        (loss, out), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = _pmean(grads, axis_name)
+        grads = optim.clip_by_global_norm(grads, self.grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = {"loss": loss, **out.aux}
+        return params, opt_state, out.new_priorities, metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class DPGAgent:
+    """Deterministic policy gradients with a TD critic (paper §3.2, Appendix D)."""
+
+    actor_net: DPGActor
+    critic_net: DPGCritic
+    sigma: float = 0.3
+    action_grad_clip: float = 1.0
+
+    def init(self, rng: jax.Array, obs_example: jax.Array) -> Any:
+        a_rng, c_rng = jax.random.split(rng)
+        act_example = jnp.zeros((1, self.actor_net.action_dim), jnp.float32)
+        return {
+            "actor": self.actor_net.init(a_rng, obs_example),
+            "critic": self.critic_net.init(c_rng, obs_example, act_example),
+        }
+
+    def act(self, params: Any, rng: jax.Array, obs: jax.Array,
+            eps: jax.Array) -> tuple[jax.Array, dict]:
+        # eps scales exploration noise per lane — the continuous analogue of
+        # the eps-ladder (the paper's DPG runs use a single sigma; the ladder
+        # reduces to it when all lanes share one value).
+        pi = self.actor_net.apply(params["actor"], obs)
+        a = actor_lib.gaussian_action(rng, pi, self.sigma)
+        a = jnp.where(eps[:, None] > 0, a, pi)  # eps==0 lanes act greedily
+        q_sa = self.critic_net.apply(params["critic"], obs, a)
+        q_pi = self.critic_net.apply(params["critic"], obs, pi)
+        return a, {"q_sa": q_sa, "q_pi": q_pi}
+
+    def initial_priorities(self, first_aux, action, returns, discount_n, last_aux):
+        del action
+        return actor_lib.initial_priorities_dpg(
+            first_aux["q_sa"], returns, discount_n, last_aux["q_pi"])
+
+    def update(self, params, target_params, opt_state, optimizer, items,
+               is_weights, axis_name=None):
+        def critic_loss_fn(cp):
+            out = learner_lib.dpg_critic_loss(
+                cp, target_params["critic"], target_params["actor"],
+                self.critic_net.apply, self.actor_net.apply,
+                items["obs"], items["action"], items["returns"],
+                items["discount_n"], items["next_obs"], is_weights)
+            return out.loss, out
+
+        def policy_loss_fn(ap):
+            return learner_lib.dpg_policy_loss(
+                ap, params["critic"], self.critic_net.apply,
+                self.actor_net.apply, items["obs"], is_weights,
+                self.action_grad_clip)
+
+        (c_loss, out), c_grads = jax.value_and_grad(critic_loss_fn, has_aux=True)(
+            params["critic"])
+        p_loss, a_grads = jax.value_and_grad(policy_loss_fn)(params["actor"])
+        grads = _pmean({"actor": a_grads, "critic": c_grads}, axis_name)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = {"critic_loss": c_loss, "policy_loss": p_loss, **out.aux}
+        return params, opt_state, out.new_priorities, metrics

@@ -1,0 +1,390 @@
+"""The Ape-X loop on a TPU mesh: SPMD actor/learner alternation.
+
+Paper architecture (Fig. 1): many actors feed a shared prioritized replay; a
+single learner samples, updates, and writes back priorities; actors refresh
+parameters periodically. TPU-native realization (DESIGN.md §2):
+
+* Actor lanes — every ``data``-axis shard steps a vector of environments with
+  its slice of the global eps-ladder; the *whole* global lane vector plays the
+  role of the paper's N actors (eps_i = eps^(1 + i/(N-1)*alpha) over global
+  lane ids).
+* Sharded replay — each shard owns ``capacity/num_shards`` slots. Experience
+  never crosses shards; the learner's gradient psum and two scalars per
+  sampling round (global size, global max-IS-weight) are the only collectives.
+* Staleness — actors act with a parameter copy refreshed every
+  ``param_sync_period`` iterations (paper: every 400 frames), making the
+  off-policy gap explicit and testable.
+* Alternation — acting and learning run bulk-synchronously;
+  ``learner_steps_per_iter`` and ``rollout_len`` set the paper's generate :
+  consume ratio (~12.5K : 9.7K transitions/s in §4.1).
+
+Everything below is per-shard pure functions plus a ``shard_map`` wrapper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import codec, nstep, priority as prio, replay as replay_lib
+from repro.envs.synthetic import batch_reset, batch_step
+from repro.optim import optimizers as optim
+
+
+@dataclasses.dataclass(frozen=True)
+class ApexConfig:
+    replay: replay_lib.ReplayConfig
+    lanes_per_shard: int = 32          # vectorized envs per shard
+    num_shards: int = 1                # data-axis size (for the global ladder)
+    rollout_len: int = 16              # T env steps per actor phase
+    n_step: int = 3                    # paper: n = 3
+    batch_size: int = 64               # learner batch per shard
+    learner_steps_per_iter: int = 1
+    param_sync_period: int = 1         # iterations between actor param refresh
+    target_update_period: int = 100    # learner steps (paper Atari: 2500)
+    evict_interval: int = 100          # learner steps between evictions (paper: 100)
+    evict_num: int = 0                 # victims per prioritized eviction (DPG mode)
+    eviction: str = "fifo"             # "fifo" | "prioritized"
+    replicate_k: int = 1               # Fig. 6 ablation: add each transition k times
+    eps_mode: str = "ladder"           # "ladder" | "fixed_set" (Fig. 7 ablation)
+    eps_base: float = prio.EPSILON_BASE
+    eps_alpha: float = prio.EPSILON_ALPHA
+    compress_obs: bool = False         # store obs via the uint8 codec (the
+                                       # paper's PNG-compression analogue)
+
+    @property
+    def num_actors(self) -> int:
+        return self.lanes_per_shard * self.num_shards
+
+    @property
+    def window(self) -> int:
+        return self.rollout_len - self.n_step + 1
+
+
+class ApexState(NamedTuple):
+    # replicated across shards
+    params: Any
+    target_params: Any
+    opt_state: Any
+    actor_params: Any          # the stale copy actors act with
+    iteration: jax.Array
+    learner_step: jax.Array
+    # per-shard
+    replay: replay_lib.ReplayState
+    env_state: Any             # (lanes, ...)
+    obs: jax.Array             # (lanes, ...)
+    ep_return: jax.Array       # (lanes,) running episode return
+    rng: jax.Array
+    frames: jax.Array          # env steps on this shard
+
+
+REPLICATED_FIELDS = ("params", "target_params", "opt_state", "actor_params",
+                     "iteration", "learner_step")
+
+
+def lane_epsilons(cfg: ApexConfig, shard_id: jax.Array) -> jax.Array:
+    """This shard's slice of the global exploration ladder."""
+    if cfg.eps_mode == "ladder":
+        table = prio.epsilon_ladder(cfg.num_actors, cfg.eps_base, cfg.eps_alpha)
+    elif cfg.eps_mode == "fixed_set":
+        table = prio.fixed_epsilon_set(cfg.num_actors)
+    else:
+        raise ValueError(cfg.eps_mode)
+    gids = shard_id * cfg.lanes_per_shard + jnp.arange(cfg.lanes_per_shard)
+    return table[gids]
+
+
+def init_state(cfg: ApexConfig, env, agent, optimizer, rng: jax.Array,
+               shard_id: jax.Array | int = 0) -> ApexState:
+    rng = jax.random.fold_in(rng, jnp.asarray(shard_id))
+    p_rng, e_rng, s_rng = jax.random.split(rng, 3)
+    env_state, obs = batch_reset(env, e_rng, cfg.lanes_per_shard)
+    params = agent.init(p_rng, obs[:1])
+    item = _item_example(env, obs, cfg.compress_obs)
+    return ApexState(
+        params=params,
+        target_params=jax.tree.map(jnp.copy, params),
+        opt_state=optimizer.init(params),
+        actor_params=jax.tree.map(jnp.copy, params),
+        iteration=jnp.zeros((), jnp.int32),
+        learner_step=jnp.zeros((), jnp.int32),
+        replay=replay_lib.init(cfg.replay, item),
+        env_state=env_state,
+        obs=obs,
+        ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+        rng=s_rng,
+        frames=jnp.zeros((), jnp.int32),
+    )
+
+
+def _item_example(env, obs: jax.Array, compress: bool = False) -> dict:
+    """Replay item: the paper stores both endpoint states per transition
+    ("costs more RAM, but simplifies the code" — Appendix F)."""
+    ob = obs[0]
+    if compress:
+        ob = codec.encode(ob[None])._asdict()
+        ob = {k: v[0] for k, v in ob.items()}
+    if hasattr(env, "num_actions"):
+        action = jnp.zeros((), jnp.int32)
+    else:
+        action = jnp.zeros((env.action_dim,), jnp.float32)
+    return {
+        "obs": ob, "action": action,
+        "returns": jnp.zeros((), jnp.float32),
+        "discount_n": jnp.zeros((), jnp.float32),
+        "next_obs": ob,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Actor phase
+# ---------------------------------------------------------------------------
+
+def actor_phase(cfg: ApexConfig, env, agent, state: ApexState,
+                shard_id: jax.Array | int = 0) -> tuple[ApexState, dict]:
+    """Roll out T steps per lane, build n-step transitions from the trajectory,
+    compute initial priorities from the buffered Q-values, bulk-add to the
+    shard's replay slots (Alg. 1, vectorized)."""
+    eps = lane_epsilons(cfg, jnp.asarray(shard_id))
+    rng, rollout_rng, last_rng = jax.random.split(state.rng, 3)
+    step_rngs = jax.random.split(rollout_rng, cfg.rollout_len)
+
+    def step_fn(carry, rng_t):
+        env_state, obs, ep_ret = carry
+        a, aux = agent.act(state.actor_params, rng_t, obs, eps)
+        env_state, out = batch_step(env, env_state, a)
+        done = out.discount == 0.0
+        ep_ret_next = jnp.where(done, 0.0, ep_ret + out.reward)
+        completed = jnp.where(done, ep_ret + out.reward, jnp.nan)
+        emit = dict(obs=obs, action=a, aux=aux, reward=out.reward,
+                    discount=out.discount, completed=completed)
+        return (env_state, out.obs, ep_ret_next), emit
+
+    (env_state, last_obs, ep_ret), traj = jax.lax.scan(
+        step_fn, (state.env_state, state.obs, state.ep_return), step_rngs)
+    # time-major (T, lanes, ...) -> lane-major (lanes, T, ...)
+    traj = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), traj)
+
+    # Bootstrap aux at the final state S_T (one extra policy eval).
+    _, last_aux = agent.act(state.actor_params, last_rng, last_obs, eps)
+
+    n, T, W = cfg.n_step, cfg.rollout_len, cfg.window
+    returns, discount_n = nstep.from_trajectory(traj["reward"], traj["discount"], n)
+
+    full_obs = jnp.concatenate([traj["obs"], last_obs[:, None]], axis=1)  # (lanes, T+1, ...)
+    full_aux = jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b[:, None]], axis=1), traj["aux"], last_aux)
+
+    first_aux = jax.tree.map(lambda x: x[:, :W], full_aux)
+    last_aux_w = jax.tree.map(lambda x: x[:, n:], full_aux)
+    action_w = traj["action"][:, :W]
+    priorities = agent.initial_priorities(
+        *jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                      (first_aux, action_w, returns, discount_n, last_aux_w)))
+
+    flat = lambda x: x.reshape((-1,) + x.shape[2:])
+    enc = ((lambda o: dict(codec.encode(o)._asdict())) if cfg.compress_obs
+           else (lambda o: o))
+    items = {
+        "obs": enc(flat(full_obs[:, :W])),
+        "action": flat(action_w),
+        "returns": flat(returns),
+        "discount_n": flat(discount_n),
+        "next_obs": enc(flat(full_obs[:, n:])),
+    }
+    if cfg.replicate_k > 1:  # Fig. 6 recency-vs-diversity ablation
+        items = jax.tree.map(lambda x: jnp.tile(x, (cfg.replicate_k,) + (1,) * (x.ndim - 1)), items)
+        priorities = jnp.tile(priorities, cfg.replicate_k)
+
+    add = replay_lib.add_fifo if cfg.eviction == "fifo" else replay_lib.add_alloc
+    new_replay = add(cfg.replay, state.replay, items, priorities)
+
+    completed = traj["completed"]
+    n_done = jnp.sum(~jnp.isnan(completed))
+    mean_ep_return = jnp.where(
+        n_done > 0, jnp.nansum(completed) / jnp.maximum(n_done, 1), jnp.nan)
+    metrics = {"mean_ep_return": mean_ep_return, "episodes": n_done,
+               "mean_initial_priority": priorities.mean()}
+
+    state = state._replace(
+        replay=new_replay, env_state=env_state, obs=last_obs, ep_return=ep_ret,
+        rng=rng, frames=state.frames + cfg.lanes_per_shard * cfg.rollout_len)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Learner phase
+# ---------------------------------------------------------------------------
+
+def _global_is_weights(cfg: ApexConfig, batch: replay_lib.SampleBatch,
+                       size: jax.Array, axis_name: str | None) -> jax.Array:
+    """IS weights for the *actual* global sampling distribution.
+
+    With equal per-shard quotas, P(i) = leaf_i / (shard_total * num_shards);
+    correcting with the global N and global max keeps the estimate unbiased
+    even when shard masses drift apart. Two scalar collectives total.
+    """
+    if axis_name is None:
+        return batch.is_weights
+    n_global = jax.lax.psum(size, axis_name)
+    p = batch.leaf_mass / jnp.maximum(batch.total_mass * cfg.num_shards, 1e-30)
+    w = jnp.power(jnp.maximum(n_global.astype(jnp.float32), 1.0)
+                  * jnp.maximum(p, 1e-30), -cfg.replay.beta)
+    w_max = jax.lax.pmax(jnp.max(w), axis_name)
+    return w / jnp.maximum(w_max, 1e-30)
+
+
+def learner_phase(cfg: ApexConfig, agent, optimizer, state: ApexState,
+                  axis_name: str | None = None) -> tuple[ApexState, dict]:
+    """Sample prioritized batches, apply the off-policy update, write back
+    fresh priorities, periodically update the target net and evict (Alg. 2)."""
+    rcfg = cfg.replay
+
+    def one_step(st: ApexState, rng: jax.Array) -> tuple[ApexState, dict]:
+        ready = replay_lib.can_sample(rcfg, st.replay)
+        if axis_name is not None:
+            # learner starts only when every shard passed min-fill (paper: a
+            # single global threshold of 50000 transitions).
+            ready = jax.lax.pmin(ready.astype(jnp.int32), axis_name) > 0
+
+        def do_update(st: ApexState) -> tuple[ApexState, dict]:
+            s_rng, e_rng = jax.random.split(rng)
+            batch = replay_lib.sample(rcfg, st.replay, s_rng, cfg.batch_size)
+            items = batch.items
+            if cfg.compress_obs:  # decode fuses into the learner forward
+                items = dict(items)
+                items["obs"] = codec.decode(codec.EncodedObs(**items["obs"]))
+                items["next_obs"] = codec.decode(
+                    codec.EncodedObs(**items["next_obs"]))
+            weights = _global_is_weights(cfg, batch, st.replay.size, axis_name)
+            params, opt_state, new_prios, metrics = agent.update(
+                st.params, st.target_params, st.opt_state, optimizer,
+                items, weights, axis_name)
+            rep = replay_lib.set_priorities(rcfg, st.replay, batch.indices, new_prios)
+            step = st.learner_step + 1
+            target = optim.periodic_target_update(
+                params, st.target_params, step, cfg.target_update_period)
+            # periodic eviction (paper: every 100 learning steps)
+            if cfg.eviction == "fifo":
+                rep = jax.lax.cond(
+                    step % cfg.evict_interval == 0,
+                    lambda r: replay_lib.evict_fifo(rcfg, r), lambda r: r, rep)
+            else:
+                evict_num = cfg.evict_num or cfg.batch_size
+                rep = jax.lax.cond(
+                    (step % cfg.evict_interval == 0) & (rep.size > rcfg.soft_cap),
+                    lambda r: replay_lib.evict_prioritized(rcfg, r, e_rng, evict_num),
+                    lambda r: r, rep)
+            st = st._replace(params=params, opt_state=opt_state,
+                             target_params=target, replay=rep, learner_step=step)
+            return st, {**metrics, "updated": jnp.ones((), jnp.float32)}
+
+        def skip(st: ApexState) -> tuple[ApexState, dict]:
+            zero = {k: jnp.zeros((), jnp.float32) for k in _metric_keys(agent)}
+            return st, {**zero, "updated": jnp.zeros((), jnp.float32)}
+
+        return jax.lax.cond(ready, do_update, skip, st)
+
+    if cfg.learner_steps_per_iter == 0:   # actor-only mode (ablations)
+        zero = {k: jnp.zeros((), jnp.float32) for k in _metric_keys(agent)}
+        return state, {**zero, "updated": jnp.zeros((), jnp.float32)}
+    rng, sub = jax.random.split(state.rng)
+    step_rngs = jax.random.split(sub, cfg.learner_steps_per_iter)
+    state = state._replace(rng=rng)
+    state, metrics = jax.lax.scan(
+        lambda st, r: one_step(st, r), state, step_rngs)
+    return state, jax.tree.map(lambda m: m[-1], metrics)
+
+
+def _metric_keys(agent) -> tuple[str, ...]:
+    from repro.core.agents import DPGAgent
+    if isinstance(agent, DPGAgent):
+        return ("critic_loss", "policy_loss", "mean_q")
+    return ("loss", "mean_q", "mean_abs_td")
+
+
+# ---------------------------------------------------------------------------
+# Full iteration + distribution wrappers
+# ---------------------------------------------------------------------------
+
+def train_iteration(cfg: ApexConfig, env, agent, optimizer, state: ApexState,
+                    shard_id: jax.Array | int = 0,
+                    axis_name: str | None = None) -> tuple[ApexState, dict]:
+    # Periodic actor parameter refresh (paper: every 400 frames).
+    sync = (state.iteration % cfg.param_sync_period) == 0
+    actor_params = jax.tree.map(
+        lambda p, a: jnp.where(sync, p, a), state.params, state.actor_params)
+    state = state._replace(actor_params=actor_params)
+
+    state, actor_metrics = actor_phase(cfg, env, agent, state, shard_id)
+    state, learner_metrics = learner_phase(cfg, agent, optimizer, state, axis_name)
+    state = state._replace(iteration=state.iteration + 1)
+    return state, {**actor_metrics, **learner_metrics,
+                   "replay_size": state.replay.size.astype(jnp.float32),
+                   "frames": state.frames.astype(jnp.float32)}
+
+
+def make_train_fn(cfg: ApexConfig, env, agent, optimizer, mesh=None,
+                  data_axis: str = "data"):
+    """Build (init_fn, step_fn).
+
+    Without a mesh: single-shard jitted loop (tests/examples). With a mesh:
+    ``shard_map`` over the data axis — replicated learner state, per-shard
+    replay/envs; collectives are the gradient pmean + the IS/min-fill scalars.
+    """
+    if mesh is None:
+        init_fn = jax.jit(
+            lambda rng: init_state(cfg, env, agent, optimizer, rng, 0))
+        step_fn = jax.jit(
+            lambda st: train_iteration(cfg, env, agent, optimizer, st, 0, None))
+        return init_fn, step_fn
+
+    shard_map = jax.shard_map
+
+    def per_shard_init(rng):
+        sid = jax.lax.axis_index(data_axis)
+        st = init_state(cfg, env, agent, optimizer, rng, sid)
+        return _add_leading(st)
+
+    def per_shard_step(st):
+        sid = jax.lax.axis_index(data_axis)
+        st = _strip_leading(st)
+        st, metrics = train_iteration(cfg, env, agent, optimizer, st, sid, data_axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axis), metrics)
+        return _add_leading(st), metrics
+
+    def state_specs():
+        def spec_for(field, leaf_spec):
+            return leaf_spec
+        reps = {f: P() for f in REPLICATED_FIELDS}
+        return ApexState(**reps, **{
+            f: P(data_axis) for f in ApexState._fields if f not in reps})
+
+    specs = state_specs()
+    init_fn = jax.jit(shard_map(
+        per_shard_init, mesh=mesh, in_specs=P(),
+        out_specs=specs, check_vma=False))
+    step_fn = jax.jit(shard_map(
+        per_shard_step, mesh=mesh, in_specs=(specs,),
+        out_specs=(specs, P()), check_vma=False))
+    return init_fn, step_fn
+
+
+def _add_leading(st: ApexState) -> ApexState:
+    """Re-attach the per-shard leading axis expected by shard_map out_specs."""
+    return ApexState(**{
+        f: (getattr(st, f) if f in REPLICATED_FIELDS
+            else jax.tree.map(lambda x: x[None], getattr(st, f)))
+        for f in ApexState._fields})
+
+
+def _strip_leading(st: ApexState) -> ApexState:
+    return ApexState(**{
+        f: (getattr(st, f) if f in REPLICATED_FIELDS
+            else jax.tree.map(lambda x: x[0], getattr(st, f)))
+        for f in ApexState._fields})

@@ -1,0 +1,53 @@
+"""Observation codec — the paper's PNG-compression analogue (§4.1: "to reduce
+memory and bandwidth requirements, observation data is compressed ... when
+stored in the replay").
+
+On TPU there is no PNG, but the same 4x saving comes from storing float
+observations as uint8 with a per-observation affine (scale, offset) — exact
+for data that is already uint8 (Atari frames / ChainWorld), quantized to
+1/255 of the dynamic range otherwise. The replay stores the encoded struct;
+actors/learners decode on the fly (the paper decompresses on the learner's
+CPU in parallel with the GPU — here decode fuses into the forward pass).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EncodedObs(NamedTuple):
+    data: jax.Array      # uint8, original shape
+    scale: jax.Array     # (..., 1) f32 per-observation range / 255
+    offset: jax.Array    # (..., 1) f32 per-observation min
+
+
+def encode(obs: jax.Array, feature_dims: int = 1) -> EncodedObs:
+    """Quantize trailing ``feature_dims`` axes to uint8 per observation.
+
+    uint8 inputs pass through losslessly (scale=1, offset=0).
+    """
+    if obs.dtype == jnp.uint8:
+        lead = obs.shape[:obs.ndim - feature_dims] + (1,) * feature_dims
+        return EncodedObs(obs, jnp.ones(lead, jnp.float32),
+                          jnp.zeros(lead, jnp.float32))
+    axes = tuple(range(obs.ndim - feature_dims, obs.ndim))
+    x = obs.astype(jnp.float32)
+    lo = x.min(axis=axes, keepdims=True)
+    hi = x.max(axis=axes, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, 255).astype(jnp.uint8)
+    return EncodedObs(q, scale, lo)
+
+
+def decode(enc: EncodedObs, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`encode` (exact for uint8 passthrough)."""
+    return (enc.data.astype(jnp.float32) * enc.scale + enc.offset).astype(dtype)
+
+
+def storage_bytes(enc: EncodedObs) -> int:
+    """Bytes per stored observation (for the bandwidth accounting)."""
+    per = enc.data.size + 4 * (enc.scale.size + enc.offset.size)
+    return int(per)

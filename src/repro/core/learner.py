@@ -1,0 +1,130 @@
+"""Learning rules: Ape-X DQN (double-Q + multi-step + dueling via the network),
+Ape-X DPG (deterministic policy gradients), and the prioritized sequence-model
+objective used for the assigned LLM-scale architectures.
+
+Every loss takes max-normalized importance weights from the replay sample and
+returns the fresh |TD| (or per-sequence loss) priorities the learner writes
+back (Alg. 2 lines 5-8).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+
+
+class LossOut(NamedTuple):
+    loss: jax.Array           # scalar
+    new_priorities: jax.Array # (B,)
+    aux: dict
+
+
+# ---------------------------------------------------------------------------
+# Ape-X DQN (§3.1): double Q-learning, n-step bootstrap, dueling head in net.
+# ---------------------------------------------------------------------------
+
+def dqn_loss(
+    params: Any,
+    target_params: Any,
+    apply_fn: Callable[[Any, jax.Array], jax.Array],  # params, obs -> (B, A)
+    obs: jax.Array,
+    action: jax.Array,
+    returns: jax.Array,
+    discount_n: jax.Array,
+    next_obs: jax.Array,
+    is_weights: jax.Array,
+) -> LossOut:
+    """l(theta) = 1/2 (G_t - q(S_t, A_t, theta))^2 with
+    G_t = R_{t:t+n} + gamma^n q(S_{t+n}, argmax_a q(S_{t+n}, a, theta), theta^-).
+    """
+    q = apply_fn(params, obs)                                    # (B, A)
+    q_sa = jnp.take_along_axis(q, action[:, None], axis=-1)[:, 0]
+    q_next_online = apply_fn(params, next_obs)
+    a_star = jnp.argmax(q_next_online, axis=-1)
+    q_next_target = apply_fn(target_params, next_obs)
+    bootstrap = jnp.take_along_axis(q_next_target, a_star[:, None], axis=-1)[:, 0]
+    g = returns + discount_n * jax.lax.stop_gradient(bootstrap)
+    td = g - q_sa
+    loss = 0.5 * jnp.mean(is_weights * jnp.square(td))
+    return LossOut(loss, jnp.abs(jax.lax.stop_gradient(td)),
+                   {"mean_q": q_sa.mean(), "mean_abs_td": jnp.abs(td).mean()})
+
+
+# ---------------------------------------------------------------------------
+# Ape-X DPG (§3.2, Appendix D).
+# ---------------------------------------------------------------------------
+
+def dpg_critic_loss(
+    critic_params: Any,
+    target_critic_params: Any,
+    target_policy_params: Any,
+    critic_fn: Callable[[Any, jax.Array, jax.Array], jax.Array],  # (B,)
+    policy_fn: Callable[[Any, jax.Array], jax.Array],             # (B, adim)
+    obs: jax.Array,
+    action: jax.Array,
+    returns: jax.Array,
+    discount_n: jax.Array,
+    next_obs: jax.Array,
+    is_weights: jax.Array,
+) -> LossOut:
+    """l(psi) = 1/2 (G_t - q(S_t, A_t, psi))^2 with
+    G_t = R_{t:t+n} + gamma^n q(S_{t+n}, pi(S_{t+n}, phi^-), psi^-)."""
+    q_sa = critic_fn(critic_params, obs, action)
+    a_next = policy_fn(target_policy_params, next_obs)
+    bootstrap = critic_fn(target_critic_params, next_obs, a_next)
+    g = returns + discount_n * jax.lax.stop_gradient(bootstrap)
+    td = g - q_sa
+    loss = 0.5 * jnp.mean(is_weights * jnp.square(td))
+    return LossOut(loss, jnp.abs(jax.lax.stop_gradient(td)),
+                   {"mean_q": q_sa.mean()})
+
+
+def dpg_policy_loss(
+    policy_params: Any,
+    critic_params: Any,
+    critic_fn: Callable[[Any, jax.Array, jax.Array], jax.Array],
+    policy_fn: Callable[[Any, jax.Array], jax.Array],
+    obs: jax.Array,
+    is_weights: jax.Array,
+    action_grad_clip: float = 1.0,
+) -> jax.Array:
+    """Gradient ascent on q(S_t, pi(S_t, phi), psi); the gradient through the
+    action is clipped element-wise to [-c, c] (Appendix D)."""
+    def q_of_action(a):
+        return jnp.sum(is_weights * critic_fn(critic_params, obs, a))
+
+    a = policy_fn(policy_params, obs)
+    dq_da = jax.grad(q_of_action)(a)
+    dq_da = jnp.clip(dq_da, -action_grad_clip, action_grad_clip)
+    # ascent on q == descent on -<clip(dq/da), a>
+    return -jnp.sum(jax.lax.stop_gradient(dq_da) * a) / jnp.maximum(obs.shape[0], 1)
+
+
+# ---------------------------------------------------------------------------
+# Prioritized sequence replay objective (paper §6: "prioritize sequences of
+# past experiences") — the LLM-scale integration for the assigned archs.
+# ---------------------------------------------------------------------------
+
+def sequence_loss(
+    params: Any,
+    apply_fn: Callable[..., jax.Array],   # params, tokens -> (B, S, V) logits
+    tokens: jax.Array,                    # (B, S) int32
+    labels: jax.Array,                    # (B, S) int32, -1 = masked
+    is_weights: jax.Array,                # (B,)
+    **apply_kwargs,
+) -> LossOut:
+    """IS-weighted next-token cross entropy; per-sequence mean loss is the
+    fresh priority (the sequence-level analogue of |TD|)."""
+    logits = apply_fn(params, tokens, **apply_kwargs)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    per_seq = (nll * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)   # (B,)
+    loss = jnp.mean(is_weights * per_seq)
+    return LossOut(loss, jax.lax.stop_gradient(per_seq),
+                   {"ppl_proxy": per_seq.mean()})

@@ -1,0 +1,114 @@
+"""n-step transition construction (Ape-X Appendix F, "Adding Data").
+
+Two equivalent implementations:
+
+* :class:`Ring` — the paper's streaming circular buffer of the last ``n+1``
+  step records per actor lane; each env step emits (at most) one valid
+  transition. This is the faithful per-step construction.
+* :func:`from_trajectory` — bulk construction over a finished rollout chunk,
+  the TPU-friendly layout used by the SPMD actor phase (one fused pass over
+  ``(lanes, T)`` rewards/discounts). ``repro.kernels.nstep_return`` provides
+  the Pallas version; this is its oracle.
+
+Both truncate multi-step returns at episode boundaries via the discount
+product (a terminal step carries ``discount == 0``, zeroing every later
+reward in the window and the bootstrap term).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Ring(NamedTuple):
+    """Circular buffer of the last ``n+1`` per-lane step records.
+
+    ``record`` is a pytree of arrays shaped ``(lanes, n+1, ...)`` — typically
+    {obs, action, qvals} so initial priorities reuse the actor's buffered
+    Q-values instead of recomputing them (Appendix F).
+    """
+
+    record: Any            # pytree, arrays (lanes, n+1, ...)
+    reward: jax.Array      # (lanes, n+1)  R_{t+1} stored with step t
+    discount: jax.Array    # (lanes, n+1)  gamma_{t+1}, 0 at terminal
+    ptr: jax.Array         # scalar int32, next write slot
+    count: jax.Array       # scalar int32, total pushes
+
+
+class Transition(NamedTuple):
+    """One n-step transition: (S_t, A_t, R_{t:t+n}, gamma^n, S_{t+n})."""
+
+    first: Any             # record at time t        (pytree, (lanes, ...))
+    last: Any              # record at time t+n      (pytree, (lanes, ...))
+    returns: jax.Array     # (lanes,) n-step discounted return
+    discount_n: jax.Array  # (lanes,) product of n discounts
+    valid: jax.Array       # (lanes,) bool — ring warm (broadcast scalar)
+
+
+def ring_init(record_example: Any, n: int, lanes: int) -> Ring:
+    """Empty ring for n-step construction; ``record_example`` gives per-lane shapes."""
+    rec = jax.tree.map(
+        lambda a: jnp.zeros((lanes, n + 1) + jnp.shape(a)[1:], jnp.asarray(a).dtype),
+        record_example,
+    )
+    return Ring(
+        record=rec,
+        reward=jnp.zeros((lanes, n + 1), jnp.float32),
+        discount=jnp.zeros((lanes, n + 1), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def ring_push(ring: Ring, record: Any, reward: jax.Array, discount: jax.Array, n: int) -> tuple[Ring, Transition]:
+    """Push step ``t``'s record; emit the transition for step ``t-n`` if warm.
+
+    After the push the ring holds steps ``t-n .. t``; the oldest slot (the next
+    write position) is step ``t-n`` and the slot just written is step ``t``.
+    """
+    cap = n + 1
+    slot = ring.ptr % cap
+    new_rec = jax.tree.map(lambda buf, x: buf.at[:, slot].set(x), ring.record, record)
+    new_reward = ring.reward.at[:, slot].set(reward)
+    new_discount = ring.discount.at[:, slot].set(discount)
+    new_ring = Ring(new_rec, new_reward, new_discount, (ring.ptr + 1) % cap, ring.count + 1)
+
+    oldest = new_ring.ptr % cap  # slot of step t-n
+    returns = jnp.zeros(reward.shape, jnp.float32)
+    disc = jnp.ones(reward.shape, jnp.float32)
+    for k in range(n):
+        s = (oldest + k) % cap
+        returns = returns + disc * new_reward[:, s]
+        disc = disc * new_discount[:, s]
+    first = jax.tree.map(lambda buf: buf[:, oldest], new_rec)
+    last = jax.tree.map(lambda buf: buf[:, slot], new_rec)
+    warm = new_ring.count >= cap
+    valid = jnp.broadcast_to(warm, reward.shape)
+    return new_ring, Transition(first, last, returns, disc, valid)
+
+
+def from_trajectory(reward: jax.Array, discount: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Bulk n-step returns over a rollout.
+
+    Args:
+      reward:   (lanes, T) with reward[t] = R_{t+1}.
+      discount: (lanes, T) with discount[t] = gamma_{t+1} (0 at terminal).
+      n:        bootstrap horizon.
+
+    Returns:
+      returns:    (lanes, T-n+1) with returns[t]  = sum_{k<n} R_{t+k+1} prod_{j<k} gamma
+      discount_n: (lanes, T-n+1) with discount_n[t] = prod_{k<n} gamma_{t+k+1}
+    """
+    lanes, T = reward.shape
+    if T < n:
+        raise ValueError(f"trajectory length {T} < n-step horizon {n}")
+    W = T - n + 1
+    returns = jnp.zeros((lanes, W), jnp.float32)
+    disc = jnp.ones((lanes, W), jnp.float32)
+    for k in range(n):
+        returns = returns + disc * reward[:, k:k + W]
+        disc = disc * discount[:, k:k + W]
+    return returns, disc

@@ -1,0 +1,72 @@
+"""Priority, importance-sampling and exploration-ladder math (Ape-X §3/§4.1).
+
+- priorities are |TD error| (proportional variant, Schaul et al. 2016);
+- the replay stores ``(|delta| + eps)^alpha`` in sum-tree leaves (alpha=0.6);
+- sampled batches are corrected with importance weights
+  ``w_i = (N * P(i))^-beta / max_j w_j`` (beta=0.4);
+- actor ``i`` of ``N`` explores with ``eps_i = eps^(1 + i/(N-1) * ladder_alpha)``
+  (eps=0.4, ladder_alpha=7), constant through training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Paper defaults (§4.1, Appendix C/D).
+PRIORITY_EXPONENT = 0.6       # alpha_sample
+IS_EXPONENT = 0.4             # beta
+EVICT_EXPONENT = -0.4         # alpha_evict (Ape-X DPG, Appendix D)
+EPSILON_BASE = 0.4            # eps
+EPSILON_ALPHA = 7.0           # ladder alpha
+MIN_PRIORITY = 1e-4           # numerical floor so no transition starves
+
+
+def to_leaf(priority: jax.Array, alpha: float = PRIORITY_EXPONENT) -> jax.Array:
+    """Map raw priority |delta| to the sum-tree leaf value p^alpha."""
+    return jnp.power(jnp.maximum(jnp.abs(priority), MIN_PRIORITY), alpha)
+
+
+def importance_weights(
+    leaf_values: jax.Array,
+    total_mass: jax.Array,
+    num_items: jax.Array,
+    beta: float = IS_EXPONENT,
+) -> jax.Array:
+    """Max-normalized IS weights for a sampled batch.
+
+    ``leaf_values`` are the p^alpha masses of the sampled leaves; P(i) =
+    leaf/total. Normalizing by the batch max keeps weights <= 1 (paper follows
+    Schaul et al. 2016).
+    """
+    p = leaf_values / jnp.maximum(total_mass, 1e-30)
+    w = jnp.power(jnp.maximum(num_items.astype(jnp.float32), 1.0) * jnp.maximum(p, 1e-30), -beta)
+    return w / jnp.maximum(jnp.max(w), 1e-30)
+
+
+def epsilon_ladder(
+    num_actors: int,
+    base: float = EPSILON_BASE,
+    alpha: float = EPSILON_ALPHA,
+) -> jax.Array:
+    """eps_i = base^(1 + i/(N-1)*alpha) for i in [0, N)."""
+    if num_actors == 1:
+        return jnp.array([base], dtype=jnp.float32)
+    i = jnp.arange(num_actors, dtype=jnp.float32)
+    return jnp.power(base, 1.0 + i / (num_actors - 1) * alpha)
+
+
+def fixed_epsilon_set(num_actors: int, values=(0.5, 0.4, 0.3, 0.2, 0.1, 0.01)) -> jax.Array:
+    """Appendix B ablation: a small fixed set of eps values tiled across actors."""
+    vals = jnp.asarray(values, dtype=jnp.float32)
+    return vals[jnp.arange(num_actors) % len(values)]
+
+
+def td_error_nstep(
+    q_sa: jax.Array,
+    returns: jax.Array,
+    discount_n: jax.Array,
+    bootstrap: jax.Array,
+) -> jax.Array:
+    """n-step TD error  delta = R_{t:t+n} + gamma^n * bootstrap - Q(S_t, A_t)."""
+    return returns + discount_n * bootstrap - q_sa

@@ -1,0 +1,223 @@
+"""Sharded prioritized replay memory (the Ape-X replay server, TPU-native).
+
+Logically one centralized memory (paper §3); physically each ``data``-axis
+shard owns ``capacity/num_shards`` slots plus its own sum-tree, and the only
+cross-shard traffic is one scalar (the shard's total priority mass) per
+sampling round — the paper's batched-communication principle taken to its
+limit. Everything here is per-shard and purely functional; ``repro.core.apex``
+maps it over the mesh with ``shard_map``.
+
+Eviction strategies (both from the paper):
+  * ``evict_fifo`` — Atari (§4.1): adds are always permitted (soft limit);
+    periodically the excess above the soft capacity is removed en masse in
+    FIFO order.
+  * ``evict_prioritized`` — DPG (Appendix D): victims are sampled with
+    probability proportional to ``p^alpha_evict`` (alpha_evict = -0.4), i.e.
+    low-priority items are evicted first, keeping rare high-priority
+    experience alive longer (the paper's Fig. 5 hypothesis).
+
+Slots are the paper's "keys": a transition's global key is (shard, slot).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+from repro.core import sumtree
+
+
+class ReplayState(NamedTuple):
+    storage: Any           # pytree of (C_phys, ...) arrays
+    tree: jax.Array        # (2*C_phys,) sum-tree over p^alpha leaves
+    write_pos: jax.Array   # scalar int32 (FIFO circular pointer)
+    size: jax.Array        # scalar int32, live items
+    total_added: jax.Array # scalar int32, lifetime adds (for diagnostics)
+
+
+class SampleBatch(NamedTuple):
+    indices: jax.Array     # (B,) slot ids within this shard
+    items: Any             # pytree of (B, ...) arrays
+    is_weights: jax.Array  # (B,) max-normalized importance weights
+    leaf_mass: jax.Array   # (B,) p^alpha of each sampled slot
+    total_mass: jax.Array  # scalar, shard total priority mass
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """Static replay configuration (hashable; safe to close over in jit)."""
+
+    capacity: int                      # physical slots per shard (power of 2)
+    soft_capacity: int | None = None   # logical limit (FIFO mode); default 7/8 phys
+    alpha: float = prio.PRIORITY_EXPONENT
+    beta: float = prio.IS_EXPONENT
+    evict_alpha: float = prio.EVICT_EXPONENT
+    min_fill: int = 128                # learner waits for this many items (paper: 50000 global)
+
+    def __post_init__(self):
+        if self.capacity & (self.capacity - 1):
+            raise ValueError("replay capacity must be a power of two")
+
+    @property
+    def soft_cap(self) -> int:
+        return self.soft_capacity if self.soft_capacity is not None else (self.capacity // 8) * 7
+
+
+def init(cfg: ReplayConfig, item_example: Any) -> ReplayState:
+    """Empty replay; ``item_example`` is a pytree giving per-item shapes/dtypes."""
+    storage = jax.tree.map(
+        lambda a: jnp.zeros((cfg.capacity,) + jnp.shape(a), jnp.asarray(a).dtype),
+        item_example,
+    )
+    return ReplayState(
+        storage=storage,
+        tree=sumtree.init(cfg.capacity),
+        write_pos=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+        total_added=jnp.zeros((), jnp.int32),
+    )
+
+
+def _store(storage: Any, idx: jax.Array, items: Any) -> Any:
+    return jax.tree.map(lambda buf, x: buf.at[idx].set(x.astype(buf.dtype)), storage, items)
+
+
+def add_fifo(
+    cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
+    valid: jax.Array | None = None,
+) -> ReplayState:
+    """Batched circular add with actor-computed initial priorities (Alg. 1 l.10-11).
+
+    Adding is always permitted (soft limit): if the physical buffer is full the
+    oldest slots are overwritten, which coincides with FIFO eviction. ``valid``
+    masks out warm-up/invalid lanes (their slots are not consumed).
+    """
+    (batch,) = priorities.shape
+    if valid is None:
+        valid = jnp.ones((batch,), bool)
+    # Pack valid lanes first so invalid ones don't consume slots: stable argsort
+    # of ~valid puts valid lane ids in front, preserving order.
+    order = jnp.argsort(~valid, stable=True)
+    items = jax.tree.map(lambda x: x[order], items)
+    priorities = priorities[order]
+    n_valid = valid.sum().astype(jnp.int32)
+
+    offs = jnp.arange(batch, dtype=jnp.int32)
+    idx = (state.write_pos + offs) % cfg.capacity
+    # Invalid tail lanes write to a parking slot = current write_pos of the tail
+    # position; simpler: clamp them onto the same indices but with zero priority
+    # and re-written storage — they will be immediately overwritten by the next
+    # add since write_pos only advances by n_valid.
+    leaf = jnp.where(offs < n_valid, prio.to_leaf(priorities, cfg.alpha), 0.0)
+    old_leaves = sumtree.leaves(state.tree)[idx]
+    keep_old = offs >= n_valid
+    leaf = jnp.where(keep_old, old_leaves, leaf)
+    storage = jax.tree.map(
+        lambda buf, x: buf.at[idx].set(
+            jnp.where(
+                jnp.expand_dims(keep_old, tuple(range(1, x.ndim))),
+                buf[idx], x.astype(buf.dtype),
+            )
+        ),
+        state.storage, items,
+    )
+    tree = sumtree.write(state.tree, idx, leaf)
+    return ReplayState(
+        storage=storage,
+        tree=tree,
+        write_pos=(state.write_pos + n_valid) % cfg.capacity,
+        size=jnp.minimum(state.size + n_valid, cfg.capacity),
+        total_added=state.total_added + n_valid,
+    )
+
+
+def add_alloc(
+    cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
+    valid: jax.Array | None = None,
+) -> ReplayState:
+    """Add into *free* slots (leaf mass == 0) — DPG mode, paired with
+    prioritized eviction which frees slots instead of a moving FIFO head."""
+    (batch,) = priorities.shape
+    if valid is None:
+        valid = jnp.ones((batch,), bool)
+    live = sumtree.leaves(state.tree) > 0
+    free_first = jnp.argsort(live, stable=True)  # free slots first, by index
+    idx = free_first[:batch]
+    was_live = live[idx]
+    leaf = jnp.where(valid, prio.to_leaf(priorities, cfg.alpha), sumtree.leaves(state.tree)[idx])
+    storage = jax.tree.map(
+        lambda buf, x: buf.at[idx].set(
+            jnp.where(jnp.expand_dims(valid, tuple(range(1, x.ndim))), x.astype(buf.dtype), buf[idx])
+        ),
+        state.storage, items,
+    )
+    tree = sumtree.write(state.tree, idx, leaf)
+    n_new = (valid & ~was_live).sum().astype(jnp.int32)
+    return ReplayState(
+        storage=storage,
+        tree=tree,
+        write_pos=state.write_pos,
+        size=jnp.minimum(state.size + n_new, cfg.capacity),
+        total_added=state.total_added + valid.sum().astype(jnp.int32),
+    )
+
+
+def sample(cfg: ReplayConfig, state: ReplayState, rng: jax.Array, batch: int) -> SampleBatch:
+    """Stratified proportional sampling + IS weights (Alg. 2 l.4; Appendix F)."""
+    idx = sumtree.sample_stratified(state.tree, rng, batch)
+    leaf = sumtree.leaves(state.tree)[idx]
+    items = jax.tree.map(lambda buf: buf[idx], state.storage)
+    w = prio.importance_weights(leaf, sumtree.total(state.tree), state.size, cfg.beta)
+    return SampleBatch(idx, items, w, leaf, sumtree.total(state.tree))
+
+
+def set_priorities(
+    cfg: ReplayConfig, state: ReplayState, idx: jax.Array, priorities: jax.Array
+) -> ReplayState:
+    """Learner writes back fresh |TD| priorities (Alg. 2 l.8)."""
+    tree = sumtree.write(state.tree, idx, prio.to_leaf(priorities, cfg.alpha))
+    return state._replace(tree=tree)
+
+
+def evict_fifo(cfg: ReplayConfig, state: ReplayState) -> ReplayState:
+    """Remove the excess above the soft capacity en masse, oldest first (§4.1)."""
+    excess = jnp.maximum(state.size - cfg.soft_cap, 0)
+    oldest = (state.write_pos - state.size) % cfg.capacity
+    offs = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    idx = (oldest + offs) % cfg.capacity
+    kill = offs < excess
+    old = sumtree.leaves(state.tree)[idx]
+    tree = sumtree.write(state.tree, idx, jnp.where(kill, 0.0, old))
+    return state._replace(tree=tree, size=state.size - excess)
+
+
+def evict_prioritized(
+    cfg: ReplayConfig, state: ReplayState, rng: jax.Array, num: int
+) -> ReplayState:
+    """Sample ``num`` victims with probability ∝ p^alpha_evict and free them.
+
+    Leaves hold p^alpha_sample, so the eviction mass is leaf^(alpha_evict /
+    alpha_sample) on live slots. Sampling is with replacement (duplicates evict
+    once), mirroring the paper's periodic batched eviction.
+    """
+    leaves = sumtree.leaves(state.tree)
+    live = leaves > 0
+    ratio = cfg.evict_alpha / cfg.alpha
+    evict_mass = jnp.where(live, jnp.power(jnp.maximum(leaves, 1e-30), ratio), 0.0)
+    etree = sumtree.rebuild(evict_mass)
+    victims = sumtree.sample_stratified(etree, rng, num)
+    old = leaves[victims]
+    tree = sumtree.write(state.tree, victims, jnp.zeros((num,), leaves.dtype))
+    # count distinct live victims actually freed
+    mark = jnp.zeros((cfg.capacity,), jnp.int32).at[victims].set(1)
+    freed = (mark * live.astype(jnp.int32)).sum()
+    return state._replace(tree=tree, size=jnp.maximum(state.size - freed, 0))
+
+
+def can_sample(cfg: ReplayConfig, state: ReplayState) -> jax.Array:
+    """Learner gate: wait for min_fill items (paper: 50000 transitions)."""
+    return (state.size >= cfg.min_fill) & (sumtree.total(state.tree) > 0)

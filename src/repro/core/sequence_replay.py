@@ -1,0 +1,136 @@
+"""Prioritized *sequence* replay — the paper's technique as a first-class
+data-selection layer for large sequence models (paper §6: "the Ape-X framework
+may be adapted to prioritize sequences of past experiences").
+
+Roles map 1:1 onto Algorithm 1/2:
+
+* **Ingest ("acting", Alg. 1)** — each ``data``-axis shard scores incoming
+  sequences with a *stale* parameter copy (``actor_params``, refreshed every
+  ``param_sync_period`` rounds) to produce initial priorities = per-sequence
+  loss. This is the actor-side online priority computation, the paper's key
+  scalability fix: new data enters the memory with informative priorities
+  instead of max-priority.
+* **Learn (Alg. 2)** — sample a prioritized batch, apply the IS-weighted
+  next-token loss, write back fresh per-sequence priorities, periodically
+  evict FIFO excess.
+
+The replay machinery is exactly ``repro.core.replay`` — the sum-tree neither
+knows nor cares that items are 4k-token sequences instead of Atari
+transitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import learner as learner_lib
+from repro.core import replay as replay_lib
+from repro.optim import optimizers as optim
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqReplayConfig:
+    replay: replay_lib.ReplayConfig
+    seq_len: int
+    batch_size: int            # learner batch (sequences) per shard
+    ingest_batch: int          # sequences scored + added per round per shard
+    param_sync_period: int = 8
+    learner_steps_per_round: int = 1
+    evict_interval: int = 100
+
+
+class SeqReplayState(NamedTuple):
+    params: Any
+    opt_state: Any
+    actor_params: Any          # stale scoring copy
+    replay: replay_lib.ReplayState
+    rng: jax.Array
+    round: jax.Array
+    learner_step: jax.Array
+
+
+def init_state(cfg: SeqReplayConfig, params: Any, optimizer: optim.Optimizer,
+               rng: jax.Array) -> SeqReplayState:
+    item = {
+        "tokens": jnp.zeros((cfg.seq_len,), jnp.int32),
+        "labels": jnp.zeros((cfg.seq_len,), jnp.int32),
+    }
+    return SeqReplayState(
+        params=params,
+        opt_state=optimizer.init(params),
+        actor_params=jax.tree.map(jnp.copy, params),
+        replay=replay_lib.init(cfg.replay, item),
+        rng=rng,
+        round=jnp.zeros((), jnp.int32),
+        learner_step=jnp.zeros((), jnp.int32),
+    )
+
+
+def score_sequences(apply_fn: Callable[..., jax.Array], params: Any,
+                    tokens: jax.Array, labels: jax.Array, **kw) -> jax.Array:
+    """Actor-side initial priorities: per-sequence mean NLL under the stale
+    copy (the sequence analogue of the buffered-Q |TD| in Appendix F)."""
+    out = learner_lib.sequence_loss(
+        params, apply_fn, tokens, labels,
+        jnp.ones((tokens.shape[0],), jnp.float32), **kw)
+    return out.new_priorities
+
+
+def ingest(cfg: SeqReplayConfig, apply_fn, state: SeqReplayState,
+           tokens: jax.Array, labels: jax.Array) -> SeqReplayState:
+    """Score a fresh batch with the stale copy and bulk-add (Alg. 1 l.9-11)."""
+    prios = score_sequences(apply_fn, state.actor_params, tokens, labels)
+    rep = replay_lib.add_fifo(cfg.replay, state.replay,
+                              {"tokens": tokens, "labels": labels}, prios)
+    return state._replace(replay=rep)
+
+
+def learner_step(cfg: SeqReplayConfig, apply_fn, optimizer: optim.Optimizer,
+                 state: SeqReplayState,
+                 axis_name: str | None = None) -> tuple[SeqReplayState, dict]:
+    """One prioritized update (Alg. 2): sample -> IS-weighted loss -> fresh
+    priorities -> periodic FIFO eviction."""
+    rng, s_rng = jax.random.split(state.rng)
+    batch = replay_lib.sample(cfg.replay, state.replay, s_rng, cfg.batch_size)
+
+    def loss_fn(p):
+        out = learner_lib.sequence_loss(
+            p, apply_fn, batch.items["tokens"], batch.items["labels"],
+            batch.is_weights)
+        return out.loss, out
+
+    (loss, out), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+    if axis_name is not None:
+        grads = jax.lax.pmean(grads, axis_name)
+    grads = optim.clip_by_global_norm(grads, 1.0)
+    updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+    params = optim.apply_updates(state.params, updates)
+    rep = replay_lib.set_priorities(cfg.replay, state.replay, batch.indices,
+                                    out.new_priorities)
+    step = state.learner_step + 1
+    rep = jax.lax.cond(step % cfg.evict_interval == 0,
+                       lambda r: replay_lib.evict_fifo(cfg.replay, r),
+                       lambda r: r, rep)
+    state = state._replace(params=params, opt_state=opt_state, replay=rep,
+                           rng=rng, learner_step=step)
+    return state, {"loss": loss, "mean_priority": out.new_priorities.mean(),
+                   "max_is_weight": batch.is_weights.max()}
+
+
+def round_step(cfg: SeqReplayConfig, apply_fn, optimizer: optim.Optimizer,
+               state: SeqReplayState, tokens: jax.Array, labels: jax.Array,
+               axis_name: str | None = None) -> tuple[SeqReplayState, dict]:
+    """One full round: param sync -> ingest (acting) -> learner steps."""
+    sync = (state.round % cfg.param_sync_period) == 0
+    actor_params = jax.tree.map(
+        lambda p, a: jnp.where(sync, p, a), state.params, state.actor_params)
+    state = state._replace(actor_params=actor_params)
+    state = ingest(cfg, apply_fn, state, tokens, labels)
+    metrics = {}
+    for _ in range(cfg.learner_steps_per_round):
+        state, metrics = learner_step(cfg, apply_fn, optimizer, state, axis_name)
+    return state._replace(round=state.round + 1), metrics

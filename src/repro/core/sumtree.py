@@ -1,0 +1,126 @@
+"""Functional sum-tree for proportional prioritized sampling (Schaul et al. 2016).
+
+The tree backs the Ape-X replay memory: leaves hold priorities ``p_k^alpha``
+and internal nodes hold subtree sums, so sampling a key with probability
+``p_k^alpha / sum_j p_j^alpha`` is a root-to-leaf descent.
+
+Layout: for ``capacity`` C (power of two) the tree is a flat ``(2*C,)`` array.
+Node 1 is the root, node ``i`` has children ``2i`` and ``2i+1``; leaf ``k``
+lives at index ``C + k``. Index 0 is unused.
+
+All operations are pure and batched; writes rebuild the internal levels with
+log2(C) reshape-sums, which is exact under duplicate indices and vectorizes
+cleanly on TPU (the sampling descent — the hot op on the replay server — has a
+Pallas kernel in ``repro.kernels.sumtree_sample``; the implementation here is
+its oracle and the XLA fallback).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init",
+    "capacity",
+    "depth",
+    "total",
+    "leaves",
+    "write",
+    "rebuild",
+    "sample",
+    "stratified_uniforms",
+    "sample_stratified",
+]
+
+
+def _check_capacity(cap: int) -> None:
+    if cap < 2 or (cap & (cap - 1)) != 0:
+        raise ValueError(f"sum-tree capacity must be a power of two >= 2, got {cap}")
+
+
+def init(cap: int, dtype=jnp.float32) -> jax.Array:
+    """Return an empty tree of leaf capacity ``cap``."""
+    _check_capacity(cap)
+    return jnp.zeros((2 * cap,), dtype=dtype)
+
+
+def capacity(tree: jax.Array) -> int:
+    return tree.shape[0] // 2
+
+
+def depth(tree: jax.Array) -> int:
+    """Number of edges from root to leaf == log2(capacity)."""
+    return (capacity(tree)).bit_length() - 1
+
+
+def total(tree: jax.Array) -> jax.Array:
+    """Total priority mass (root value)."""
+    return tree[1]
+
+
+def leaves(tree: jax.Array) -> jax.Array:
+    return tree[capacity(tree):]
+
+
+def rebuild(leaf_values: jax.Array) -> jax.Array:
+    """Build a full tree from a ``(C,)`` leaf vector (C power of two)."""
+    (cap,) = leaf_values.shape
+    _check_capacity(cap)
+    levels = [leaf_values]
+    while levels[-1].shape[0] > 1:
+        lv = levels[-1]
+        levels.append(lv.reshape(-1, 2).sum(axis=1))
+    # levels: [C, C/2, ..., 1]; tree[1:] = concat(reversed levels)
+    flat = jnp.concatenate([lv for lv in reversed(levels)])
+    return jnp.concatenate([jnp.zeros((1,), leaf_values.dtype), flat])
+
+
+def write(tree: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
+    """Set ``leaves[idx] = values`` and restore the sum invariant.
+
+    Duplicate indices are resolved scatter-style (one writer wins) before the
+    exact level-rebuild, so internal sums are always consistent with leaves.
+    """
+    cap = capacity(tree)
+    new_leaves = leaves(tree).at[idx].set(values.astype(tree.dtype), mode="drop")
+    return rebuild(new_leaves)
+
+
+def sample(tree: jax.Array, u: jax.Array) -> jax.Array:
+    """Batched stochastic descent: map mass offsets ``u in [0, total)`` to leaf ids.
+
+    For each offset the walk goes left when ``u < mass(left child)``, else
+    subtracts the left mass and goes right — i.e. inverse-CDF sampling on the
+    implicit prefix-sum of the leaves.
+    """
+    cap = capacity(tree)
+    d = depth(tree)
+    node = jnp.ones_like(u, dtype=jnp.int32)
+    u = u.astype(tree.dtype)
+
+    def body(_, carry):
+        node, u = carry
+        left = node * 2
+        left_mass = tree[left]
+        go_left = u < left_mass
+        node = jnp.where(go_left, left, left + 1)
+        u = jnp.where(go_left, u, u - left_mass)
+        return node, u
+
+    node, _ = jax.lax.fori_loop(0, d, body, (node, u))
+    return jnp.clip(node - cap, 0, cap - 1)
+
+
+def stratified_uniforms(rng: jax.Array, batch: int, total_mass: jax.Array) -> jax.Array:
+    """Paper-faithful stratified offsets: one uniform per equal-mass stratum."""
+    jitter = jax.random.uniform(rng, (batch,))
+    u = (jnp.arange(batch, dtype=jnp.float32) + jitter) * (total_mass / batch)
+    # guard the last stratum against fp overshoot of the root mass
+    return jnp.minimum(u, total_mass * (1.0 - 1e-6))
+
+
+def sample_stratified(tree: jax.Array, rng: jax.Array, batch: int) -> jax.Array:
+    """Sample ``batch`` leaf ids with stratified proportional prioritization."""
+    u = stratified_uniforms(rng, batch, total(tree))
+    return sample(tree, u)

@@ -1,0 +1,163 @@
+"""Pure-JAX vectorized environments (device-resident actor loop).
+
+The paper's actors step ALE / MuJoCo on CPU hosts; on a TPU pod the whole
+actor phase is jitted, so the environments here are pure ``jax.lax`` state
+machines with the standard (obs, reward, discount) step contract and
+auto-reset semantics. Real simulators can be swapped in via host callbacks
+without touching the Ape-X core.
+
+* :class:`ChainWorld` — discrete, sparse-reward exploration chain (the Atari
+  stand-in). Reaching the far end pays +1; a distractor action pays a tiny
+  immediate reward, so greedy policies plateau — the setting where the paper's
+  eps-ladder + prioritization shine (§5).
+* :class:`PointMass` — continuous control stand-in (DeepMind control suite
+  style): 2-D point driven by acceleration toward a random target, reward
+  = -distance (Appendix D's feature-observation regime).
+
+Both expose uint8 or f32 observations; ChainWorld's uint8 obs exercise the
+replay's quantization codec (the paper's PNG-compression analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StepOut(NamedTuple):
+    obs: jax.Array
+    reward: jax.Array     # scalar f32
+    discount: jax.Array   # scalar f32: gamma at this step, 0 = terminal
+
+
+# ---------------------------------------------------------------------------
+# ChainWorld (discrete)
+# ---------------------------------------------------------------------------
+
+class ChainState(NamedTuple):
+    pos: jax.Array        # int32 in [0, length)
+    t: jax.Array          # int32 step counter
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainWorld:
+    length: int = 16
+    max_steps: int = 64
+    gamma: float = 0.99
+    slip_prob: float = 0.05        # action slips to a random one
+    distractor_reward: float = 0.01
+
+    num_actions: int = 4           # 0: left, 1: right, 2: noop, 3: distractor
+
+    @property
+    def obs_shape(self) -> tuple[int, ...]:
+        return (self.length + 2,)
+
+    obs_dtype = jnp.uint8
+
+    def _obs(self, state: ChainState) -> jax.Array:
+        onehot = (jnp.arange(self.length) == state.pos).astype(jnp.uint8) * 255
+        extra = jnp.stack([
+            (state.t * (255 // self.max_steps)).astype(jnp.uint8),
+            jnp.asarray(255, jnp.uint8),
+        ])
+        return jnp.concatenate([onehot, extra])
+
+    def reset(self, rng: jax.Array) -> tuple[ChainState, jax.Array]:
+        state = ChainState(pos=jnp.zeros((), jnp.int32),
+                           t=jnp.zeros((), jnp.int32), rng=rng)
+        return state, self._obs(state)
+
+    def step(self, state: ChainState, action: jax.Array) -> tuple[ChainState, StepOut]:
+        rng, slip_rng, a_rng, reset_rng = jax.random.split(state.rng, 4)
+        slipped = jax.random.uniform(slip_rng) < self.slip_prob
+        action = jnp.where(slipped,
+                           jax.random.randint(a_rng, (), 0, self.num_actions),
+                           action)
+        delta = jnp.where(action == 0, -1, jnp.where(action == 1, 1, 0))
+        pos = jnp.clip(state.pos + delta, 0, self.length - 1)
+        t = state.t + 1
+        reached = pos == self.length - 1
+        timeout = t >= self.max_steps
+        terminal = reached | timeout
+        reward = (reached.astype(jnp.float32)
+                  + (action == 3).astype(jnp.float32) * self.distractor_reward)
+        discount = jnp.where(terminal, 0.0, self.gamma)
+        # auto-reset
+        next_state = ChainState(pos=jnp.where(terminal, 0, pos),
+                                t=jnp.where(terminal, 0, t), rng=rng)
+        return next_state, StepOut(self._obs(next_state), reward, discount)
+
+
+# ---------------------------------------------------------------------------
+# PointMass (continuous)
+# ---------------------------------------------------------------------------
+
+class PointMassState(NamedTuple):
+    pos: jax.Array        # (2,) f32
+    vel: jax.Array        # (2,) f32
+    target: jax.Array     # (2,) f32
+    t: jax.Array
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PointMass:
+    max_steps: int = 200
+    gamma: float = 0.99
+    dt: float = 0.05
+    drag: float = 0.1
+
+    action_dim: int = 2
+
+    @property
+    def obs_shape(self) -> tuple[int, ...]:
+        return (6,)
+
+    obs_dtype = jnp.float32
+
+    def _obs(self, s: PointMassState) -> jax.Array:
+        return jnp.concatenate([s.pos, s.vel, s.target]).astype(jnp.float32)
+
+    def reset(self, rng: jax.Array) -> tuple[PointMassState, jax.Array]:
+        rng, p_rng, t_rng = jax.random.split(rng, 3)
+        state = PointMassState(
+            pos=jax.random.uniform(p_rng, (2,), minval=-1.0, maxval=1.0),
+            vel=jnp.zeros((2,), jnp.float32),
+            target=jax.random.uniform(t_rng, (2,), minval=-1.0, maxval=1.0),
+            t=jnp.zeros((), jnp.int32),
+            rng=rng,
+        )
+        return state, self._obs(state)
+
+    def step(self, s: PointMassState, action: jax.Array) -> tuple[PointMassState, StepOut]:
+        rng, reset_rng = jax.random.split(s.rng)
+        a = jnp.clip(action, -1.0, 1.0)
+        vel = (1.0 - self.drag) * s.vel + self.dt * a
+        pos = jnp.clip(s.pos + self.dt * vel, -1.5, 1.5)
+        t = s.t + 1
+        dist = jnp.linalg.norm(pos - s.target)
+        reward = -dist.astype(jnp.float32)
+        timeout = t >= self.max_steps
+        discount = jnp.where(timeout, 0.0, self.gamma)
+        # auto-reset on timeout
+        fresh, _ = self.reset(reset_rng)
+        nxt = jax.tree.map(
+            lambda f, c: jnp.where(timeout, f, c),
+            fresh, PointMassState(pos, vel, s.target, t, rng),
+        )
+        return nxt, StepOut(self._obs(nxt), reward, discount)
+
+
+def batch_reset(env, rng: jax.Array, lanes: int):
+    """Vectorized reset over actor lanes."""
+    return jax.vmap(env.reset)(jax.random.split(rng, lanes))
+
+
+def batch_step(env, states, actions):
+    """Vectorized step over actor lanes."""
+    return jax.vmap(env.step)(states, actions)

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+TPU-native tiling: grid = (batch, q_heads, q_blocks, kv_blocks) with the KV
+block as the innermost (sequential on TPU) dimension; the online-softmax
+running state (m, l, acc) lives in f32 VMEM scratch across KV iterations.
+Block shapes default to (128, head_dim) — MXU-aligned on the contraction
+dims (the 128 lanes of the systolic array).
+
+GQA is resolved in the BlockSpec index maps: the K/V specs map query head
+``h`` to KV head ``h // group`` so repeated KV heads are never materialized
+in HBM or VMEM.
+
+Causal / sliding-window structure short-circuits whole KV blocks with
+``pl.when`` (a block runs only if any (q,k) pair in it is visible) —
+out-of-range blocks cost a predicate, not a matmul. This is the structural
+win over the XLA chunked path, which must execute every block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None,
+            q_offset: int, block_q: int, block_k: int, kv_blocks: int,
+            sk: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level visibility: skip fully-masked KV blocks.
+    q_first = q_offset + qb * block_q
+    q_last = q_first + block_q - 1
+    k_first = kb * block_k
+    k_last = k_first + block_k - 1
+    visible = k_first < sk
+    if causal:
+        visible &= k_first <= q_last
+    if window is not None:
+        visible &= k_last > q_first - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        q_pos = q_first + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_first + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < sk
+        if causal:
+            ok &= q_pos >= k_pos
+        if window is not None:
+            ok &= q_pos - k_pos < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(kb == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, q_offset=0,
+                         block_q=128, block_k=128, scale=None,
+                         interpret=False):
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D / Dv) -> (B,Hq,Sq,Dv)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else float(D) ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+
+    q_pad = (-Sq) % block_q
+    k_pad = (-Sk) % block_k
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    q_blocks = q.shape[2] // block_q
+    kv_blocks = k.shape[2] // block_k
+
+    grid = (B, Hq, q_blocks, kv_blocks)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=int(q_offset), block_q=block_q, block_k=block_k,
+        kv_blocks=kv_blocks, sk=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, Hq, q_blocks * block_q, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max
+            pltpu.VMEM((block_q,), jnp.float32),        # running denom
+            pltpu.VMEM((block_q, Dv), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

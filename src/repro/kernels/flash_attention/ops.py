@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Accepts the framework's (B, S, H, D) activation layout and dispatches to the
+Pallas kernel ((B, H, S, D) internally). ``interpret=True`` runs the kernel
+body in Python on CPU — the validation mode used by the test suite; on a real
+TPU pass ``interpret=False``.
+
+Differentiation: the Pallas call carries a ``custom_vjp`` whose forward is
+the kernel and whose backward recomputes attention with the chunked XLA path
+(flash-style recompute — no (Sq, Sk) residuals saved), so the kernel path is
+trainable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.models.layers import attention_chunked
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, q_offset, block_q, block_k, scale,
+           interpret):
+    out = flash_attention_bhsd(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, scale=scale, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale,
+               interpret):
+    return _flash(q, k, v, causal, window, q_offset, block_q, block_k, scale,
+                  interpret), (q, k, v)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, scale, interpret,
+               res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_chunked(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            scale=scale, chunk=max(block_k, 128)),
+        q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
+                                   "block_k", "scale", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    block_q=128, block_k=128, scale=None, interpret=False):
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D/Dv) -> (B,Sq,Hq,Dv)."""
+    return _flash(q, k, v, causal, window, q_offset, block_q, block_k, scale,
+                  interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash attention kernel (materialized softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_einsum
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0,
+                        scale=None):
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D/Dv) -> (B,Hq,Sq,Dv), computed with the
+    reference materialized-scores attention (layers.attention_einsum operates
+    in (B,S,H,D) layout; this wrapper keeps the kernel's (B,H,S,D))."""
+    qs = jnp.swapaxes(q, 1, 2)
+    ks = jnp.swapaxes(k, 1, 2)
+    vs = jnp.swapaxes(v, 1, 2)
+    out = attention_einsum(qs, ks, vs, causal=causal, window=window,
+                           q_offset=q_offset, scale=scale)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,1 @@
+from repro.kernels.nstep_return import ops, ref  # noqa: F401

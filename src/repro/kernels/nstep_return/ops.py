@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the n-step return kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.nstep_return.kernel import nstep_return_pallas
+
+
+@partial(jax.jit, static_argnames=("n", "block_lanes", "interpret"))
+def nstep_return(reward, discount, n: int, *, block_lanes: int = 128,
+                 interpret: bool = False):
+    """(lanes, T) rewards/discounts -> (returns, discount_n) of (lanes, T-n+1)."""
+    return nstep_return_pallas(reward, discount, n, block_lanes=block_lanes,
+                               interpret=interpret)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle: the sliding-window fold from repro.core.nstep."""
+
+from repro.core.nstep import from_trajectory as nstep_return_ref  # noqa: F401

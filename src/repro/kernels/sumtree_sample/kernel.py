@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched stochastic sum-tree descent (prioritized sampling).
+
+The paper found the replay server CPU-bound and fixed it by batching all
+requests (§Contention); on TPU the analogous hot op is the batched inverse-CDF
+descent that turns a vector of mass offsets into leaf indices. Random gathers
+don't vectorize on the TPU VPU, so the descent is re-cast as a *one-hot
+select*: at every level the batch's current nodes are compared against a
+lane-iota over the (VMEM-resident) tree and the left-child masses extracted
+with a masked row-sum — an all-lanes operation instead of a serial gather.
+A replay shard's tree is small (2 * capacity f32; 64 KiB at the paper's
+2M/256-shard geometry), so the whole tree is a single VMEM block and only the
+offset batch is tiled by the grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tree_ref, u_ref, idx_ref, *, depth: int, capacity: int,
+            block_b: int):
+    tree = tree_ref[...]                                    # (2C,) in VMEM
+    u = u_ref[...].astype(jnp.float32)                      # (block_b,)
+    node = jnp.ones((block_b,), jnp.int32)                  # root = 1
+    lane = jax.lax.broadcasted_iota(jnp.int32, (block_b, 2 * capacity), 1)
+
+    def level(_, carry):
+        node, u = carry
+        left = node * 2
+        # one-hot select of tree[left] across the batch (VPU-friendly:
+        # compare + masked row-sum instead of a serial gather)
+        sel = (lane == left[:, None]).astype(jnp.float32)
+        left_mass = jnp.sum(sel * tree[None, :], axis=1)
+        go_left = u < left_mass
+        node = jnp.where(go_left, left, left + 1)
+        u = jnp.where(go_left, u, u - left_mass)
+        return node, u
+
+    node, _ = jax.lax.fori_loop(0, depth, level, (node, u))
+    idx_ref[...] = jnp.clip(node - capacity, 0, capacity - 1)
+
+
+def sumtree_sample_pallas(tree: jax.Array, u: jax.Array, *, block_b: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """tree (2C,) f32 sum-tree, u (B,) mass offsets -> (B,) int32 leaf ids."""
+    (two_c,) = tree.shape
+    capacity = two_c // 2
+    depth = capacity.bit_length() - 1
+    (B,) = u.shape
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        u = jnp.pad(u, (0, pad))
+    blocks = u.shape[0] // block_b
+
+    kernel = functools.partial(_kernel, depth=depth, capacity=capacity,
+                               block_b=block_b)
+    idx = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((two_c,), lambda i: (0,)),         # whole tree in VMEM
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((blocks * block_b,), jnp.int32),
+        interpret=interpret,
+    )(tree, u)
+    return idx[:B]

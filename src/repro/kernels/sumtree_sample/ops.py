@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the sum-tree sampling kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sumtree_sample.kernel import sumtree_sample_pallas
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sumtree_sample(tree, u, *, block_b: int = 256, interpret: bool = False):
+    """tree (2C,), u (B,) in [0, total) -> (B,) int32 leaf indices."""
+    return sumtree_sample_pallas(tree, u, block_b=block_b, interpret=interpret)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle: the gather-based descent from repro.core.sumtree."""
+
+from repro.core.sumtree import sample as sumtree_sample_ref  # noqa: F401

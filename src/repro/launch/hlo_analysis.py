@@ -1,0 +1,87 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic, so collective bytes are recovered by parsing the partitioned HLO
+text: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction contributes its *output*
+buffer size (per-device module => per-device bytes through the ICI).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum buffer sizes in an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan the (post-partitioning) HLO for collective instructions.
+
+    Matches lines of the form ``  %x = <shape> all-gather(...)`` and credits
+    the output shape's bytes to that collective type. ``start/done`` pairs
+    (async collectives) are counted once via the ``-start`` instruction, and
+    plain (sync) forms are counted directly.
+    """
+    stats = CollectiveStats()
+    line_re = re.compile(
+        r"=\s+([^=]+?)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\(")
+    seen_async = set()
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        shape_str, op, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start:
+            seen_async.add(op)
+        b = _shape_bytes(shape_str)
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int, peak_flops: float, hbm_bw: float,
+                   ici_bw: float, flops_are_global: bool) -> dict:
+    """The three roofline terms in seconds (DESIGN/EXPERIMENTS §Roofline)."""
+    div = chips if flops_are_global else 1
+    t_compute = flops / div / peak_flops
+    t_memory = hbm_bytes / div / hbm_bw
+    t_coll = collective_bytes / ici_bw   # collective bytes are per-device
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms

@@ -1,0 +1,146 @@
+"""Parameter / input / cache sharding rules (GSPMD via jit in_shardings).
+
+Strategy (DESIGN.md §5): 2-D parameter sharding — tensor-parallel over
+``model`` (attention heads, FF hidden, experts, vocab) and FSDP over the data
+axes (``pod`` × ``data``) on a complementary dimension. Activations shard
+batch over the data axes; for single-sequence long-context decode the KV
+cache shards its *sequence* dimension over ``data`` instead (context
+parallelism — softmax partial reductions become collectives).
+
+Every rule passes through a divisibility guard: an axis that does not divide
+the dimension is dropped (e.g. granite's 49155 vocab is not 16-divisible, so
+its embedding shards on d_model only). This keeps one rule set valid across
+all ten architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def _fit(spec: tuple, shape: tuple[int, ...], mesh) -> P:
+    """Drop axes that don't divide their dimension; pad spec to rank."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        else:
+            size = _axis_size(mesh, ax)
+            out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def _param_spec(path: str, shape: tuple[int, ...], mesh) -> P:
+    """Rule table keyed on path suffix/context; 'D' = FSDP axes, 'M' = model."""
+    D = data_axes(mesh)
+    name = path.split("/")[-1]
+    ndim = len(shape)
+
+    if path.endswith("embed/w"):
+        return _fit(("model", D), shape, mesh)
+    if path.endswith("head/w"):
+        return _fit((D, "model"), shape, mesh)
+
+    mixer_ctx = "/mixer/" in path or "/attn/" in path
+    mlp_ctx = "/mlp/" in path or "/shared/" in path
+
+    if mixer_ctx:
+        if name in ("wq", "wk", "wv", "wg", "wr", "in_proj",
+                    "wq_a", "wq_b", "wkv_a", "wkv_b"):
+            return _fit((D, "model"), shape, mesh)
+        if name in ("wo", "out_proj"):
+            return _fit(("model", D), shape, mesh)
+        if name in ("A_log", "dt_bias", "D") and ndim >= 1:
+            return _fit(("model",), shape, mesh)
+        return P()  # norms, conv, lora, mixes, bonus — replicated
+
+    if mlp_ctx:
+        if name == "router":
+            return _fit((D, None), shape, mesh)
+        if name in ("w_gate", "w_up", "wk"):
+            if ndim == 4:   # MoE experts (L, E, d, ff): experts over model
+                return _fit(("model", D, None), shape, mesh)
+            return _fit((D, "model"), shape, mesh)
+        if name in ("w_down", "wv"):
+            if ndim == 4:
+                return _fit(("model", None, D), shape, mesh)
+            return _fit(("model", D), shape, mesh)
+        if name == "wr":    # rwkv channel-mix receptance (d, d)
+            return _fit((D, "model"), shape, mesh)
+        return P()
+
+    return P()  # final_ln etc.
+
+
+def param_shardings(param_shapes: Any, mesh) -> Any:
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec = _param_spec(key, tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shapes: Any, mesh) -> Any:
+    """Training/prefill inputs: batch over the data axes, rest replicated."""
+    D = data_axes(mesh)
+
+    def one(leaf):
+        spec = _fit((D,) + (None,) * (len(leaf.shape) - 1), tuple(leaf.shape), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh) -> Any:
+    """Decode caches (leading layer dim). Batch over data axes when it
+    divides; otherwise (single-sequence long-context) the *sequence* dim of
+    attention caches shards over ``data`` — context parallelism. Head/state
+    dims shard over ``model`` when divisible."""
+    D = data_axes(mesh)
+    dsize = _axis_size(mesh, D)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        name = str(getattr(path[-1], "key", path[-1]))
+        batch_ok = len(shape) >= 2 and shape[1] % dsize == 0
+        if name in ("k", "v", "shared_k", "shared_v"):   # (L,B,S,H,Dh)
+            if batch_ok:
+                return NamedSharding(mesh, _fit((None, D, None, "model", None), shape, mesh))
+            return NamedSharding(mesh, _fit((None, None, D, "model", None), shape, mesh))
+        if name == "latent":                             # (L,B,S,lora+rope)
+            if batch_ok:
+                return NamedSharding(mesh, _fit((None, D, None, "model"), shape, mesh))
+            return NamedSharding(mesh, _fit((None, None, D, "model"), shape, mesh))
+        if name in ("ssm", "wkv"):                       # (L,B,H,...)
+            spec = (None, D if batch_ok else None, "model") + (None,) * (len(shape) - 3)
+            return NamedSharding(mesh, _fit(spec, shape, mesh))
+        if name in ("conv", "tm_prev", "cm_prev"):       # (L,B,...,C)
+            spec = (None, D if batch_ok else None) + (None,) * (len(shape) - 3) + ("model",)
+            return NamedSharding(mesh, _fit(spec, shape, mesh))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,98 @@
+"""Step functions lowered by the dry-run and executed by train/serve drivers.
+
+One builder per shape kind (DESIGN.md §3):
+
+* ``train_step``   — the Ape-X learner update on a prioritized sequence batch
+                     (IS-weighted CE + MoE aux, grad clip, AdamW, fresh
+                     per-sequence priorities out).
+* ``score_step``   — the Ape-X *actor* role at prefill shape: forward the
+                     batch under (stale) params and emit initial priorities
+                     (Alg. 1 line 10).
+* ``serve_step``   — one-token decode against a ``seq_len`` cache (acting /
+                     policy evaluation).
+
+All are pure (params, ...) -> (...) functions — GSPMD distributes them from
+the in_shardings alone.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.optim import optimizers as optim
+
+
+def _forward_logits(cfg, params, batch, return_aux=False):
+    kwargs = {}
+    tokens = batch.get("tokens")
+    if "embeddings" in batch:
+        kwargs["embeddings"] = batch["embeddings"]
+    if "prefix_embeddings" in batch:
+        kwargs["prefix_embeddings"] = batch["prefix_embeddings"]
+    return transformer.apply(params, tokens, cfg=cfg, return_aux=return_aux,
+                             **kwargs)
+
+
+def _constrain_logits(cfg, logits):
+    if cfg.act_sharding is None:
+        return logits
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        logits, P(cfg.act_sharding[0], None, "model"))
+
+
+def _per_sequence_nll(logits, labels):
+    """Per-sequence mean NLL, vocab-sharding friendly: the correct-class logit
+    is extracted with a masked reduction (partial-sum + all-reduce under
+    GSPMD) instead of take_along_axis, which would all-gather the logits."""
+    mask = (labels >= 0).astype(jnp.float32)
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    vocab = logits.shape[-1]
+    sel = labels[..., None] == jnp.arange(vocab, dtype=labels.dtype)
+    correct = jnp.sum(jnp.where(sel, logits32, 0.0), axis=-1)
+    nll = (logz - correct) * mask
+    return nll.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+
+
+def make_train_step(cfg, optimizer: optim.Optimizer,
+                    grad_clip: float = 1.0) -> Callable:
+    def train_step(params: Any, opt_state: Any, batch: dict):
+        def loss_fn(p):
+            logits, aux = _forward_logits(cfg, p, batch, return_aux=True)
+            logits = _constrain_logits(cfg, logits)
+            per_seq = _per_sequence_nll(logits, batch["labels"])
+            loss = jnp.mean(batch["is_weights"] * per_seq) + aux
+            return loss, per_seq
+
+        (loss, per_seq), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads = optim.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        new_priorities = jax.lax.stop_gradient(per_seq)
+        return params, opt_state, new_priorities, {"loss": loss}
+
+    return train_step
+
+
+def make_score_step(cfg) -> Callable:
+    def score_step(params: Any, batch: dict) -> jax.Array:
+        logits = _constrain_logits(cfg, _forward_logits(cfg, params, batch))
+        return _per_sequence_nll(logits, batch["labels"])   # initial priorities
+
+    return score_step
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params: Any, cache: Any, token: jax.Array, pos: jax.Array):
+        logits, cache = transformer.decode_step(
+            params, token, pos, cfg=cfg, cache=cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+
+    return serve_step

@@ -1,0 +1,113 @@
+"""Training launcher.
+
+Two modes, matching the two integrations of the paper's technique:
+
+* ``--mode apex-dqn`` / ``--mode apex-dpg`` — the paper's own agents on the
+  pure-JAX envs (reduced presets run on CPU; full presets target the mesh).
+* ``--mode llm --arch <id>`` — prioritized *sequence* replay training of an
+  assigned architecture on the synthetic pipeline (reduced config on CPU).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --mode apex-dqn --iterations 200
+  PYTHONPATH=src python -m repro.launch.train --mode llm --arch llama3.2-1b \
+      --iterations 50 --ckpt-dir /tmp/ckpts
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core import apex, replay as replay_lib, sequence_replay as seqrep
+from repro.data import pipeline as data_lib
+from repro.models import registry, transformer
+from repro.optim import optimizers as optim
+
+
+def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(
+        preset.apex, preset.env, preset.agent, optimizer)
+    state = init_fn(jax.random.key(0))
+    t0 = time.time()
+    for it in range(iterations):
+        state, metrics = step_fn(state)
+        if (it + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            fps = float(state.frames) / (time.time() - t0)
+            print(f"iter {it+1:5d} frames={int(m['frames'])} "
+                  f"size={int(m['replay_size'])} fps={fps:8.0f} "
+                  f"return={m.get('mean_ep_return', float('nan')):8.3f} "
+                  f"loss={m.get('loss', m.get('critic_loss', 0)):.4f}")
+        if ckpt_dir and (it + 1) % (log_every * 10) == 0:
+            ckpt_lib.save(f"{ckpt_dir}/ckpt_{it+1}.npz",
+                          {"params": state.params,
+                           "opt_state": state.opt_state,
+                           "learner_step": state.learner_step}, step=it + 1)
+    return state
+
+
+def run_llm(arch: str, iterations: int, log_every: int, ckpt_dir: str | None,
+            seq_len: int = 128, batch: int = 8):
+    cfg = registry.get_config(arch).reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    optimizer = optim.adamw(1e-3)
+    scfg = seqrep.SeqReplayConfig(
+        replay=replay_lib.ReplayConfig(capacity=1024, min_fill=batch),
+        seq_len=seq_len, batch_size=batch, ingest_batch=batch,
+        param_sync_period=4, learner_steps_per_round=2)
+    pcfg = data_lib.PipelineConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                   batch_size=batch)
+    apply_fn = lambda p, tokens: transformer.apply(p, tokens, cfg=cfg)
+    state = seqrep.init_state(scfg, params, optimizer, jax.random.key(1))
+
+    @jax.jit
+    def round_step(state, step):
+        b = data_lib.make_batch(pcfg, jax.random.key(7), step)
+        return seqrep.round_step(scfg, apply_fn, optimizer, state,
+                                 b["tokens"], b["labels"])
+
+    for it in range(iterations):
+        state, metrics = round_step(state, it)
+        if (it + 1) % log_every == 0:
+            print(f"round {it+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"mean_prio={float(metrics['mean_priority']):.4f} "
+                  f"replay={int(state.replay.size)}")
+        if ckpt_dir and (it + 1) % (log_every * 10) == 0:
+            ckpt_lib.save(f"{ckpt_dir}/ckpt_{it+1}.npz",
+                          {"params": state.params}, step=it + 1)
+    return state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("apex-dqn", "apex-dpg", "llm"),
+                    default="apex-dqn")
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--iterations", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale preset (mesh required)")
+    args = ap.parse_args()
+
+    if args.mode == "apex-dqn":
+        from repro.configs import apex_dqn
+        preset = apex_dqn.full() if args.full else apex_dqn.reduced()
+        run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
+    elif args.mode == "apex-dpg":
+        from repro.configs import apex_dpg
+        preset = apex_dpg.full() if args.full else apex_dpg.reduced()
+        run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
+    else:
+        if not args.arch:
+            ap.error("--mode llm requires --arch")
+        run_llm(args.arch, args.iterations, args.log_every, args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

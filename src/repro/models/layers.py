@@ -1,0 +1,543 @@
+"""Transformer building blocks — pure JAX, parameterized by nested dicts.
+
+Conventions
+===========
+* Activations compute in ``cfg.dtype`` (bf16 by default); softmax, norms and
+  router logits in f32. Parameters are stored in ``param_dtype``.
+* Attention tensors are (batch, seq, heads, head_dim); GQA never materializes
+  repeated KV heads (query heads are grouped against shared KV).
+* Three attention implementations behind one flag:
+    - ``einsum``  : materialized scores; decode (Sq==1) and small tests.
+    - ``chunked`` : online-softmax scan over KV blocks — bounded memory at
+                    32k+ prefill; this is also the oracle of the Pallas
+                    flash kernel.
+    - ``pallas`` / ``pallas_interpret`` : the TPU kernel
+                    (repro.kernels.flash_attention).
+* MoE uses fixed-capacity sort-free dispatch (one-hot cumsum positions +
+  scatter/gather), experts sharded over the ``model`` axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(rng, shape, std, dtype):
+    return (std * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype) -> dict:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (with partial-rotary support, e.g. StableLM 25%)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rope_pct: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    exponents = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / max(rot_dim, 1)
+    return 1.0 / (theta ** exponents)  # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x (B, S, H, D), positions (B, S) or (S,); rotates the first len(freqs)*2 dims."""
+    rot = freqs.shape[0] * 2
+    if rot == 0:
+        return x
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated, x_pass], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (GQA, causal, sliding window) — einsum & chunked paths
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int | None, k_valid_len: jax.Array | None) -> jax.Array:
+    """Additive f32 bias from position constraints.
+
+    q_pos (Sq,) or (B, Sq); k_pos (Sk,) or (B, Sk) — batched forms support
+    per-row decode positions (continuous batching) and ring-buffer caches
+    whose slots hold per-row absolute positions. Returns (Sq, Sk) or
+    (B, 1, 1, Sq, Sk).
+    """
+    batched = q_pos.ndim == 2 or k_pos.ndim == 2
+    if batched:
+        qp = (q_pos if q_pos.ndim == 2 else q_pos[None, :])[:, :, None]
+        kp = (k_pos if k_pos.ndim == 2 else k_pos[None, :])[:, None, :]
+    else:
+        qp = q_pos[:, None]
+        kp = k_pos[None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= qp >= kp
+    if window is not None:
+        ok &= qp - kp < window
+    if k_valid_len is not None:
+        kv = (k_valid_len[:, None, None] if batched
+              and getattr(k_valid_len, "ndim", 0) == 1 else k_valid_len)
+        ok &= kp < kv
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    if batched:                                    # broadcast over (h, g)
+        bias = bias[:, None, None, :, :]
+    return bias
+
+
+def attention_einsum(q, k, v, *, causal=True, window=None, q_offset=0,
+                     k_valid_len=None, scale=None, k_positions=None):
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,D). Materialized scores.
+
+    ``k_positions`` overrides the implicit 0..Sk-1 key positions — used by
+    ring-buffer (sliding-window) caches whose slots hold non-contiguous
+    absolute positions.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk) if k_positions is None else k_positions
+    s = s + _mask_bias(q_pos, k_pos, causal, window, k_valid_len)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None, q_offset=0,
+                      k_valid_len=None, scale=None, chunk=512, unroll=False,
+                      p_bf16=False):
+    """Online-softmax over KV chunks: O(Sq * chunk) live scores.
+
+    Exactly matches ``attention_einsum`` (it is the oracle for the Pallas
+    flash kernel as well). Fully-masked chunks still execute — skipping them
+    is a §Perf hillclimb (block-sparse schedule), not baseline behavior.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, Hkv, k.shape[-1])
+    vc = v.reshape(B, nchunks, chunk, Hkv, v.shape[-1])
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, g, D)
+    q_pos = q_offset + jnp.arange(Sq)
+    valid = Sk if k_valid_len is None else k_valid_len
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c = inp
+        k_pos = c * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        s = s + _mask_bias(q_pos, k_pos, causal, window, valid)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        if p_bf16:  # halve the quadratic score traffic; denominator stays f32
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.bfloat16),
+                            vb.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    Dv = v.shape[-1]
+    m0 = jnp.full((B, Hkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, Dv), jnp.float32)
+    # remat per chunk: backward recomputes the block softmax instead of
+    # saving (Sq, Sk) residuals — the flash-attention memory profile
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1), jnp.arange(nchunks)),
+        unroll=nchunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,Hkv,g,Sq,Dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="einsum", **kw):
+    if impl == "einsum" or q.shape[1] == 1:
+        kw.pop("chunk", None)
+        kw.pop("unroll", None)
+        kw.pop("p_bf16", None)
+        return attention_einsum(q, k, v, **kw)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, **kw)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=kw.get("causal", True), window=kw.get("window"),
+            q_offset=kw.get("q_offset", 0),
+            interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, cfg, dtype) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = jax.random.split(rng, 4)
+    std = d ** -0.5
+    return {
+        "wq": normal_init(r[0], (d, hq * dh), std, dtype),
+        "wk": normal_init(r[1], (d, hkv * dh), std, dtype),
+        "wv": normal_init(r[2], (d, hkv * dh), std, dtype),
+        "wo": normal_init(r[3], (hq * dh, d), (hq * dh) ** -0.5, dtype),
+    }
+
+
+def gqa_apply(p, cfg, x, *, positions, kv_cache=None, cache_len=None,
+              impl="einsum", causal=True):
+    """x (B,S,d). With kv_cache=(k,v) of (B,Smax,Hkv,Dh): write at positions,
+    attend against the cache (prefill/decode); else self-attention."""
+    B, S, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    freqs = rope_frequencies(dh, cfg.rope_pct, cfg.rope_theta)
+    q = (x @ p["wq"]).reshape(B, S, hq, dh)
+    k = (x @ p["wk"]).reshape(B, S, hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, hkv, dh)
+    q = apply_rope(q, positions, freqs)
+    k = apply_rope(k, positions, freqs)
+
+    if kv_cache is None:
+        out = attention(q, k, v, impl=impl, causal=causal,
+                        window=cfg.sliding_window, chunk=cfg.attn_chunk,
+                        unroll=cfg.attn_unroll, p_bf16=cfg.attn_p_bf16)
+        new_cache = None
+    elif (cfg.swa_ring_cache and cfg.sliding_window is not None and S == 1
+          and kv_cache[0].shape[1] <= cfg.sliding_window):
+        # ring-buffer SWA cache: W slots, slot = pos % W; keys carry their
+        # absolute positions for masking (unwritten slots pushed out of the
+        # window). O(window) memory instead of O(seq_len).
+        ck, cv = kv_cache
+        W = ck.shape[1]
+        win = cfg.sliding_window
+        pv = (positions[:, 0] if positions.ndim == 2
+              else jnp.broadcast_to(positions.reshape(-1)[0], (B,)))
+        rows = jnp.arange(B)
+        slot = pv % W
+        ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+        r = jnp.arange(W)
+        abs_k = pv[:, None] - ((pv[:, None] - r[None, :]) % W)   # (B, W)
+        abs_k = jnp.where(abs_k < 0, -2 * win, abs_k)            # warmup slots
+        out = attention_einsum(q, ck, cv, causal=causal, window=win,
+                               q_offset=pv[:, None], k_positions=abs_k)
+        new_cache = (ck, cv)
+    elif positions.ndim == 2 and S == 1:
+        # per-row decode positions (continuous batching): scatter one token
+        # into each row's slot, mask each row by its own valid length
+        ck, cv = kv_cache
+        rows = jnp.arange(B)
+        pos_vec = positions[:, 0]
+        ck = ck.at[rows, pos_vec].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[rows, pos_vec].set(v[:, 0].astype(cv.dtype))
+        valid = cache_len if cache_len is not None else pos_vec + 1
+        out = attention_einsum(q, ck, cv, causal=causal,
+                               window=cfg.sliding_window,
+                               q_offset=positions, k_valid_len=valid)
+        new_cache = (ck, cv)
+    else:
+        ck, cv = kv_cache
+        start = positions if positions.ndim == 0 else positions.reshape(-1)[0]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, start, 0, 0))
+        q_off = start
+        valid = (cache_len if cache_len is not None else start + S)
+        out = attention(q, ck, cv, impl=impl, causal=causal,
+                        window=cfg.sliding_window, q_offset=q_off,
+                        k_valid_len=valid, chunk=cfg.attn_chunk,
+                        unroll=cfg.attn_unroll, p_bf16=cfg.attn_p_bf16)
+        new_cache = (ck, cv)
+    y = out.reshape(B, S, hq * dh) @ p["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2). The KV cache holds only the
+# compressed latent (kv_lora) + the decoupled rope key per position.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+def mla_init(rng, cfg, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    r = jax.random.split(rng, 6)
+    std = d ** -0.5
+    qk = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": normal_init(r[0], (d, m.q_lora), std, dtype),
+        "q_ln": rmsnorm_init(m.q_lora, dtype),
+        "wq_b": normal_init(r[1], (m.q_lora, h * qk), m.q_lora ** -0.5, dtype),
+        "wkv_a": normal_init(r[2], (d, m.kv_lora + m.rope_head_dim), std, dtype),
+        "kv_ln": rmsnorm_init(m.kv_lora, dtype),
+        "wkv_b": normal_init(
+            r[3], (m.kv_lora, h * (m.nope_head_dim + m.v_head_dim)),
+            m.kv_lora ** -0.5, dtype),
+        "wo": normal_init(r[4], (h * m.v_head_dim, d),
+                          (h * m.v_head_dim) ** -0.5, dtype),
+    }
+
+
+def mla_apply(p, cfg, x, *, positions, latent_cache=None, cache_len=None,
+              impl="einsum", causal=True):
+    """latent_cache (B, Smax, kv_lora + rope_head_dim) — the MLA decode win:
+    the per-token cache is 512+64 floats instead of 2*H*Dh."""
+    m: MLAConfig = cfg.mla
+    B, S, d = x.shape
+    h = cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    freqs = rope_frequencies(m.rope_head_dim, 1.0, cfg.rope_theta)
+
+    q = (rmsnorm(p["q_ln"], x @ p["wq_a"]) @ p["wq_b"]).reshape(B, S, h, qk)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, freqs)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv_a = x @ p["wkv_a"]                                     # (B,S,kv_lora+rope)
+    latent, k_rope = kv_a[..., :m.kv_lora], kv_a[..., m.kv_lora:]
+    latent = rmsnorm(p["kv_ln"], latent)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, freqs)[:, :, 0, :]
+    fresh = jnp.concatenate([latent, k_rope], axis=-1)
+
+    if latent_cache is not None and positions.ndim == 2 and S == 1:
+        # per-row decode positions (continuous batching)
+        rows = jnp.arange(B)
+        pos_vec = positions[:, 0]
+        latent_cache = latent_cache.at[rows, pos_vec].set(
+            fresh[:, 0].astype(latent_cache.dtype))
+        all_lat = latent_cache[..., :m.kv_lora]
+        all_rope = latent_cache[..., m.kv_lora:]
+        q_off = positions
+        valid = cache_len if cache_len is not None else pos_vec + 1
+    elif latent_cache is not None:
+        start = positions if positions.ndim == 0 else positions.reshape(-1)[0]
+        latent_cache = jax.lax.dynamic_update_slice(
+            latent_cache, fresh.astype(latent_cache.dtype), (0, start, 0))
+        all_lat = latent_cache[..., :m.kv_lora]
+        all_rope = latent_cache[..., m.kv_lora:]
+        q_off = start
+        valid = cache_len if cache_len is not None else start + S
+    else:
+        all_lat, all_rope = latent, k_rope
+        q_off, valid = 0, None
+
+    kv = (all_lat.astype(x.dtype) @ p["wkv_b"]).reshape(
+        all_lat.shape[0], all_lat.shape[1], h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(all_rope[:, :, None, :].astype(x.dtype),
+                                  k_nope.shape[:3] + (m.rope_head_dim,))], axis=-1)
+    out = attention(q, k, v, impl=impl, causal=causal, q_offset=q_off,
+                    k_valid_len=valid, scale=1.0 / jnp.sqrt(qk),
+                    chunk=cfg.attn_chunk, unroll=cfg.attn_unroll,
+                    p_bf16=cfg.attn_p_bf16)
+    y = out.reshape(B, S, h * m.v_head_dim) @ p["wo"]
+    return y, latent_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d: int, ff: int, act: str, dtype) -> dict:
+    r = jax.random.split(rng, 3)
+    std = d ** -0.5
+    p = {"w_up": normal_init(r[0], (d, ff), std, dtype),
+         "w_down": normal_init(r[1], (ff, d), ff ** -0.5, dtype)}
+    if act == "swiglu":
+        p["w_gate"] = normal_init(r[2], (d, ff), std, dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — fixed-capacity dispatch, shared + routed experts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0            # always-active experts (DeepSeek-V2: 2)
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    dispatch_groups: int = 1       # >1: shard-local dispatch (per data shard,
+                                   # capacity/groups each) — the all-to-all
+                                   # expert-parallel pattern instead of a
+                                   # global gather/combine over all tokens
+
+
+def moe_init(rng, cfg, dtype) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    r = jax.random.split(rng, 5)
+    std = d ** -0.5
+    e, fe = m.num_experts, m.d_expert
+    p = {
+        "router": normal_init(r[0], (d, e), std, jnp.float32),
+        "w_gate": normal_init(r[1], (e, d, fe), std, dtype),
+        "w_up": normal_init(r[2], (e, d, fe), std, dtype),
+        "w_down": normal_init(r[3], (e, fe, d), fe ** -0.5, dtype),
+    }
+    if m.num_shared:
+        p["shared"] = mlp_init(r[4], d, fe * m.num_shared, "swiglu", dtype)
+    return p
+
+
+def moe_apply(p, cfg, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y, aux_load_balance_loss).
+
+    Fixed-capacity dispatch: position-in-expert via one-hot cumsum, scatter
+    token ids into a routing table, gather/expert-matmul/scatter-add back.
+    Overflowing tokens are dropped from routed experts (standard capacity
+    semantics); shared experts always see every token.
+
+    With ``dispatch_groups == G > 1`` routing/gather/combine run per token
+    group (group dim sharded over the data axes, capacity/G per group): the
+    cross-device exchange becomes the expert-parallel all-to-all instead of
+    an all-token gather + full all-reduce (§Perf iteration, EXPERIMENTS.md).
+    """
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    n = B * S
+    G = m.dispatch_groups if n % m.dispatch_groups == 0 else 1
+    ng = n // G
+    xt = x.reshape(G, ng, d)
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, ng, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)      # (G, ng, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
+
+    cap = int(max(1, round(ng * m.top_k * m.capacity_factor / m.num_experts)))
+    # (G, ng*k) flattened routing within each group
+    flat_expert = expert_idx.reshape(G, -1)
+    flat_gate = gate_vals.reshape(G, -1)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(ng), m.top_k)[None], (G, ng * m.top_k))
+    onehot = jax.nn.one_hot(flat_expert, m.num_experts, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - 1             # (G, ng*k, E)
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[..., None],
+                              axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap - 1)
+
+    def route_one(fe, sl, tok, gate, kp):
+        table = jnp.full((m.num_experts, cap), ng, jnp.int32)  # ng = pad id
+        table = table.at[fe, sl].set(jnp.where(kp, tok, ng), mode="drop")
+        gates = jnp.zeros((m.num_experts, cap), jnp.float32)
+        gates = gates.at[fe, sl].set(jnp.where(kp, gate, 0.0), mode="drop")
+        return table, gates
+
+    table, gates = jax.vmap(route_one)(flat_expert, slot, flat_token,
+                                       flat_gate, keep)        # (G, E, C)
+
+    xpad = jnp.concatenate([xt, jnp.zeros((G, 1, d), xt.dtype)], axis=1)
+    gathered = jax.vmap(lambda xp, tb: xp[tb])(xpad, table)    # (G, E, C, d)
+    if cfg.act_sharding is not None and G > 1:
+        from jax.sharding import PartitionSpec as P
+        gathered = jax.lax.with_sharding_constraint(
+            gathered, P(cfg.act_sharding[0], "model", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gathered, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", gathered, p["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])         # (G, E, C, d)
+    out = out * gates[..., None].astype(out.dtype)
+
+    def combine_one(tb, o):
+        return jnp.zeros((ng + 1, d), jnp.float32).at[tb.reshape(-1)].add(
+            o.reshape(-1, d).astype(jnp.float32))[:ng]
+
+    y = jax.vmap(combine_one)(table, out).astype(x.dtype)      # (G, ng, d)
+    y = y.reshape(n, d)
+
+    if m.num_shared:
+        y = y + mlp_apply(p["shared"], xt.reshape(n, d), "swiglu")
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, m.num_experts, dtype=jnp.float32),
+        axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = m.aux_loss_coef * m.num_experts * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,154 @@
+"""Function approximators for Ape-X DQN / DPG — pure-JAX, from scratch.
+
+* Dueling double-DQN network (Wang et al. 2016): the paper uses "the same
+  network as in the Dueling DDQN agent" — Nature-CNN torso (conv 32x8x8/4,
+  64x4x4/2, 64x3x3/1, fc512) + value/advantage streams. An MLP torso variant
+  serves vector observations (ChainWorld / unit tests).
+* DPG actor & critic (Appendix D): critic 400 -> tanh -> 300; actor
+  300 -> tanh -> 200, tanh-squashed actions.
+
+Parameters are plain nested dicts so they shard/checkpoint like every other
+pytree in the framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _uniform_init(rng, shape, scale):
+    return jax.random.uniform(rng, shape, jnp.float32, -scale, scale)
+
+
+def dense_init(rng, d_in, d_out):
+    scale = jnp.sqrt(6.0 / (d_in + d_out))  # glorot uniform
+    w_rng, b_rng = jax.random.split(rng)
+    return {"w": _uniform_init(w_rng, (d_in, d_out), scale),
+            "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def conv_init(rng, h, w, c_in, c_out):
+    fan_in = h * w * c_in
+    scale = jnp.sqrt(2.0 / fan_in)  # he
+    return {"w": scale * jax.random.normal(rng, (h, w, c_in, c_out), jnp.float32),
+            "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def conv(p, x, stride):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _prep_obs(obs: jax.Array) -> jax.Array:
+    if obs.dtype == jnp.uint8:
+        return obs.astype(jnp.float32) / 255.0
+    return obs.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dueling DQN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DuelingDQN:
+    """Dueling Q-network; conv torso for image obs, MLP torso for vectors."""
+
+    num_actions: int
+    torso: str = "mlp"               # "mlp" | "nature_cnn"
+    mlp_hidden: tuple[int, ...] = (256, 256)
+    head_hidden: int = 512
+
+    def init(self, rng: jax.Array, obs_example: jax.Array) -> Any:
+        rngs = jax.random.split(rng, 8)
+        p: dict[str, Any] = {}
+        x = _prep_obs(obs_example[None]) if obs_example.ndim in (1, 3) else _prep_obs(obs_example)
+        if self.torso == "nature_cnn":
+            p["c1"] = conv_init(rngs[0], 8, 8, x.shape[-1], 32)
+            p["c2"] = conv_init(rngs[1], 4, 4, 32, 64)
+            p["c3"] = conv_init(rngs[2], 3, 3, 64, 64)
+            x = jax.nn.relu(conv(p["c1"], x, 4))
+            x = jax.nn.relu(conv(p["c2"], x, 2))
+            x = jax.nn.relu(conv(p["c3"], x, 1))
+            feat = x.reshape(x.shape[0], -1).shape[-1]
+        else:
+            feat = x.shape[-1]
+            for i, h in enumerate(self.mlp_hidden):
+                p[f"fc{i}"] = dense_init(rngs[i], feat, h)
+                feat = h
+        p["val1"] = dense_init(rngs[4], feat, self.head_hidden)
+        p["val2"] = dense_init(rngs[5], self.head_hidden, 1)
+        p["adv1"] = dense_init(rngs[6], feat, self.head_hidden)
+        p["adv2"] = dense_init(rngs[7], self.head_hidden, self.num_actions)
+        return p
+
+    def apply(self, params: Any, obs: jax.Array) -> jax.Array:
+        """obs (B, ...) -> q-values (B, num_actions)."""
+        x = _prep_obs(obs)
+        if self.torso == "nature_cnn":
+            x = jax.nn.relu(conv(params["c1"], x, 4))
+            x = jax.nn.relu(conv(params["c2"], x, 2))
+            x = jax.nn.relu(conv(params["c3"], x, 1))
+            x = x.reshape(x.shape[0], -1)
+        else:
+            i = 0
+            while f"fc{i}" in params:
+                x = jax.nn.relu(dense(params[f"fc{i}"], x))
+                i += 1
+        v = dense(params["val2"], jax.nn.relu(dense(params["val1"], x)))       # (B, 1)
+        a = dense(params["adv2"], jax.nn.relu(dense(params["adv1"], x)))       # (B, A)
+        return v + a - a.mean(axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# DPG actor / critic (Appendix D)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DPGActor:
+    action_dim: int
+    hidden: tuple[int, int] = (300, 200)
+
+    def init(self, rng: jax.Array, obs_example: jax.Array) -> Any:
+        r = jax.random.split(rng, 3)
+        d = obs_example.shape[-1]
+        return {
+            "fc0": dense_init(r[0], d, self.hidden[0]),
+            "fc1": dense_init(r[1], self.hidden[0], self.hidden[1]),
+            "out": dense_init(r[2], self.hidden[1], self.action_dim),
+        }
+
+    def apply(self, params: Any, obs: jax.Array) -> jax.Array:
+        x = _prep_obs(obs)
+        x = jnp.tanh(dense(params["fc0"], x))
+        x = jax.nn.relu(dense(params["fc1"], x))
+        return jnp.tanh(dense(params["out"], x))
+
+
+@dataclasses.dataclass(frozen=True)
+class DPGCritic:
+    hidden: tuple[int, int] = (400, 300)
+
+    def init(self, rng: jax.Array, obs_example: jax.Array, action_example: jax.Array) -> Any:
+        r = jax.random.split(rng, 3)
+        d = obs_example.shape[-1] + action_example.shape[-1]
+        return {
+            "fc0": dense_init(r[0], d, self.hidden[0]),
+            "fc1": dense_init(r[1], self.hidden[0], self.hidden[1]),
+            "out": dense_init(r[2], self.hidden[1], 1),
+        }
+
+    def apply(self, params: Any, obs: jax.Array, action: jax.Array) -> jax.Array:
+        x = jnp.concatenate([_prep_obs(obs), action.astype(jnp.float32)], axis=-1)
+        x = jnp.tanh(dense(params["fc0"], x))
+        x = jax.nn.relu(dense(params["fc1"], x))
+        return dense(params["out"], x)[..., 0]

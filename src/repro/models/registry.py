@@ -1,0 +1,94 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig + input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a given (arch, shape, step-kind) — weak-type-correct, shardable,
+zero allocation — which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, shape_applicable
+
+_ARCH_MODULES = {
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe_42b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch, input-shape) combination.
+
+    train/prefill: {tokens|embeddings[, prefix_embeddings], labels, is_weights}
+    decode:        {token, pos} (+ cache built separately via init_cache specs)
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.arch_id} x {shape.name} skipped: {why}")
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    f = jax.ShapeDtypeStruct
+    i32, adt = jnp.int32, cfg.act_dtype
+
+    if shape.kind in ("train", "prefill"):
+        specs: dict = {}
+        if cfg.input_mode == "embeddings":      # audio stub frontend
+            specs["embeddings"] = f((B, S, cfg.d_model), adt)
+        elif cfg.input_mode == "mixed":         # vlm stub frontend
+            p = min(cfg.prefix_len, S // 2)
+            specs["prefix_embeddings"] = f((B, p, cfg.d_model), adt)
+            specs["tokens"] = f((B, S - p), i32)
+        else:
+            specs["tokens"] = f((B, S), i32)
+        specs["labels"] = f((B, S), i32)
+        if shape.kind == "train":
+            specs["is_weights"] = f((B,), jnp.float32)
+        return specs
+
+    # decode: one new token against a seq_len cache
+    return {"token": f((B, 1), i32), "pos": f((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape | str,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStructs matching transformer.init_cache (no allocation)."""
+    from repro.models import transformer
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B = batch_override or shape.global_batch
+    shapes = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, shape.seq_len))
+    return shapes
+
+
+def combos(include_skipped: bool = False):
+    """All (arch, shape) pairs with applicability verdicts."""
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape in INPUT_SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            if ok or include_skipped:
+                yield arch_id, shape.name, ok, why

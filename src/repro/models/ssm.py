@@ -1,0 +1,381 @@
+"""State-space / linear-recurrence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are *attention-free* token mixers with O(1)-per-token decode state — the
+archs that make ``long_500k`` feasible. The Ape-X priority machinery is
+mixer-agnostic (DESIGN.md §Arch-applicability): these blocks slot into the
+same transformer skeleton as attention.
+
+Baseline training path is a time scan (exact); the chunked block-parallel SSD
+formulation is a §Perf hillclimb, not baseline. Decode is the single-step
+recurrence with carried state:
+  * Mamba2 : conv ring (W-1 inputs) + SSM state (H, P, N)
+  * RWKV6  : prev-token vectors + WKV matrix state (H, K, K)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    headdim: int = 64
+    conv_width: int = 4
+    expand: int = 2
+    ngroups: int = 1
+    chunk: int = 64        # SSD block length for the chunked (matmul) path
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+def mamba2_init(rng, cfg, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    din, h, n, g = s.d_inner(d), s.nheads(d), s.d_state, s.ngroups
+    conv_dim = din + 2 * g * n
+    r = jax.random.split(rng, 4)
+    std = d ** -0.5
+    return {
+        "in_proj": normal_init(r[0], (d, 2 * din + 2 * g * n + h), std, dtype),
+        "conv_w": normal_init(r[1], (s.conv_width, conv_dim), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(din, dtype),
+        "out_proj": normal_init(r[2], (din, d), din ** -0.5, dtype),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv along time. x (B,L,C), w (W,C) -> (B,L,C).
+    ``init_state`` (B,W-1,C) carries context across prefill/decode chunks."""
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    final = xp[:, -(W - 1):] if W > 1 else init_state
+    return out + b, final
+
+
+def _ssd_scan(xin, Bh, Ch, decay, dt, h0):
+    """Exact sequential SSD recurrence (oracle + decode path).
+    xin (B,L,h,P), Bh/Ch (B,L,h,N), decay/dt (B,L,h), h0 (B,h,P,N)."""
+
+    def step(hs, inp):
+        xt, bt, ct, dct, dtt = inp
+        dbx = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt.astype(jnp.float32),
+                         bt.astype(jnp.float32))
+        hs = dct[..., None, None] * hs + dbx
+        yt = jnp.einsum("bhpn,bhn->bhp", hs, ct.astype(jnp.float32))
+        return hs, yt
+
+    seq = tuple(jnp.swapaxes(t, 0, 1) for t in (xin, Bh, Ch, decay, dt))
+    h_final, y = jax.lax.scan(step, h0, seq)
+    return jnp.swapaxes(y, 0, 1), h_final
+
+
+def _ssd_chunked(xin, Bh, Ch, decay, dt, h0, Q):
+    """Block-parallel SSD (Mamba2's chunked algorithm, TPU-native):
+    within-chunk contributions become (Q x Q) masked matmuls on the MXU;
+    only a short cross-chunk scan (L/Q steps) over (B,h,P,N) states remains.
+    Exactly equal to `_ssd_scan` (log-space decays, all exponents <= 0).
+    """
+    B, L, H, P = xin.shape
+    N = Bh.shape[-1]
+    pad = (-L) % Q
+    if pad:
+        z2 = lambda t, cv=0.0: jnp.pad(
+            t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+            constant_values=cv)
+        xin, Bh, Ch, dt = z2(xin), z2(Bh), z2(Ch), z2(dt)
+        decay = z2(decay, 1.0)
+    C = xin.shape[1] // Q
+    shp = lambda t: t.reshape((B, C, Q) + t.shape[2:])
+    xin, Bh, Ch, dt = map(shp, (xin.astype(jnp.float32),
+                                Bh.astype(jnp.float32),
+                                Ch.astype(jnp.float32), dt))
+    la = jnp.log(jnp.maximum(shp(decay), 1e-30))              # (B,C,Q,H) <= 0
+    cl = jnp.cumsum(la, axis=2)                               # inclusive
+
+    # intra-chunk: y_t += sum_{s<=t} exp(cl_t - cl_s) dt_s (C_t.B_s) x_s
+    G = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh)
+    clh = jnp.swapaxes(cl, 2, 3)                              # (B,C,H,Q)
+    Dm = jnp.exp(clh[..., :, None] - clh[..., None, :])       # (B,C,H,Q,S)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dt_s = jnp.swapaxes(dt, 2, 3)[..., None, :]               # (B,C,H,1,S)
+    M = jnp.where(mask, G * Dm, 0.0) * dt_s
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", M, xin)
+
+    # per-chunk state delta: sum_s exp(cl_last - cl_s) dt_s x_s (x) B_s
+    T = jnp.exp(cl[:, :, -1:, :] - cl) * dt                   # (B,C,Q,H)
+    delta = jnp.einsum("bcqhp,bcqhn->bchpn", xin * T[..., None], Bh)
+    chunk_decay = jnp.exp(cl[:, :, -1, :])                    # (B,C,H)
+
+    # cross-chunk scan: h_{c+1} = chunk_decay_c * h_c + delta_c
+    def step(hs, inp):
+        dct, dl = inp                                          # (B,H), (B,H,P,N)
+        h_start = hs
+        hs = dct[..., None, None] * hs + dl
+        return hs, h_start
+
+    h_final, h_starts = jax.lax.scan(
+        step, h0, (jnp.swapaxes(chunk_decay, 0, 1),
+                   jnp.swapaxes(delta, 0, 1)))
+    h_starts = jnp.swapaxes(h_starts, 0, 1)                   # (B,C,H,P,N)
+
+    # inter-chunk: y_t += C_t . (exp(cl_t) h_start)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         Ch * jnp.exp(cl)[..., None], h_starts)
+    y = (y_intra + y_inter).reshape(B, C * Q, H, P)[:, :L]
+    return y, h_final
+
+
+def mamba2_apply(p, cfg, x, *, state=None, return_state=False, method="auto"):
+    """x (B,L,d) -> (y, new_state|None).
+
+    method: "scan" (exact sequential oracle; always used for decode),
+    "chunked" (block-parallel SSD — the TPU training path), or "auto".
+    state = {"conv": (B,W-1,conv_dim), "ssm": (B,H,P,N)} for streaming decode.
+    """
+    s: SSMConfig = cfg.ssm
+    B, L, d = x.shape
+    din, h, n, g = s.d_inner(d), s.nheads(d), s.d_state, s.ngroups
+    P = s.headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, conv_final = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, Bmat, Cmat = jnp.split(xbc, [din, din + g * n], axis=-1)
+    xin = xin.reshape(B, L, h, P)
+    Bmat = Bmat.reshape(B, L, g, n)
+    Cmat = Cmat.reshape(B, L, g, n)
+    # broadcast groups over heads (g == 1 typical)
+    rep = h // g
+    Bh = jnp.repeat(Bmat, rep, axis=2)                        # (B,L,h,n)
+    Ch = jnp.repeat(Cmat, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,h)
+    decay = jnp.exp(-jnp.exp(p["A_log"]) * dt)                   # (B,L,h)
+
+    h0 = (jnp.zeros((B, h, P, n), jnp.float32) if state is None
+          else state["ssm"].astype(jnp.float32))
+
+    if method == "auto":
+        method = "chunked" if L >= 2 * s.chunk else "scan"
+    if method == "chunked":
+        y, h_final = _ssd_chunked(xin, Bh, Ch, decay, dt, h0, s.chunk)
+    else:
+        y, h_final = _ssd_scan(xin, Bh, Ch, decay, dt, h0)
+    y = y + p["D"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, L, din).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"conv": conv_final, "ssm": h_final.astype(jnp.float32)}
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") — data-dependent per-channel decay, matrix-valued state
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(rng, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    k = d // h
+    r = jax.random.split(rng, 10)
+    std = d ** -0.5
+    lora = 64
+    return {
+        "mix": 0.5 * jnp.ones((5, d), jnp.float32),            # r,k,v,g,w lerps
+        "wr": normal_init(r[0], (d, d), std, dtype),
+        "wk": normal_init(r[1], (d, d), std, dtype),
+        "wv": normal_init(r[2], (d, d), std, dtype),
+        "wg": normal_init(r[3], (d, d), std, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),               # base decay (slow)
+        "w_lora_a": normal_init(r[4], (d, lora), std, jnp.float32),
+        "w_lora_b": normal_init(r[5], (lora, d), lora ** -0.5, jnp.float32),
+        "u": normal_init(r[6], (h, k), 0.5, jnp.float32),      # bonus
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+        "wo": normal_init(r[7], (d, d), std, dtype),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: y_t = x_{t-1}; first slot comes from ``prev`` (decode)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None] if prev.ndim == 2 else prev
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(p, x, h):
+    """Per-head layernorm on (B,L,d) viewed as (B,L,h,k)."""
+    B, L, d = x.shape
+    xh = x.reshape(B, L, h, d // h).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, L, d)
+    return y * p["scale"] + p["bias"]
+
+
+RWKV_CHUNK = 16  # f32-safe with the decay floor below (exp range <= e^80)
+RWKV_DECAY_FLOOR = 5.0  # log-decay clamp: w >= exp(-5) per step
+
+
+def _wkv_scan(r, key, val, w, u, s0):
+    """Exact sequential WKV recurrence (oracle + decode path).
+    r/key/val/w (B,L,h,k), u (h,k), s0 (B,h,k,k)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                   # (B,h,k) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        out = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32),
+                         s + u[:, :, None] * kv)
+        s = wt.astype(jnp.float32)[..., None] * s + kv
+        return s, out
+
+    seq = tuple(jnp.swapaxes(t, 0, 1) for t in (r, key, val, w))
+    s_final, out = jax.lax.scan(step, s0, seq)
+    return jnp.swapaxes(out, 0, 1), s_final
+
+
+def _wkv_chunked(r, key, val, w, u, s0, Q=RWKV_CHUNK):
+    """Block-parallel WKV (flash-linear-attention style) with per-channel
+    decays normalized to the chunk start: within-chunk terms become masked
+    (Q x Q) matmuls; only an L/Q cross-chunk scan over (B,h,k,k) states
+    remains. Exact vs `_wkv_scan` given the shared decay floor."""
+    B, L, H, K = r.shape
+    pad = (-L) % Q
+    if pad:
+        z = lambda t, cv=0.0: jnp.pad(
+            t, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=cv)
+        r, key, val = z(r), z(key), z(val)
+        w = z(w, 1.0)
+    C = r.shape[1] // Q
+    shp = lambda t: t.astype(jnp.float32).reshape(B, C, Q, H, K)
+    r, key, val, w = map(shp, (r, key, val, w))
+    lw = jnp.log(jnp.maximum(w, 1e-30))                        # <= 0
+    cl = jnp.cumsum(lw, axis=2)                                # inclusive
+    cl_prev = cl - lw                                          # exclusive
+
+    r_tilde = r * jnp.exp(cl_prev)                             # <= |r|
+    k_tilde = key * jnp.exp(-cl)                               # <= |k| e^(floor*Q)
+    M = jnp.einsum("bcqhk,bcshk->bchqs", r_tilde, k_tilde)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)              # strictly s < t
+    M = jnp.where(mask, M, 0.0)
+    y_intra = jnp.einsum("bchqs,bcshv->bcqhv", M, val)
+    bonus = jnp.sum(r * u * key, axis=-1, keepdims=True)       # (B,C,Q,H,1)
+    y_intra = y_intra + bonus * val
+
+    cl_last = cl[:, :, -1:, :, :]                              # (B,C,1,H,K)
+    k2 = key * jnp.exp(cl_last - cl)
+    delta = jnp.einsum("bcqhk,bcqhv->bchkv", k2, val)
+    chunk_decay = jnp.exp(cl_last[:, :, 0])                    # (B,C,H,K)
+
+    def step(s, inp):
+        dct, dl = inp                                          # (B,H,K),(B,H,K,V)
+        s_start = s
+        s = dct[..., None] * s + dl
+        return s, s_start
+
+    s_final, s_starts = jax.lax.scan(
+        step, s0, (jnp.swapaxes(chunk_decay, 0, 1),
+                   jnp.swapaxes(delta, 0, 1)))
+    s_starts = jnp.swapaxes(s_starts, 0, 1)                    # (B,C,H,K,V)
+    y_inter = jnp.einsum("bcqhk,bchkv->bcqhv", r_tilde, s_starts)
+    y = (y_intra + y_inter).reshape(B, C * Q, H, K)[:, :L]
+    return y, s_final
+
+
+def rwkv6_timemix(p, cfg, x, *, state=None, return_state=False, method="auto"):
+    """x (B,L,d) -> (y, state). state = {"prev": (B,d), "wkv": (B,h,k,k)}."""
+    B, L, d = x.shape
+    h = cfg.n_heads
+    k = d // h
+    prev = None if state is None else state["prev"]
+    xs = _shift(x, prev)
+    mix = p["mix"].astype(x.dtype)
+    lerp = lambda i: x + mix[i] * (xs - x)
+    r = (lerp(0) @ p["wr"]).reshape(B, L, h, k)
+    key = (lerp(1) @ p["wk"]).reshape(B, L, h, k)
+    val = (lerp(2) @ p["wv"]).reshape(B, L, h, k)
+    gate = jax.nn.silu(lerp(3) @ p["wg"])
+    # data-dependent decay (the Finch contribution); the decay floor keeps
+    # the chunked path's normalized exponents inside the f32 range
+    wx = lerp(4).astype(jnp.float32)
+    w = p["w0"] + jnp.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.minimum(jnp.exp(w), RWKV_DECAY_FLOOR))
+    w = w.reshape(B, L, h, k)                                  # in (0,1)
+
+    s0 = (jnp.zeros((B, h, k, k), jnp.float32) if state is None
+          else state["wkv"].astype(jnp.float32))
+    u = p["u"]
+
+    if getattr(cfg, "mixer_head_shard", False) and cfg.act_sharding:
+        # head-parallel recurrence: heads over `model`, sequence local — the
+        # cross-chunk scan then never iterates over a sharded dimension
+        from jax.sharding import PartitionSpec as P
+        spec = P(cfg.act_sharding[0], None, "model", None)
+        r, key, val, w = (jax.lax.with_sharding_constraint(t, spec)
+                          for t in (r, key, val, w))
+
+    if method == "auto":
+        method = "chunked" if L >= 2 * RWKV_CHUNK else "scan"
+    if method == "chunked":
+        out, s_final = _wkv_chunked(r, key, val, w, u, s0)
+    else:
+        out, s_final = _wkv_scan(r, key, val, w, u, s0)
+    out = out.reshape(B, L, d)
+    out = _group_norm(p["ln_x"], out, h).astype(x.dtype)
+    y = (out * gate) @ p["wo"]
+    if return_state:
+        return y, {"prev": x[:, -1], "wkv": s_final}
+    return y, None
+
+
+def rwkv6_channelmix_init(rng, cfg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    r = jax.random.split(rng, 3)
+    std = d ** -0.5
+    return {
+        "mix": 0.5 * jnp.ones((2, d), jnp.float32),            # k, r lerps
+        "wk": normal_init(r[0], (d, ff), std, dtype),
+        "wv": normal_init(r[1], (ff, d), ff ** -0.5, dtype),
+        "wr": normal_init(r[2], (d, d), std, dtype),
+    }
+
+
+def rwkv6_channelmix(p, cfg, x, *, state=None, return_state=False):
+    prev = None if state is None else state["prev"]
+    xs = _shift(x, prev)
+    mix = p["mix"].astype(x.dtype)
+    xk = x + mix[0] * (xs - x)
+    xr = x + mix[1] * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    y = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    if return_state:
+        return y, {"prev": x[:, -1]}
+    return y, None

@@ -1,0 +1,418 @@
+"""Composable transformer assembly: scan-over-layers LM covering all six
+assigned families behind one ``ModelConfig``:
+
+  dense  — GQA attention (+ optional sliding window / partial rotary)
+  moe    — GQA or MLA attention + routed/shared experts
+  ssm    — Mamba2 or RWKV6 mixers (attention-free)
+  hybrid — Mamba2 stack with a *weight-shared* full-attention block applied
+           every ``shared_attn_every`` layers (Zamba2)
+  audio  — encoder-only (non-causal), consumes stub frame embeddings
+  vlm    — decoder consuming [patch-embedding prefix | token embeddings]
+
+Three entry points (the shapes the dry-run lowers):
+  * :func:`apply`       — full-sequence logits (train / actor scoring)
+  * :func:`prefill`     — apply + populate the decode cache
+  * :func:`decode_step` — one token against a ``max_len`` cache
+
+Layers are scanned with stacked parameters (small HLO, O(1) compile in
+depth); the cache rides in the scan carry and is indexed per layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+from repro.models import ssm as ssm_lib
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng: jax.Array, cfg) -> dict:
+    dtype = cfg.p_dtype
+    r = jax.random.split(rng, 4)
+    p = {"pre_ln": ll.norm_init(cfg.norm, cfg.d_model, dtype),
+         "post_ln": ll.norm_init(cfg.norm, cfg.d_model, dtype)}
+    if cfg.mixer == "attn":
+        p["mixer"] = ll.gqa_init(r[0], cfg, dtype)
+    elif cfg.mixer == "mla":
+        p["mixer"] = ll.mla_init(r[0], cfg, dtype)
+    elif cfg.mixer == "mamba2":
+        p["mixer"] = ssm_lib.mamba2_init(r[0], cfg, dtype)
+    elif cfg.mixer == "rwkv6":
+        p["mixer"] = ssm_lib.rwkv6_init(r[0], cfg, dtype)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.mlp == "dense":
+        p["mlp"] = ll.mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    elif cfg.mlp == "moe":
+        p["mlp"] = ll.moe_init(r[1], cfg, dtype)
+    elif cfg.mlp == "rwkv_cm":
+        p["mlp"] = ssm_lib.rwkv6_channelmix_init(r[1], cfg, dtype)
+    elif cfg.mlp != "none":
+        raise ValueError(cfg.mlp)
+    return p
+
+
+def _shared_attn_init(rng: jax.Array, cfg) -> dict:
+    dtype = cfg.p_dtype
+    r = jax.random.split(rng, 2)
+    return {
+        "pre_ln": ll.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": ll.gqa_init(r[0], cfg, dtype),
+        "post_ln": ll.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": ll.mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init(cfg, rng: jax.Array) -> dict:
+    dtype = cfg.p_dtype
+    r = jax.random.split(rng, 4)
+    params: dict[str, Any] = {}
+    if cfg.input_mode in ("tokens", "mixed"):
+        params["embed"] = {"w": ll.normal_init(
+            r[0], (cfg.vocab_size, cfg.d_model), 0.02, dtype)}
+    layer_rngs = jax.random.split(r[1], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg))(layer_rngs)
+    if cfg.shared_attn_every:
+        params["shared_attn"] = _shared_attn_init(r[2], cfg)
+    params["final_ln"] = ll.norm_init(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": ll.normal_init(
+            r[3], (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, dtype)}
+    return params
+
+
+def param_count(params: Any) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    """Stacked-over-layers decode cache; structure depends on the mixer."""
+    L, B, S = cfg.n_layers, batch, max_len
+    adt = cfg.act_dtype
+    cache: dict[str, Any] = {}
+    if cfg.mixer == "attn":
+        s_alloc = S
+        if cfg.swa_ring_cache and cfg.sliding_window is not None:
+            s_alloc = min(S, cfg.sliding_window)   # O(window) ring
+        kv = (L, B, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(kv, adt)
+        cache["v"] = jnp.zeros(kv, adt)
+    elif cfg.mixer == "mla":
+        m = cfg.mla
+        cache["latent"] = jnp.zeros((L, B, S, m.kv_lora + m.rope_head_dim), adt)
+    elif cfg.mixer == "mamba2":
+        s = cfg.ssm
+        din = s.d_inner(cfg.d_model)
+        conv_dim = din + 2 * s.ngroups * s.d_state
+        cache["conv"] = jnp.zeros((L, B, s.conv_width - 1, conv_dim), adt)
+        cache["ssm"] = jnp.zeros(
+            (L, B, s.nheads(cfg.d_model), s.headdim, s.d_state), jnp.float32)
+    elif cfg.mixer == "rwkv6":
+        h = cfg.n_heads
+        k = cfg.d_model // h
+        cache["tm_prev"] = jnp.zeros((L, B, cfg.d_model), adt)
+        cache["wkv"] = jnp.zeros((L, B, h, k, k), jnp.float32)
+        cache["cm_prev"] = jnp.zeros((L, B, cfg.d_model), adt)
+    if cfg.shared_attn_every:
+        calls = cfg.n_layers // cfg.shared_attn_every
+        kv = (calls, B, S, cfg.n_kv_heads, cfg.head_dim)
+        cache["shared_k"] = jnp.zeros(kv, adt)
+        cache["shared_v"] = jnp.zeros(kv, adt)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _split_layer_cache(cfg, lcache):
+    """Layer-cache dict -> (mixer_cache, mlp_cache)."""
+    if lcache is None:
+        return None, None
+    if cfg.mixer == "attn":
+        return (lcache["k"], lcache["v"]), None
+    if cfg.mixer == "mla":
+        return lcache["latent"], None
+    if cfg.mixer == "mamba2":
+        return {"conv": lcache["conv"], "ssm": lcache["ssm"]}, None
+    if cfg.mixer == "rwkv6":
+        return ({"prev": lcache["tm_prev"], "wkv": lcache["wkv"]},
+                {"prev": lcache["cm_prev"]})
+    raise ValueError(cfg.mixer)
+
+
+def _merge_layer_cache(cfg, mixer_cache, mlp_cache) -> dict:
+    if cfg.mixer == "attn":
+        return {"k": mixer_cache[0], "v": mixer_cache[1]}
+    if cfg.mixer == "mla":
+        return {"latent": mixer_cache}
+    if cfg.mixer == "mamba2":
+        return dict(mixer_cache)
+    if cfg.mixer == "rwkv6":
+        return {"tm_prev": mixer_cache["prev"], "wkv": mixer_cache["wkv"],
+                "cm_prev": mlp_cache["prev"]}
+    raise ValueError(cfg.mixer)
+
+
+def _block(cfg, lp, x, positions, lcache, cache_len, impl):
+    """One transformer block. Returns (x, new_layer_cache, aux_loss)."""
+    mixer_cache, mlp_cache = _split_layer_cache(cfg, lcache)
+    h = ll.apply_norm(cfg.norm, lp["pre_ln"], x)
+    if cfg.mixer == "attn":
+        y, mixer_cache = ll.gqa_apply(
+            lp["mixer"], cfg, h, positions=positions, kv_cache=mixer_cache,
+            cache_len=cache_len, impl=impl, causal=cfg.causal)
+    elif cfg.mixer == "mla":
+        y, mixer_cache = ll.mla_apply(
+            lp["mixer"], cfg, h, positions=positions, latent_cache=mixer_cache,
+            cache_len=cache_len, impl=impl, causal=cfg.causal)
+    elif cfg.mixer == "mamba2":
+        y, mixer_cache = ssm_lib.mamba2_apply(
+            lp["mixer"], cfg, h, state=mixer_cache,
+            return_state=lcache is not None)
+    else:  # rwkv6
+        y, mixer_cache = ssm_lib.rwkv6_timemix(
+            lp["mixer"], cfg, h, state=mixer_cache,
+            return_state=lcache is not None)
+    x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.mlp != "none":  # Zamba2 mamba blocks carry no per-layer MLP
+        h = ll.apply_norm(cfg.norm, lp["post_ln"], x)
+        if cfg.mlp == "dense":
+            y = ll.mlp_apply(lp["mlp"], h, cfg.act)
+        elif cfg.mlp == "moe":
+            y, aux = ll.moe_apply(lp["mlp"], cfg, h)
+        else:  # rwkv_cm
+            y, mlp_cache = ssm_lib.rwkv6_channelmix(
+                lp["mlp"], cfg, h, state=mlp_cache, return_state=lcache is not None)
+        x = x + y
+    new_cache = None if lcache is None else _merge_layer_cache(cfg, mixer_cache, mlp_cache)
+    return x, new_cache, aux
+
+
+def _shared_block(cfg, sp, x, positions, kv_cache, cache_len, impl):
+    """Zamba2's weight-shared full-attention block (one param set, applied at
+    every ``shared_attn_every``-th layer)."""
+    h = ll.apply_norm(cfg.norm, sp["pre_ln"], x)
+    y, kv_cache = ll.gqa_apply(sp["attn"], cfg, h, positions=positions,
+                               kv_cache=kv_cache, cache_len=cache_len,
+                               impl=impl, causal=cfg.causal)
+    x = x + y
+    h = ll.apply_norm(cfg.norm, sp["post_ln"], x)
+    x = x + ll.mlp_apply(sp["mlp"], h, cfg.act)
+    return x, kv_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward core
+# ---------------------------------------------------------------------------
+
+def _constrain(x, spec):
+    """Residual-stream sharding constraint (needs an active mesh context)."""
+    if spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _forward(cfg, params, x, positions, cache=None, cache_len=None, impl=None):
+    """Layer stack. Returns (hidden, new_cache, aux_total).
+
+    ``cfg.scan_layers=True`` (default): lax.scan over stacked layer params —
+    O(1) HLO in depth, the production training path. ``False``: unrolled
+    python loop — used by the dry-run so XLA's cost analysis and collective
+    accounting see every layer (while-loop bodies are counted once).
+    """
+    impl = impl or cfg.attn_impl
+    has_cache = cache is not None
+    shared = params.get("shared_attn")
+    every = cfg.shared_attn_every
+
+    layer_cache = None
+    shared_cache = None
+    if has_cache:
+        layer_cache = {k: v for k, v in cache.items()
+                       if not k.startswith("shared_")}
+        if every:
+            shared_cache = (cache["shared_k"], cache["shared_v"])
+
+    if not cfg.scan_layers:
+        return _forward_unrolled(cfg, params, x, positions, layer_cache,
+                                 shared_cache, cache_len, impl, shared, every,
+                                 has_cache)
+
+    def body(carry, xs):
+        x, lcache_all, sh_cache, aux = carry
+        lp, idx = xs
+        lcache = (None if not has_cache else jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+            lcache_all))
+        x, new_lcache, a = _block(cfg, lp, x, positions, lcache, cache_len, impl)
+        if has_cache:
+            lcache_all = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), lcache_all, new_lcache)
+        if shared is not None:
+            def with_shared(operands):
+                x, sh = operands
+                s_idx = idx // every
+                if sh is not None:
+                    sk = jax.lax.dynamic_index_in_dim(sh[0], s_idx, 0, False)
+                    sv = jax.lax.dynamic_index_in_dim(sh[1], s_idx, 0, False)
+                    x, (nk, nv) = _shared_block(cfg, shared, x, positions,
+                                                (sk, sv), cache_len, impl)
+                    sh = (jax.lax.dynamic_update_index_in_dim(sh[0], nk, s_idx, 0),
+                          jax.lax.dynamic_update_index_in_dim(sh[1], nv, s_idx, 0))
+                else:
+                    x, _ = _shared_block(cfg, shared, x, positions, None,
+                                         cache_len, impl)
+                return x, sh
+
+            def without_shared(operands):
+                return operands
+
+            x, sh_cache = jax.lax.cond(
+                (idx + 1) % every == 0, with_shared, without_shared,
+                (x, sh_cache))
+        return (x, lcache_all, sh_cache, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, layer_cache, shared_cache, aux), _ = jax.lax.scan(
+        body_fn, (x, layer_cache, shared_cache,
+                  jnp.zeros((), jnp.float32)),
+        (params["layers"], idxs))
+
+    new_cache = None
+    if has_cache:
+        new_cache = dict(layer_cache)
+        if every:
+            new_cache["shared_k"], new_cache["shared_v"] = shared_cache
+    return x, new_cache, aux
+
+
+def _forward_unrolled(cfg, params, x, positions, layer_cache, shared_cache,
+                      cache_len, impl, shared, every, has_cache):
+    """Python loop over layers (static indices); per-layer remat when
+    cfg.remat; residual-stream sharding constraint per layer."""
+    aux = jnp.zeros((), jnp.float32)
+
+    def one_layer(x, lp, lcache, sh_slice):
+        x = _constrain(x, cfg.act_sharding)
+        x, new_lcache, a = _block(cfg, lp, x, positions, lcache, cache_len, impl)
+        new_sh = None
+        if sh_slice is not None:
+            x, new_sh = _shared_block(cfg, shared, x, positions, sh_slice,
+                                      cache_len, impl)
+        return x, new_lcache, a, new_sh
+
+    layer_fn = jax.checkpoint(one_layer) if cfg.remat else one_layer
+
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        lcache = (None if not has_cache else
+                  jax.tree.map(lambda c: c[i], layer_cache))
+        applies_shared = shared is not None and (i + 1) % every == 0
+        sh_slice = None
+        s_idx = i // every if every else 0
+        if applies_shared and shared_cache is not None:
+            sh_slice = (shared_cache[0][s_idx], shared_cache[1][s_idx])
+        if applies_shared and shared_cache is None:
+            # train path: shared block without cache
+            def layer_with_shared(x, lp, lcache):
+                x = _constrain(x, cfg.act_sharding)
+                x, new_lcache, a = _block(cfg, lp, x, positions, lcache,
+                                          cache_len, impl)
+                x, _ = _shared_block(cfg, shared, x, positions, None,
+                                     cache_len, impl)
+                return x, new_lcache, a
+            fn = jax.checkpoint(layer_with_shared) if cfg.remat else layer_with_shared
+            x, new_lcache, a = fn(x, lp, lcache)
+            new_sh = None
+        else:
+            x, new_lcache, a, new_sh = layer_fn(x, lp, lcache, sh_slice)
+        aux = aux + a
+        if has_cache:
+            layer_cache = jax.tree.map(
+                lambda c, n: c.at[i].set(n.astype(c.dtype)),
+                layer_cache, new_lcache)
+        if new_sh is not None:
+            shared_cache = (shared_cache[0].at[s_idx].set(new_sh[0]),
+                            shared_cache[1].at[s_idx].set(new_sh[1]))
+
+    new_cache = None
+    if has_cache:
+        new_cache = dict(layer_cache)
+        if every:
+            new_cache["shared_k"], new_cache["shared_v"] = shared_cache
+    return x, new_cache, aux
+
+
+def _embed_inputs(cfg, params, tokens, embeddings, prefix_embeddings):
+    if cfg.input_mode == "embeddings":
+        return embeddings.astype(cfg.act_dtype)
+    x = params["embed"]["w"][tokens].astype(cfg.act_dtype)
+    if cfg.input_mode == "mixed" and prefix_embeddings is not None:
+        x = jnp.concatenate(
+            [prefix_embeddings.astype(cfg.act_dtype), x], axis=1)
+    return x
+
+
+def _head(cfg, params, x):
+    ln = ll.apply_norm(cfg.norm, params["final_ln"], x)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"])
+    return jnp.einsum("bsd,dv->bsv", ln, w.astype(ln.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def apply(params, tokens=None, *, cfg, embeddings=None, prefix_embeddings=None,
+          return_aux=False, impl=None):
+    """Full-sequence logits (training / actor-side priority scoring)."""
+    x = _embed_inputs(cfg, params, tokens, embeddings, prefix_embeddings)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _forward(cfg, params, x, positions, impl=impl)
+    logits = _head(cfg, params, x)
+    return (logits, aux) if return_aux else logits
+
+
+def prefill(params, tokens=None, *, cfg, cache, embeddings=None,
+            prefix_embeddings=None, impl=None):
+    """Populate the decode cache with a prompt; returns (logits, cache)."""
+    x = _embed_inputs(cfg, params, tokens, embeddings, prefix_embeddings)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, cache, _ = _forward(cfg, params, x, positions, cache=cache,
+                           cache_len=jnp.asarray(S), impl=impl)
+    return _head(cfg, params, x), cache
+
+
+def decode_step(params, token, pos, *, cfg, cache, impl=None):
+    """One-token step: token (B, 1) int32; pos is either a scalar int32
+    (all rows at the same position) or a (B,) vector of per-row positions
+    (continuous batching — rows decode at independent offsets)."""
+    x = params["embed"]["w"][token].astype(cfg.act_dtype) \
+        if cfg.input_mode != "embeddings" else token
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        positions = pos[:, None]                   # (B, 1) per-row
+    else:
+        positions = jnp.full((1,), pos, jnp.int32)
+    x, cache, _ = _forward(cfg, params, x, positions, cache=cache,
+                           cache_len=pos + 1, impl=impl)
+    return _head(cfg, params, x), cache

@@ -1,0 +1,136 @@
+"""Optimizers, gradient clipping and target-network machinery — from scratch.
+
+The paper uses Centered RMSProp (lr 0.00025/4, decay 0.95, eps 1.5e-7, no
+momentum, grad-norm clip 40) for Ape-X DQN (Appendix C) and Adam (lr 1e-4)
+for Ape-X DPG (Appendix D). The LLM-scale sequence-replay configs use AdamW.
+
+API mirrors the usual GradientTransformation pair: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; apply with
+:func:`apply_updates`. All transforms are pure pytree maps, so they shard
+exactly like the parameters (FSDP over ``data``, TP over ``model``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    """Paper Appendix C: gradient norms are clipped to 40."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# Centered RMSProp (Appendix C).
+# ---------------------------------------------------------------------------
+
+class RMSPropState(NamedTuple):
+    mean_sq: Any
+    mean: Any
+
+
+def centered_rmsprop(
+    learning_rate: float = 0.00025 / 4,
+    decay: float = 0.95,
+    eps: float = 1.5e-7,
+) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return RMSPropState(mean_sq=z, mean=jax.tree.map(jnp.copy, z))
+
+    def update(grads, state, params=None):
+        del params
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mean_sq = jax.tree.map(lambda ms, g: decay * ms + (1 - decay) * g * g,
+                               state.mean_sq, g32)
+        mean = jax.tree.map(lambda m, g: decay * m + (1 - decay) * g,
+                            state.mean, g32)
+        updates = jax.tree.map(
+            lambda g, ms, m: -learning_rate * g / jnp.sqrt(ms - m * m + eps),
+            g32, mean_sq, mean,
+        )
+        return updates, RMSPropState(mean_sq, mean)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW.
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(
+    learning_rate: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=z,
+                         nu=jax.tree.map(jnp.copy, z))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -learning_rate * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - learning_rate * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate: float = 3e-4, weight_decay: float = 0.1, **kw) -> Optimizer:
+    return adam(learning_rate=learning_rate, weight_decay=weight_decay, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Target networks (slow-moving copies; Appendix C: copy every 2500 batches,
+# Appendix D: every 100 batches).
+# ---------------------------------------------------------------------------
+
+def periodic_target_update(params: Any, target_params: Any, step: jax.Array,
+                           period: int) -> Any:
+    """Hard copy every ``period`` learner steps, identity otherwise."""
+    do_copy = (step % period) == 0
+    return jax.tree.map(
+        lambda p, t: jnp.where(do_copy, p.astype(t.dtype), t), params, target_params
+    )

@@ -1,0 +1,142 @@
+"""End-to-end Ape-X behaviour: DQN and DPG presets run, learn, stay finite;
+the distributed (shard_map) path matches the structure of the single-shard
+path; staleness and ablation knobs (Fig. 6/7) work."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import apex_dpg, apex_dqn
+from repro.core import apex
+
+
+def run_preset(preset, iters, seed=0):
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(
+        preset.apex, preset.env, preset.agent, optimizer)
+    state = init_fn(jax.random.key(seed))
+    metrics = None
+    for _ in range(iters):
+        state, metrics = step_fn(state)
+    return state, metrics
+
+
+def test_apex_dqn_reduced_runs_and_learns():
+    preset = apex_dqn.reduced()
+    state, metrics = run_preset(preset, 30)
+    assert int(state.learner_step) > 0
+    assert int(state.replay.size) > 0
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # greedy lane should be collecting reward by now on the short chain
+    assert float(metrics["frames"]) == 30 * 16 * 24
+
+
+def test_apex_dqn_improves_over_training():
+    """The mean episode return on ChainWorld improves with training — the
+    paper's core claim at toy scale (prioritized distributed replay learns)."""
+    preset = apex_dqn.reduced()
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(
+        preset.apex, preset.env, preset.agent, optimizer)
+    state = init_fn(jax.random.key(3))
+    early, late = [], []
+    for it in range(120):
+        state, m = step_fn(state)
+        r = float(m["mean_ep_return"])
+        if not np.isnan(r):
+            (early if it < 30 else late).append(r)
+    assert np.mean(late[-30:]) > np.mean(early)
+
+
+def test_apex_dpg_reduced_runs():
+    preset = apex_dpg.reduced()
+    state, metrics = run_preset(preset, 20)
+    assert int(state.learner_step) > 0
+    assert bool(jnp.isfinite(metrics["critic_loss"]))
+    assert bool(jnp.isfinite(metrics["policy_loss"]))
+
+
+def test_param_staleness_respected():
+    """actor_params must lag params by up to param_sync_period iterations."""
+    preset = apex_dqn.reduced()
+    cfg = dataclasses.replace(preset.apex, param_sync_period=4,
+                              learner_steps_per_iter=1)
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(cfg, preset.env, preset.agent,
+                                          optimizer)
+    state = init_fn(jax.random.key(0))
+    # warm up past min_fill so the learner actually updates params
+    for _ in range(10):
+        state, _ = step_fn(state)
+    # iteration 10 just ran; iterations 11, 12, 13 don't sync (12 % 4 == 0
+    # does), so check lag exists at some point within a period
+    lags = []
+    for _ in range(4):
+        state, _ = step_fn(state)
+        d = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(state.actor_params)))
+        lags.append(d)
+    assert max(lags) > 0  # stale at least part of the period
+
+
+def test_replicate_k_ablation_fills_replay_faster():
+    """Fig. 6 knob: k-fold duplication multiplies ingest volume."""
+    preset = apex_dqn.reduced()
+    base = dataclasses.replace(preset.apex, learner_steps_per_iter=0)
+    dup = dataclasses.replace(base, replicate_k=4)
+    optimizer = preset.make_optimizer()
+    for cfg, expect_mult in ((base, 1), (dup, 4)):
+        init_fn, step_fn = apex.make_train_fn(cfg, preset.env, preset.agent,
+                                              optimizer)
+        state = init_fn(jax.random.key(0))
+        state, _ = step_fn(state)
+        added = int(state.replay.total_added)
+        assert added == expect_mult * cfg.lanes_per_shard * cfg.window
+
+
+def test_fixed_eps_set_mode():
+    """Fig. 7 knob: fixed 6-value eps set instead of the full ladder."""
+    preset = apex_dqn.reduced()
+    cfg = dataclasses.replace(preset.apex, eps_mode="fixed_set")
+    eps = np.asarray(apex.lane_epsilons(cfg, 0))
+    assert len(set(np.round(eps, 6).tolist())) <= 6
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(cfg, preset.env, preset.agent,
+                                          optimizer)
+    state = init_fn(jax.random.key(0))
+    state, m = step_fn(state)
+    assert bool(jnp.isfinite(m["mean_initial_priority"]))
+
+
+def test_shard_map_single_device_mesh():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    preset = apex_dqn.reduced(num_shards=1)
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(
+        preset.apex, preset.env, preset.agent, optimizer, mesh=mesh)
+    state = init_fn(jax.random.key(0))
+    for _ in range(5):
+        state, metrics = step_fn(state)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state.frames[0]) == 5 * 16 * 24
+
+
+def test_compressed_replay_learns():
+    """uint8 obs codec (the paper's PNG analogue): the loop runs and learns
+    with compressed storage; decode fuses into the learner forward."""
+    preset = apex_dqn.reduced()
+    cfg = dataclasses.replace(preset.apex, compress_obs=True)
+    optimizer = preset.make_optimizer()
+    init_fn, step_fn = apex.make_train_fn(cfg, preset.env, preset.agent,
+                                          optimizer)
+    state = init_fn(jax.random.key(0))
+    for _ in range(8):
+        state, m = step_fn(state)
+    assert bool(jnp.isfinite(m["loss"]))
+    # storage really is uint8
+    assert state.replay.storage["obs"]["data"].dtype == jnp.uint8

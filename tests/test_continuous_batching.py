@@ -1,0 +1,79 @@
+"""Continuous batching: per-row decode positions. Rows decode at independent
+offsets within one batched step and must match the full forward pass at each
+row's own position."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import ContinuousBatcher
+from repro.models import registry, transformer
+
+ARCHS = ["llama3.2-1b", "deepseek-v2-236b", "h2o-danube-1.8b", "stablelm-1.6b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_ragged_decode_matches_full(arch):
+    cfg = registry.get_config(arch).reduced()
+    rng = jax.random.key(0)
+    params = transformer.init(cfg, rng)
+    B, S = 3, 18
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    full = transformer.apply(params, toks, cfg=cfg)
+    cache = transformer.init_cache(cfg, B, S)
+    # rows staggered: row b starts decoding from position 0 but with a lag of
+    # 2*b steps — at any instant the batch holds three different positions
+    lags = np.array([0, 2, 4])
+    pos = jnp.asarray(-lags, jnp.int32)  # negative = not yet started
+    errs = []
+    for step in range(S + int(lags.max())):
+        cur = np.asarray(pos)
+        active = (cur >= 0) & (cur < S)
+        safe = np.clip(cur, 0, S - 1)
+        tok = toks[jnp.arange(B), jnp.asarray(safe)][:, None]
+        step_pos = jnp.asarray(np.maximum(cur, 0), jnp.int32)
+        logits, cache = transformer.decode_step(params, tok, step_pos,
+                                                cfg=cfg, cache=cache)
+        for b in range(B):
+            if active[b]:
+                errs.append(float(jnp.max(
+                    jnp.abs(logits[b, 0] - full[b, cur[b]]))))
+        pos = pos + 1
+    assert max(errs) < 5e-3
+
+
+def test_continuous_batcher_serves_ragged_requests():
+    """The batcher admits requests as slots free and completes all of them."""
+    cfg = registry.get_config("llama3.2-1b").reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    rng = jax.random.key(1)
+    requests = [jax.random.randint(jax.random.fold_in(rng, i),
+                                   (np.random.RandomState(i).randint(3, 9),),
+                                   0, cfg.vocab_size)
+                for i in range(7)]
+    batcher = ContinuousBatcher(cfg, params, slots=3, max_len=32,
+                                max_new_tokens=5)
+    results = batcher.run([np.asarray(r) for r in requests])
+    assert len(results) == 7
+    for i, out in results.items():
+        assert 1 <= len(out) <= 5
+        assert all(0 <= t < cfg.vocab_size for t in out)
+
+
+def test_continuous_batcher_ssm_state_isolation():
+    """Slot reuse must not leak SSM recurrent state across requests: serving
+    the same prompt as request #1 and as a slot-reused later request must
+    produce identical outputs."""
+    cfg = registry.get_config("rwkv6-1.6b").reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    rng = np.random.RandomState(3)
+    probe = rng.randint(0, cfg.vocab_size, size=6)
+    fillers = [rng.randint(0, cfg.vocab_size, size=5) for _ in range(2)]
+    # run A: probe alone
+    b1 = ContinuousBatcher(cfg, params, slots=1, max_len=32, max_new_tokens=4)
+    solo = b1.run([probe])[0]
+    # run B: two fillers first on one slot, probe reuses the slot afterwards
+    b2 = ContinuousBatcher(cfg, params, slots=1, max_len=32, max_new_tokens=4)
+    out = b2.run([fillers[0], fillers[1], probe])
+    assert out[2] == solo

@@ -1,0 +1,52 @@
+"""Priority math: eps-ladder, IS weights, TD errors (paper §4.1, Schaul'16)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import priority as prio
+
+
+def test_epsilon_ladder_paper_values():
+    """eps_i = 0.4^(1 + 7i/(N-1)): first actor 0.4, last 0.4^8."""
+    eps = np.asarray(prio.epsilon_ladder(360))
+    assert eps[0] == pytest.approx(0.4)
+    assert eps[-1] == pytest.approx(0.4 ** 8, rel=1e-5)
+    assert (np.diff(eps) < 0).all()  # monotone: lane 0 explores most
+
+
+def test_epsilon_ladder_single_actor():
+    assert float(prio.epsilon_ladder(1)[0]) == pytest.approx(0.4)
+
+
+def test_fixed_epsilon_set_tiles():
+    eps = np.asarray(prio.fixed_epsilon_set(12))
+    assert len(set(eps.tolist())) == 6
+    np.testing.assert_allclose(eps[:6], eps[6:])
+
+
+def test_to_leaf_applies_exponent_and_floor():
+    leaf = prio.to_leaf(jnp.asarray([0.0, 1.0, 4.0]), alpha=0.5)
+    np.testing.assert_allclose(
+        np.asarray(leaf), [prio.MIN_PRIORITY ** 0.5, 1.0, 2.0], rtol=1e-5)
+
+
+def test_importance_weights_shape_and_norm():
+    leaf = jnp.asarray([1.0, 2.0, 4.0])
+    w = prio.importance_weights(leaf, jnp.asarray(7.0), jnp.asarray(100))
+    w = np.asarray(w)
+    assert w.max() == pytest.approx(1.0)
+    # lower-probability samples get larger weights
+    assert w[0] > w[1] > w[2]
+
+
+def test_importance_weights_beta_zero_uniform():
+    leaf = jnp.asarray([1.0, 5.0, 0.1])
+    w = prio.importance_weights(leaf, jnp.asarray(6.1), jnp.asarray(10), beta=0.0)
+    np.testing.assert_allclose(np.asarray(w), 1.0)
+
+
+def test_td_error_nstep():
+    d = prio.td_error_nstep(jnp.asarray(1.0), jnp.asarray(2.0),
+                            jnp.asarray(0.9), jnp.asarray(3.0))
+    assert float(d) == pytest.approx(2.0 + 0.9 * 3.0 - 1.0)

@@ -1,0 +1,119 @@
+"""Prioritized replay behaviour: adds, sampling, priority updates, both
+eviction strategies, IS weights (paper §3/§4.1/Appendix D/F)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import priority as prio, replay, sumtree
+
+CFG = replay.ReplayConfig(capacity=64, soft_capacity=48, min_fill=4)
+
+
+def make_items(n, base=0):
+    return {"x": jnp.arange(base, base + n, dtype=jnp.float32),
+            "y": jnp.ones((n, 3), jnp.int32)}
+
+
+def test_add_and_sample_roundtrip():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_fifo(CFG, state, make_items(10), jnp.ones(10))
+    assert int(state.size) == 10
+    batch = replay.sample(CFG, state, jax.random.key(0), 8)
+    assert batch.items["x"].shape == (8,)
+    assert np.all(np.asarray(batch.indices) < 10)
+    assert np.all(np.asarray(batch.is_weights) > 0)
+    assert np.all(np.asarray(batch.is_weights) <= 1.0 + 1e-6)
+
+
+def test_add_respects_valid_mask():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    valid = jnp.array([True, False, True, False])
+    state = replay.add_fifo(CFG, state, make_items(4), jnp.ones(4), valid)
+    assert int(state.size) == 2
+    assert int(state.total_added) == 2
+
+
+def test_set_priorities_changes_distribution():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_fifo(CFG, state, make_items(16), jnp.full(16, 0.01))
+    state = replay.set_priorities(CFG, state, jnp.array([5]), jnp.array([100.0]))
+    idx = np.asarray(replay.sample(CFG, state, jax.random.key(1), 64).indices)
+    assert (idx == 5).mean() > 0.5  # slot 5 dominates the mass
+
+
+def test_fifo_eviction_removes_oldest():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_fifo(CFG, state, make_items(60), jnp.ones(60))
+    assert int(state.size) == 60
+    state = replay.evict_fifo(CFG, state)
+    assert int(state.size) == CFG.soft_cap
+    # oldest 12 slots zeroed
+    leaves = np.asarray(sumtree.leaves(state.tree))
+    assert (leaves[:12] == 0).all()
+    assert (leaves[12:60] > 0).all()
+
+
+def test_prioritized_eviction_prefers_low_priority():
+    cfg = replay.ReplayConfig(capacity=64, soft_capacity=32, min_fill=4)
+    state = replay.init(cfg, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    # half low priority, half high
+    prios = jnp.concatenate([jnp.full(24, 0.01), jnp.full(24, 10.0)])
+    state = replay.add_alloc(cfg, state, make_items(48), prios)
+    before = np.asarray(sumtree.leaves(state.tree)) > 0
+    state = replay.evict_prioritized(cfg, state, jax.random.key(0), 16)
+    after = np.asarray(sumtree.leaves(state.tree)) > 0
+    evicted = before & ~after
+    # alpha_evict < 0 => low-priority slots evicted far more often
+    assert evicted[:24].sum() > evicted[24:48].sum()
+
+
+def test_alloc_reuses_freed_slots():
+    cfg = replay.ReplayConfig(capacity=16, soft_capacity=12, min_fill=1)
+    state = replay.init(cfg, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_alloc(cfg, state, make_items(16), jnp.ones(16))
+    assert int(state.size) == 16
+    state = replay.evict_prioritized(cfg, state, jax.random.key(0), 8)
+    freed = 16 - int(state.size)
+    assert freed > 0
+    state2 = replay.add_alloc(cfg, state, make_items(freed, base=100), jnp.ones(freed))
+    assert int(state2.size) == 16
+
+
+def test_is_weights_uniform_priorities_are_one():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_fifo(CFG, state, make_items(32), jnp.ones(32))
+    w = replay.sample(CFG, state, jax.random.key(2), 16).is_weights
+    np.testing.assert_allclose(np.asarray(w), 1.0, rtol=1e-5)
+
+
+def test_min_fill_gate():
+    state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    assert not bool(replay.can_sample(CFG, state))
+    state = replay.add_fifo(CFG, state, make_items(4), jnp.ones(4))
+    assert bool(replay.can_sample(CFG, state))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_adds=st.integers(1, 5),
+    batch=st.integers(1, 16),
+    seed=st.integers(0, 1000),
+)
+def test_size_and_mass_invariants(n_adds, batch, seed):
+    """size == live leaves; total == sum of leaves; sampled idx always live."""
+    cfg = replay.ReplayConfig(capacity=128, soft_capacity=96, min_fill=1)
+    state = replay.init(cfg, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    rng = np.random.RandomState(seed)
+    for i in range(n_adds):
+        pr = jnp.asarray(rng.uniform(0.1, 5.0, batch), jnp.float32)
+        state = replay.add_fifo(cfg, state, make_items(batch, base=i * 100), pr)
+        state = replay.evict_fifo(cfg, state)
+    leaves = np.asarray(sumtree.leaves(state.tree))
+    assert int(state.size) == int((leaves > 0).sum())
+    assert float(sumtree.total(state.tree)) == pytest.approx(leaves.sum(), rel=1e-4)
+    if replay.can_sample(cfg, state):
+        idx = np.asarray(replay.sample(cfg, state, jax.random.key(seed), 8).indices)
+        assert (leaves[idx] > 0).all()

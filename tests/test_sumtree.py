@@ -1,0 +1,97 @@
+"""Sum-tree unit + property tests (the replay's sampling core)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sumtree
+
+
+def test_init_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        sumtree.init(48)
+    with pytest.raises(ValueError):
+        sumtree.rebuild(jnp.ones(3))
+
+
+def test_write_and_total():
+    tree = sumtree.init(8)
+    tree = sumtree.write(tree, jnp.array([0, 3, 7]), jnp.array([1.0, 2.0, 3.0]))
+    assert float(sumtree.total(tree)) == pytest.approx(6.0)
+    np.testing.assert_allclose(
+        np.asarray(sumtree.leaves(tree)),
+        [1.0, 0, 0, 2.0, 0, 0, 0, 3.0])
+
+
+def test_write_overwrites():
+    tree = sumtree.init(4)
+    tree = sumtree.write(tree, jnp.array([1]), jnp.array([5.0]))
+    tree = sumtree.write(tree, jnp.array([1]), jnp.array([2.0]))
+    assert float(sumtree.total(tree)) == pytest.approx(2.0)
+
+
+def test_sample_deterministic_regions():
+    """Offsets map to leaves by inverse CDF: leaf k covers
+    [prefix(k), prefix(k)+p_k)."""
+    tree = sumtree.rebuild(jnp.array([1.0, 2.0, 0.0, 3.0]))
+    u = jnp.array([0.0, 0.5, 1.0, 2.5, 3.0, 5.9])
+    idx = sumtree.sample(tree, u)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 0, 1, 1, 3, 3])
+
+
+def test_zero_mass_leaf_never_sampled():
+    leaves = jnp.array([1.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+    tree = sumtree.rebuild(leaves)
+    idx = sumtree.sample_stratified(tree, jax.random.key(0), 512)
+    assert set(np.asarray(idx).tolist()) <= {0, 3, 5, 7}
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    vals=st.lists(st.floats(min_value=0.0, max_value=100.0,
+                            allow_nan=False, width=32),
+                  min_size=16, max_size=16),
+)
+def test_sum_invariant_property(vals):
+    """Every internal node equals the sum of its children after writes."""
+    tree = np.asarray(sumtree.rebuild(jnp.asarray(vals, jnp.float32)))
+    for i in range(1, 16):
+        assert tree[i] == pytest.approx(tree[2 * i] + tree[2 * i + 1], abs=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    hot=st.integers(0, 31),
+)
+def test_sampling_frequency_tracks_priority(seed, hot):
+    """A leaf holding 50%% of the mass is sampled ~50%% of the time."""
+    leaves = np.ones(32, np.float32)
+    leaves[hot] = 31.0  # half the total mass
+    tree = sumtree.rebuild(jnp.asarray(leaves))
+    idx = np.asarray(sumtree.sample_stratified(tree, jax.random.key(seed), 256))
+    frac = (idx == hot).mean()
+    assert 0.35 <= frac <= 0.65
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_sample_matches_manual_cdf(data):
+    n = 8
+    vals = data.draw(st.lists(
+        st.floats(min_value=0.0078125, max_value=10.0, allow_nan=False,
+                  width=32),
+        min_size=n, max_size=n))
+    u_frac = data.draw(st.floats(min_value=0.0, max_value=0.999,
+                                 allow_nan=False))
+    leaves = np.asarray(vals, np.float32)
+    tree = sumtree.rebuild(jnp.asarray(leaves))
+    total = leaves.sum()
+    u = np.float32(u_frac) * total
+    got = int(sumtree.sample(tree, jnp.asarray([u]))[0])
+    # manual inverse CDF with the same f32 arithmetic tolerance
+    cdf = np.cumsum(leaves)
+    expect = int(np.searchsorted(cdf, u, side="right"))
+    assert abs(got - expect) <= 1 or leaves[got] > 0
