@@ -1,0 +1,138 @@
+"""§4.1 / Table 1 — decoupled actor/learner throughput.
+
+The paper's actors generate ~12.5K transitions/s while the learner consumes
+~9.7K/s (ratio ~1.29) — rates that only *exist* as separate numbers because
+acting and learning are decoupled. This bench measures both rates for:
+
+* the synchronous ``core/apex.py`` driver (rates are locked together by the
+  alternation: T lanes·window generated and learner_steps·batch consumed per
+  iteration — one shared wall clock), and
+* the async ``repro.runtime`` (actor threads + replay service + learner
+  thread, each on its own clock).
+
+Emitted rows (benchmarks/common.py CSV convention):
+  async_throughput/sync_{actor,learner,combined}_tps
+  async_throughput/async_{actor,learner,combined}_tps
+  async_throughput/async_generate_consume_ratio
+  async_throughput/async_vs_sync_combined   <- must be > 1: decoupling wins
+  async_throughput/async_{actor_blocked,learner_starved}
+
+``--smoke`` shrinks everything to a CI-sized run (<~1 min on 2 cores);
+``--check`` exits nonzero when async does not beat sync (used by CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit, run_apex  # noqa: E402
+from repro.configs import apex_dqn  # noqa: E402
+from repro.core import apex, replay as replay_lib  # noqa: E402
+from repro.core.agents import DQNAgent  # noqa: E402
+from repro.envs.synthetic import ChainWorld  # noqa: E402
+from repro.models.qnetworks import DuelingDQN  # noqa: E402
+from repro.runtime import AsyncConfig, run_async  # noqa: E402
+
+
+def bench_preset(hidden: int = 512, lanes: int = 64, rollout: int = 32,
+                 batch: int = 512) -> apex_dqn.ApexDQNPreset:
+    """Benchmark geometry: heavy enough that XLA kernel time (GIL released)
+    dominates Python dispatch. On a dispatch-bound toy config the fused
+    synchronous graph wins by construction and the comparison says nothing
+    about the architecture — this preset keeps both runtimes compute-bound,
+    which is the regime the paper's throughput numbers live in (§4.1)."""
+    env = ChainWorld(length=16, max_steps=64)
+    agent = DQNAgent(net=DuelingDQN(num_actions=env.num_actions,
+                                    mlp_hidden=(hidden, hidden),
+                                    head_hidden=hidden),
+                     grad_clip=40.0)
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(capacity=8192, min_fill=512),
+        lanes_per_shard=lanes, num_shards=1, rollout_len=rollout, n_step=3,
+        batch_size=batch, learner_steps_per_iter=2, param_sync_period=2,
+        target_update_period=100, evict_interval=50,
+        eps_base=0.4, eps_alpha=7.0)
+    return apex_dqn.ApexDQNPreset(apex=cfg, env=env, agent=agent,
+                                  learning_rate=1e-3)
+
+
+def sync_rates(preset, iters: int) -> dict:
+    """Generate/consume transitions-per-second of the lockstep driver."""
+    cfg = preset.apex
+    r = run_apex(cfg, preset, iters=iters)
+    per_iter_s = r["us_per_iter"] / 1e6
+    gen = cfg.lanes_per_shard * cfg.window / per_iter_s
+    con = cfg.learner_steps_per_iter * cfg.batch_size / per_iter_s
+    return {"actor_tps": gen, "learner_tps": con, "combined_tps": gen + con,
+            "seconds": r["seconds"]}
+
+
+def async_rates(preset, acfg: AsyncConfig) -> dict:
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    s = res.stats
+    return {"actor_tps": s["actor_tps"], "learner_tps": s["learner_tps"],
+            "combined_tps": s["actor_tps"] + s["learner_tps"],
+            "ratio": s["generate_consume_ratio"],
+            "actor_blocked": s["actor_blocked"],
+            "learner_starved": s["learner_starved"],
+            "seconds": s["seconds"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU config for CI (seconds, not minutes)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless async combined tps beats sync")
+    ap.add_argument("--actor-threads", type=int, default=1,
+                    help="1 by default: CI runners have ~2 cores, so one "
+                         "actor + one learner + the replay service already "
+                         "saturate them")
+    args = ap.parse_args()
+
+    preset = bench_preset()
+    if args.smoke:
+        sync_iters, learner_steps = 6, 30
+    else:
+        sync_iters, learner_steps = 25, 150
+
+    sync = sync_rates(preset, sync_iters)
+    acfg = AsyncConfig(actor_threads=args.actor_threads,
+                       total_learner_steps=learner_steps,
+                       max_seconds=180.0 if args.smoke else 600.0)
+    asy = async_rates(preset, acfg)
+
+    us = sync["seconds"] * 1e6 / max(sync_iters, 1)
+    emit("async_throughput/sync_actor_tps", us, f"{sync['actor_tps']:.0f}")
+    emit("async_throughput/sync_learner_tps", us, f"{sync['learner_tps']:.0f}")
+    emit("async_throughput/sync_combined_tps", us,
+         f"{sync['combined_tps']:.0f}")
+    aus = asy["seconds"] * 1e6 / max(learner_steps, 1)
+    emit("async_throughput/async_actor_tps", aus, f"{asy['actor_tps']:.0f}")
+    emit("async_throughput/async_learner_tps", aus,
+         f"{asy['learner_tps']:.0f}")
+    emit("async_throughput/async_combined_tps", aus,
+         f"{asy['combined_tps']:.0f}")
+    emit("async_throughput/async_generate_consume_ratio", aus,
+         f"{asy['ratio']:.2f}")
+    emit("async_throughput/async_actor_blocked", aus,
+         f"{asy['actor_blocked']:.0f}")
+    emit("async_throughput/async_learner_starved", aus,
+         f"{asy['learner_starved']:.0f}")
+    speedup = asy["combined_tps"] / max(sync["combined_tps"], 1e-9)
+    emit("async_throughput/async_vs_sync_combined", aus, f"{speedup:.2f}")
+
+    if args.check and speedup <= 1.0:
+        print(f"FAIL: async combined {asy['combined_tps']:.0f} tps did not "
+              f"beat sync {sync['combined_tps']:.0f} tps", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,13 @@ checkpointing, periodic evaluation with a greedy policy, and a resume path —
 the full production loop at CPU scale (paper Fig. 2 workflow).
 
   PYTHONPATH=src python examples/train_apex_dqn.py [--iterations 300]
+
+``--runtime async`` trains through the decoupled actor/learner runtime
+instead (actors + replay service + learner on separate threads, paper Fig. 1)
+and then runs the same greedy evaluation on the learned parameters:
+
+  PYTHONPATH=src python examples/train_apex_dqn.py --runtime async \
+      --iterations 300 --actor-threads 2
 """
 
 import argparse
@@ -17,6 +24,7 @@ from repro.checkpoint import checkpoint as ckpt
 from repro.configs import apex_dqn
 from repro.core import apex
 from repro.envs.synthetic import batch_reset, batch_step
+from repro.launch.train import run_apex_async
 
 
 def evaluate_greedy(preset, params, episodes=8, seed=123):
@@ -37,12 +45,31 @@ def evaluate_greedy(preset, params, episodes=8, seed=123):
     return float(total.mean())
 
 
+def main_async(args):
+    """Decoupled-runtime path: train via the shared launcher helper (actor /
+    replay-service / learner threads + stats report + final checkpoint),
+    then evaluate the learned greedy policy."""
+    preset = apex_dqn.reduced()
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    res = run_apex_async(preset, args.iterations, args.actor_threads,
+                         args.ckpt_dir)
+    final = evaluate_greedy(preset, res.learner.params, episodes=16)
+    print(f"\nfinal greedy evaluation over 16 episodes: {final:.3f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iterations", type=int, default=300)
     ap.add_argument("--ckpt-dir", default="/tmp/apex_dqn_ckpts")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--runtime", choices=("sync", "async"), default="sync")
+    ap.add_argument("--actor-threads", type=int, default=1)
     args = ap.parse_args()
+
+    if args.runtime == "async":
+        if args.resume:
+            ap.error("--resume is not supported with --runtime async")
+        return main_async(args)
 
     preset = apex_dqn.reduced()
     optimizer = preset.make_optimizer()

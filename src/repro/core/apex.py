@@ -19,6 +19,9 @@ parameters periodically. TPU-native realization (DESIGN.md §2):
   consume ratio (~12.5K : 9.7K transitions/s in §4.1).
 
 Everything below is per-shard pure functions plus a ``shard_map`` wrapper.
+The phase bodies themselves (rollout, update, priority write-back) live in
+``repro.runtime.phases`` and are shared with the decoupled async runtime
+(``repro.runtime.runner``); this module composes them bulk-synchronously.
 """
 
 from __future__ import annotations
@@ -31,9 +34,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import codec, nstep, priority as prio, replay as replay_lib
-from repro.envs.synthetic import batch_reset, batch_step
-from repro.optim import optimizers as optim
+from repro.core import priority as prio, replay as replay_lib
+from repro.envs.synthetic import batch_reset
+from repro.runtime import phases
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,14 +92,7 @@ REPLICATED_FIELDS = ("params", "target_params", "opt_state", "actor_params",
 
 def lane_epsilons(cfg: ApexConfig, shard_id: jax.Array) -> jax.Array:
     """This shard's slice of the global exploration ladder."""
-    if cfg.eps_mode == "ladder":
-        table = prio.epsilon_ladder(cfg.num_actors, cfg.eps_base, cfg.eps_alpha)
-    elif cfg.eps_mode == "fixed_set":
-        table = prio.fixed_epsilon_set(cfg.num_actors)
-    else:
-        raise ValueError(cfg.eps_mode)
-    gids = shard_id * cfg.lanes_per_shard + jnp.arange(cfg.lanes_per_shard)
-    return table[gids]
+    return phases.lane_epsilons(cfg, shard_id)
 
 
 def init_state(cfg: ApexConfig, env, agent, optimizer, rng: jax.Array,
@@ -123,22 +119,7 @@ def init_state(cfg: ApexConfig, env, agent, optimizer, rng: jax.Array,
 
 
 def _item_example(env, obs: jax.Array, compress: bool = False) -> dict:
-    """Replay item: the paper stores both endpoint states per transition
-    ("costs more RAM, but simplifies the code" — Appendix F)."""
-    ob = obs[0]
-    if compress:
-        ob = codec.encode(ob[None])._asdict()
-        ob = {k: v[0] for k, v in ob.items()}
-    if hasattr(env, "num_actions"):
-        action = jnp.zeros((), jnp.int32)
-    else:
-        action = jnp.zeros((env.action_dim,), jnp.float32)
-    return {
-        "obs": ob, "action": action,
-        "returns": jnp.zeros((), jnp.float32),
-        "discount_n": jnp.zeros((), jnp.float32),
-        "next_obs": ob,
-    }
+    return phases.item_example(env, obs, compress)
 
 
 # ---------------------------------------------------------------------------
@@ -149,71 +130,17 @@ def actor_phase(cfg: ApexConfig, env, agent, state: ApexState,
                 shard_id: jax.Array | int = 0) -> tuple[ApexState, dict]:
     """Roll out T steps per lane, build n-step transitions from the trajectory,
     compute initial priorities from the buffered Q-values, bulk-add to the
-    shard's replay slots (Alg. 1, vectorized)."""
-    eps = lane_epsilons(cfg, jnp.asarray(shard_id))
-    rng, rollout_rng, last_rng = jax.random.split(state.rng, 3)
-    step_rngs = jax.random.split(rollout_rng, cfg.rollout_len)
-
-    def step_fn(carry, rng_t):
-        env_state, obs, ep_ret = carry
-        a, aux = agent.act(state.actor_params, rng_t, obs, eps)
-        env_state, out = batch_step(env, env_state, a)
-        done = out.discount == 0.0
-        ep_ret_next = jnp.where(done, 0.0, ep_ret + out.reward)
-        completed = jnp.where(done, ep_ret + out.reward, jnp.nan)
-        emit = dict(obs=obs, action=a, aux=aux, reward=out.reward,
-                    discount=out.discount, completed=completed)
-        return (env_state, out.obs, ep_ret_next), emit
-
-    (env_state, last_obs, ep_ret), traj = jax.lax.scan(
-        step_fn, (state.env_state, state.obs, state.ep_return), step_rngs)
-    # time-major (T, lanes, ...) -> lane-major (lanes, T, ...)
-    traj = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), traj)
-
-    # Bootstrap aux at the final state S_T (one extra policy eval).
-    _, last_aux = agent.act(state.actor_params, last_rng, last_obs, eps)
-
-    n, T, W = cfg.n_step, cfg.rollout_len, cfg.window
-    returns, discount_n = nstep.from_trajectory(traj["reward"], traj["discount"], n)
-
-    full_obs = jnp.concatenate([traj["obs"], last_obs[:, None]], axis=1)  # (lanes, T+1, ...)
-    full_aux = jax.tree.map(
-        lambda a, b: jnp.concatenate([a, b[:, None]], axis=1), traj["aux"], last_aux)
-
-    first_aux = jax.tree.map(lambda x: x[:, :W], full_aux)
-    last_aux_w = jax.tree.map(lambda x: x[:, n:], full_aux)
-    action_w = traj["action"][:, :W]
-    priorities = agent.initial_priorities(
-        *jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
-                      (first_aux, action_w, returns, discount_n, last_aux_w)))
-
-    flat = lambda x: x.reshape((-1,) + x.shape[2:])
-    enc = ((lambda o: dict(codec.encode(o)._asdict())) if cfg.compress_obs
-           else (lambda o: o))
-    items = {
-        "obs": enc(flat(full_obs[:, :W])),
-        "action": flat(action_w),
-        "returns": flat(returns),
-        "discount_n": flat(discount_n),
-        "next_obs": enc(flat(full_obs[:, n:])),
-    }
-    if cfg.replicate_k > 1:  # Fig. 6 recency-vs-diversity ablation
-        items = jax.tree.map(lambda x: jnp.tile(x, (cfg.replicate_k,) + (1,) * (x.ndim - 1)), items)
-        priorities = jnp.tile(priorities, cfg.replicate_k)
-
-    add = replay_lib.add_fifo if cfg.eviction == "fifo" else replay_lib.add_alloc
-    new_replay = add(cfg.replay, state.replay, items, priorities)
-
-    completed = traj["completed"]
-    n_done = jnp.sum(~jnp.isnan(completed))
-    mean_ep_return = jnp.where(
-        n_done > 0, jnp.nansum(completed) / jnp.maximum(n_done, 1), jnp.nan)
-    metrics = {"mean_ep_return": mean_ep_return, "episodes": n_done,
-               "mean_initial_priority": priorities.mean()}
-
+    shard's replay slots (Alg. 1, vectorized). Thin wrapper over the shared
+    ``runtime.phases.act_phase`` + ``replay_add`` pair."""
+    aslice = phases.ActorSlice(
+        env_state=state.env_state, obs=state.obs, ep_return=state.ep_return,
+        rng=state.rng, frames=state.frames)
+    aslice, block, metrics = phases.act_phase(
+        cfg, env, agent, state.actor_params, aslice, shard_id)
+    new_replay = phases.replay_add(cfg, state.replay, block)
     state = state._replace(
-        replay=new_replay, env_state=env_state, obs=last_obs, ep_return=ep_ret,
-        rng=rng, frames=state.frames + cfg.lanes_per_shard * cfg.rollout_len)
+        replay=new_replay, env_state=aslice.env_state, obs=aslice.obs,
+        ep_return=aslice.ep_return, rng=aslice.rng, frames=aslice.frames)
     return state, metrics
 
 
@@ -255,33 +182,18 @@ def learner_phase(cfg: ApexConfig, agent, optimizer, state: ApexState,
         def do_update(st: ApexState) -> tuple[ApexState, dict]:
             s_rng, e_rng = jax.random.split(rng)
             batch = replay_lib.sample(rcfg, st.replay, s_rng, cfg.batch_size)
-            items = batch.items
-            if cfg.compress_obs:  # decode fuses into the learner forward
-                items = dict(items)
-                items["obs"] = codec.decode(codec.EncodedObs(**items["obs"]))
-                items["next_obs"] = codec.decode(
-                    codec.EncodedObs(**items["next_obs"]))
             weights = _global_is_weights(cfg, batch, st.replay.size, axis_name)
-            params, opt_state, new_prios, metrics = agent.update(
-                st.params, st.target_params, st.opt_state, optimizer,
-                items, weights, axis_name)
-            rep = replay_lib.set_priorities(rcfg, st.replay, batch.indices, new_prios)
-            step = st.learner_step + 1
-            target = optim.periodic_target_update(
-                params, st.target_params, step, cfg.target_update_period)
-            # periodic eviction (paper: every 100 learning steps)
-            if cfg.eviction == "fifo":
-                rep = jax.lax.cond(
-                    step % cfg.evict_interval == 0,
-                    lambda r: replay_lib.evict_fifo(rcfg, r), lambda r: r, rep)
-            else:
-                evict_num = cfg.evict_num or cfg.batch_size
-                rep = jax.lax.cond(
-                    (step % cfg.evict_interval == 0) & (rep.size > rcfg.soft_cap),
-                    lambda r: replay_lib.evict_prioritized(rcfg, r, e_rng, evict_num),
-                    lambda r: r, rep)
-            st = st._replace(params=params, opt_state=opt_state,
-                             target_params=target, replay=rep, learner_step=step)
+            lslice = phases.LearnerSlice(
+                params=st.params, target_params=st.target_params,
+                opt_state=st.opt_state, learner_step=st.learner_step)
+            lslice, new_prios, metrics = phases.learn_phase(
+                cfg, agent, optimizer, lslice, batch.items, weights, axis_name)
+            rep = phases.priority_writeback(
+                cfg, st.replay, batch.indices, new_prios,
+                lslice.learner_step, e_rng)
+            st = st._replace(params=lslice.params, opt_state=lslice.opt_state,
+                             target_params=lslice.target_params, replay=rep,
+                             learner_step=lslice.learner_step)
             return st, {**metrics, "updated": jnp.ones((), jnp.float32)}
 
         def skip(st: ApexState) -> tuple[ApexState, dict]:
@@ -344,7 +256,11 @@ def make_train_fn(cfg: ApexConfig, env, agent, optimizer, mesh=None,
             lambda st: train_iteration(cfg, env, agent, optimizer, st, 0, None))
         return init_fn, step_fn
 
-    shard_map = jax.shard_map
+    if hasattr(jax, "shard_map"):
+        shard_map = functools.partial(jax.shard_map, check_vma=False)
+    else:  # jax < 0.5: the API lived in jax.experimental with check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        shard_map = functools.partial(_shard_map, check_rep=False)
 
     def per_shard_init(rng):
         sid = jax.lax.axis_index(data_axis)
@@ -367,11 +283,10 @@ def make_train_fn(cfg: ApexConfig, env, agent, optimizer, mesh=None,
 
     specs = state_specs()
     init_fn = jax.jit(shard_map(
-        per_shard_init, mesh=mesh, in_specs=P(),
-        out_specs=specs, check_vma=False))
+        per_shard_init, mesh=mesh, in_specs=P(), out_specs=specs))
     step_fn = jax.jit(shard_map(
         per_shard_step, mesh=mesh, in_specs=(specs,),
-        out_specs=(specs, P()), check_vma=False))
+        out_specs=(specs, P())))
     return init_fn, step_fn
 
 

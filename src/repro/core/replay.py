@@ -178,8 +178,17 @@ def sample(cfg: ReplayConfig, state: ReplayState, rng: jax.Array, batch: int) ->
 def set_priorities(
     cfg: ReplayConfig, state: ReplayState, idx: jax.Array, priorities: jax.Array
 ) -> ReplayState:
-    """Learner writes back fresh |TD| priorities (Alg. 2 l.8)."""
-    tree = sumtree.write(state.tree, idx, prio.to_leaf(priorities, cfg.alpha))
+    """Learner writes back fresh |TD| priorities (Alg. 2 l.8).
+
+    Dead slots (leaf mass 0) are left dead: with a decoupled learner the
+    write-back may arrive after an eviction freed one of the sampled slots,
+    and resurrecting it would break the ``size`` == live-leaf-count
+    invariant. In the lockstep driver sampled slots are always live, so the
+    gate is a no-op there.
+    """
+    old = sumtree.leaves(state.tree)[idx]
+    new_leaf = prio.to_leaf(priorities, cfg.alpha)
+    tree = sumtree.write(state.tree, idx, jnp.where(old > 0, new_leaf, 0.0))
     return state._replace(tree=tree)
 
 

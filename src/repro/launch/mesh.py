@@ -14,11 +14,27 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-compatible mesh construction: jax >= 0.5 wants explicit
+    ``axis_types``; on older jax ``Auto`` is implicit and the enum absent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """Version-compatible ambient-mesh context: ``jax.set_mesh`` on jax >=
+    0.6; on older releases the ``Mesh`` object is itself the context
+    manager that installs the resource environment."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:

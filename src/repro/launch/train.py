@@ -7,8 +7,15 @@ Two modes, matching the two integrations of the paper's technique:
 * ``--mode llm --arch <id>`` — prioritized *sequence* replay training of an
   assigned architecture on the synthetic pipeline (reduced config on CPU).
 
+For the apex modes ``--runtime async`` swaps the lockstep driver for the
+decoupled actor/learner runtime (``repro.runtime``): ``--iterations`` then
+counts learner steps and generate/consume transitions-per-second are
+reported separately (paper §4.1).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --mode apex-dqn --iterations 200
+  PYTHONPATH=src python -m repro.launch.train --mode apex-dqn \
+      --runtime async --actor-threads 2 --iterations 200
   PYTHONPATH=src python -m repro.launch.train --mode llm --arch llama3.2-1b \
       --iterations 50 --ckpt-dir /tmp/ckpts
 """
@@ -26,6 +33,7 @@ from repro.core import apex, replay as replay_lib, sequence_replay as seqrep
 from repro.data import pipeline as data_lib
 from repro.models import registry, transformer
 from repro.optim import optimizers as optim
+from repro.runtime import AsyncConfig, run_async
 
 
 def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
@@ -49,6 +57,38 @@ def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
                            "opt_state": state.opt_state,
                            "learner_step": state.learner_step}, step=it + 1)
     return state
+
+
+def run_apex_async(preset, learner_steps: int, actor_threads: int,
+                   ckpt_dir: str | None):
+    """Decoupled runtime: actors, replay service, and learner on their own
+    clocks; reports generate/consume transitions-per-second separately."""
+    acfg = AsyncConfig(actor_threads=actor_threads,
+                       total_learner_steps=learner_steps)
+    t0 = time.time()
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    s = res.stats
+    print(f"async done in {time.time() - t0:6.1f}s  "
+          f"learner_steps={int(s['learner_steps'])} "
+          f"param_version={int(s['param_version'])}")
+    print(f"  generate={s['actor_tps']:8.0f} t/s  "
+          f"consume={s['learner_tps']:8.0f} t/s  "
+          f"ratio={s['generate_consume_ratio']:.2f} "
+          f"(paper §4.1: ~12.5K:9.7K ~ 1.29)")
+    print(f"  actor_blocked={int(s['actor_blocked'])} "
+          f"learner_starved={int(s['learner_starved'])} "
+          f"replay_size={int(s['replay_size'])}")
+    if res.last_actor_metrics:
+        print(f"  last mean_ep_return="
+              f"{res.last_actor_metrics['mean_ep_return']:.3f}")
+    if ckpt_dir:
+        ckpt_lib.save(f"{ckpt_dir}/ckpt_async_final.npz",
+                      {"params": res.learner.params,
+                       "opt_state": res.learner.opt_state,
+                       "learner_step": res.learner.learner_step},
+                      step=int(s["learner_steps"]))
+    return res
 
 
 def run_llm(arch: str, iterations: int, log_every: int, ckpt_dir: str | None,
@@ -93,16 +133,29 @@ def main():
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale preset (mesh required)")
+    ap.add_argument("--runtime", choices=("sync", "async"), default="sync",
+                    help="sync: lockstep act/learn alternation; async: "
+                         "decoupled actor threads + replay service + learner "
+                         "(apex modes only)")
+    ap.add_argument("--actor-threads", type=int, default=1,
+                    help="actor threads for --runtime async")
     args = ap.parse_args()
+
+    def run_preset(preset):
+        if args.runtime == "async":
+            run_apex_async(preset, args.iterations, args.actor_threads,
+                           args.ckpt_dir)
+        else:
+            run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 
     if args.mode == "apex-dqn":
         from repro.configs import apex_dqn
         preset = apex_dqn.full() if args.full else apex_dqn.reduced()
-        run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
+        run_preset(preset)
     elif args.mode == "apex-dpg":
         from repro.configs import apex_dpg
         preset = apex_dpg.full() if args.full else apex_dpg.reduced()
-        run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
+        run_preset(preset)
     else:
         if not args.arch:
             ap.error("--mode llm requires --arch")

@@ -1,0 +1,27 @@
+"""Async actor/learner runtime (paper §3: decoupled acting and learning).
+
+Layering:
+
+* ``phases``  — pure, jittable per-phase functions shared with the
+  synchronous ``repro.core.apex`` driver.
+* ``params``  — versioned lock-free parameter snapshot store (learner
+  publishes, actors pull every ``param_sync_period`` rollouts).
+* ``service`` — host-side replay service: a single owner thread applying
+  adds / priority write-backs to the sharded ``ReplayState`` behind
+  double-buffered bounded queues.
+* ``runner``  — thread wiring + throughput accounting (``run_async``).
+"""
+
+from repro.runtime.params import ParamSnapshot, ParamStore
+from repro.runtime.phases import (ActorSlice, LearnerSlice, TransitionBlock,
+                                  act_phase, lane_epsilons, learn_phase,
+                                  priority_writeback, replay_add)
+from repro.runtime.runner import AsyncConfig, RuntimeResult, run_async
+from repro.runtime.service import ReplayService, ServiceStats
+
+__all__ = [
+    "ActorSlice", "AsyncConfig", "LearnerSlice", "ParamSnapshot", "ParamStore",
+    "ReplayService", "RuntimeResult", "ServiceStats", "TransitionBlock",
+    "act_phase", "lane_epsilons", "learn_phase", "priority_writeback",
+    "replay_add", "run_async",
+]

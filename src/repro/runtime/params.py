@@ -1,0 +1,45 @@
+"""Versioned, lock-free parameter snapshot store.
+
+The paper's actors "periodically request the latest network parameters"
+(Alg. 1 l.2) — a one-way publish/subscribe, never a synchronization barrier.
+Here the learner publishes an immutable ``(version, params)`` tuple; actors
+grab whichever snapshot is current when their ``param_sync_period`` comes up.
+
+Lock-freedom relies on two facts: (a) rebinding a single attribute is atomic
+in CPython, so readers always observe a complete snapshot, never a torn one;
+(b) snapshots are never mutated after publication — the learner's jitted
+update produces fresh arrays each step, so a published pytree is frozen by
+construction. Readers therefore need no lock, and a slow actor merely acts
+with stale parameters — exactly the staleness the paper measures (Fig. 9).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+
+class ParamSnapshot(NamedTuple):
+    version: int
+    params: Any
+
+
+class ParamStore:
+    """Single-writer (learner) / many-reader (actors) snapshot store."""
+
+    def __init__(self, params: Any):
+        self._snap = ParamSnapshot(0, params)
+
+    def publish(self, params: Any) -> int:
+        """Publish a new snapshot; returns its version. Single writer only —
+        two concurrent publishers could skip a version number."""
+        snap = ParamSnapshot(self._snap.version + 1, params)
+        self._snap = snap  # atomic rebind: readers see old or new, never torn
+        return snap.version
+
+    def get(self) -> ParamSnapshot:
+        """Latest snapshot (wait-free)."""
+        return self._snap
+
+    @property
+    def version(self) -> int:
+        return self._snap.version

@@ -1,0 +1,232 @@
+"""Decoupled actor/learner runtime (paper Fig. 1, host-threaded realization).
+
+The synchronous driver (``repro.core.apex``) alternates acting and learning
+inside one jitted step, which pins the generate:consume ratio to whatever
+``rollout_len``/``learner_steps_per_iter`` dictate. Here the two sides run
+free:
+
+* N actor threads each own an ``ActorSlice`` (``lanes_per_shard`` vector
+  envs) and loop: refresh params from the ``ParamStore`` every
+  ``param_sync_period`` rollouts → jitted ``act_phase`` → push the
+  ``TransitionBlock`` into the ``ReplayService`` (blocking on a bounded
+  queue = backpressure).
+* The learner thread loops: pop a prefetched prioritized batch → jitted
+  ``learn_phase`` → queue the priority write-back → publish fresh params.
+* The ``ReplayService`` owner thread is the only mutator of replay state.
+
+Threads overlap because XLA releases the GIL while kernels execute, so actor
+rollouts, learner updates, and replay maintenance genuinely run concurrently
+on CPU — and the same wiring maps to streams/devices on accelerators.
+
+Throughput accounting matches the paper's §4.1 split: transitions/s
+*generated* by actors and transitions/s *consumed* by the learner are
+measured independently (theirs: ~12.5K vs ~9.7K, ratio ~1.29).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import replay as replay_lib
+from repro.envs.synthetic import batch_reset
+from repro.runtime import phases
+from repro.runtime.params import ParamStore
+from repro.runtime.service import ReplayService, ServiceStats
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Runtime geometry: thread counts, queue depths, stop conditions."""
+
+    actor_threads: int = 1           # each runs cfg.lanes_per_shard lanes
+    add_queue_depth: int = 4         # actor→replay backpressure bound
+    sample_queue_depth: int = 2      # replay→learner prefetch (double buffer)
+    total_learner_steps: int = 200   # stop once the learner consumed this many
+    max_seconds: float | None = None # wall-clock safety stop
+    publish_every: int = 1           # learner steps between param publications
+    starve_timeout_s: float = 0.02   # learner wait per empty-queue attempt
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    learner: phases.LearnerSlice     # final params/target/opt state
+    stats: dict[str, float]          # throughput + contention counters
+    service_stats: ServiceStats
+    last_actor_metrics: dict | None  # last act_phase metrics (any actor)
+
+
+def _actor_geometry(cfg, acfg: AsyncConfig):
+    """Each actor thread takes one ladder shard: thread t plays global lanes
+    [t*lanes, (t+1)*lanes), so the exploration ladder spans all threads."""
+    return dataclasses.replace(cfg, num_shards=acfg.actor_threads)
+
+
+def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
+              rng: jax.Array | None = None) -> RuntimeResult:
+    """Run the decoupled runtime until the learner consumed
+    ``total_learner_steps`` batches (or ``max_seconds`` elapsed)."""
+    if acfg.actor_threads < 1:
+        raise ValueError("AsyncConfig.actor_threads must be >= 1, got "
+                         f"{acfg.actor_threads}")
+    if acfg.total_learner_steps < 1:
+        raise ValueError("AsyncConfig.total_learner_steps must be >= 1, got "
+                         f"{acfg.total_learner_steps}")
+    cfg = _actor_geometry(cfg, acfg)
+    rng = jax.random.key(acfg.seed) if rng is None else rng
+    p_rng, e_rng = jax.random.split(rng)
+
+    # -- state ------------------------------------------------------------
+    slices, obs0 = [], None
+    for t in range(acfg.actor_threads):
+        a_rng = jax.random.fold_in(e_rng, t)
+        env_state, obs = batch_reset(env, a_rng, cfg.lanes_per_shard)
+        obs0 = obs if obs0 is None else obs0
+        slices.append(phases.ActorSlice(
+            env_state=env_state, obs=obs,
+            ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+            rng=jax.random.fold_in(a_rng, 1),
+            frames=jnp.zeros((), jnp.int32)))
+    params = agent.init(p_rng, obs0[:1])
+    lslice = phases.LearnerSlice(
+        params=params, target_params=jax.tree.map(jnp.copy, params),
+        opt_state=optimizer.init(params),
+        learner_step=jnp.zeros((), jnp.int32))
+    replay0 = replay_lib.init(
+        cfg.replay, phases.item_example(env, obs0, cfg.compress_obs))
+
+    store = ParamStore(params)
+    service = ReplayService(
+        cfg, replay0, add_queue_depth=acfg.add_queue_depth,
+        sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1)
+
+    act_fn = jax.jit(lambda p, sl, sid: phases.act_phase(
+        cfg, env, agent, p, sl, sid))
+    learn_fn = jax.jit(lambda lsl, items, w: phases.learn_phase(
+        cfg, agent, optimizer, lsl, items, w, None))
+
+    # Warm the caches before the clock starts: one throwaway rollout and one
+    # throwaway update on storage-shaped garbage (results discarded).
+    _, block0, _ = jax.block_until_ready(
+        act_fn(params, slices[0], jnp.int32(0)))
+    items_ex = jax.tree.map(lambda b: b[:cfg.batch_size], replay0.storage)
+    jax.block_until_ready(
+        learn_fn(lslice, items_ex, jnp.ones((cfg.batch_size,), jnp.float32)))
+
+    block_transitions = int(block0.priorities.shape[0])
+    stop = threading.Event()
+    counters = {"actor_transitions": 0, "actor_blocked": 0,
+                "learner_starved": 0, "rollouts": 0}
+    counter_lock = threading.Lock()
+    last_metrics: list[Any] = [None]
+    thread_errors: list[BaseException] = []
+
+    def guarded(fn):
+        """A dead worker must stop the whole runtime, not hang or silently
+        yield an untrained result: record the error and wake everyone."""
+        def run(*args):
+            try:
+                fn(*args)
+            except BaseException as e:  # noqa: BLE001
+                thread_errors.append(e)
+                stop.set()
+        return run
+
+    # -- actor threads ----------------------------------------------------
+    def actor_loop(t: int) -> None:
+        sl = slices[t]
+        sid = jnp.int32(t)
+        snap = store.get()
+        rollouts = blocked = pushed = 0
+        while not stop.is_set():
+            if rollouts % cfg.param_sync_period == 0:
+                snap = store.get()
+            sl, block, metrics = act_fn(snap.params, sl, sid)
+            while not stop.is_set():
+                if service.add(block, timeout=0.02):
+                    pushed += 1
+                    break
+                blocked += 1  # bounded queue full: actor is backpressured
+            rollouts += 1
+            last_metrics[0] = metrics
+        with counter_lock:
+            counters["actor_transitions"] += pushed * block_transitions
+            counters["actor_blocked"] += blocked
+            counters["rollouts"] += rollouts
+
+    # -- learner thread ---------------------------------------------------
+    learner_box = {"lslice": lslice, "steps": 0}
+
+    def learner_loop() -> None:
+        lsl = learner_box["lslice"]
+        steps = starved = 0
+        while steps < acfg.total_learner_steps and not stop.is_set():
+            batch = service.get_batch(timeout=acfg.starve_timeout_s)
+            if batch is None:
+                starved += 1  # replay below min-fill or prefetch lagging
+                continue
+            lsl, new_prios, _ = learn_fn(lsl, batch.items, batch.is_weights)
+            service.write_back(batch.indices, new_prios)
+            steps += 1
+            if steps % acfg.publish_every == 0:
+                store.publish(lsl.params)
+        jax.block_until_ready(lsl.params)
+        learner_box["lslice"] = lsl
+        learner_box["steps"] = steps
+        counters["learner_starved"] = starved
+
+    # -- drive ------------------------------------------------------------
+    service.start()
+    actors = [threading.Thread(target=guarded(actor_loop), args=(t,),
+                               daemon=True, name=f"actor-{t}")
+              for t in range(acfg.actor_threads)]
+    learner = threading.Thread(target=guarded(learner_loop), daemon=True,
+                               name="learner")
+    t0 = time.perf_counter()
+    for th in actors:
+        th.start()
+    learner.start()
+    learner.join(timeout=acfg.max_seconds)
+    stop.set()
+    for th in actors:
+        th.join()
+    learner.join()
+    dt = time.perf_counter() - t0
+    service.stop()
+    if service.error is not None:
+        # The service may die after the learner's last call (e.g. during the
+        # final drain) — no later add/get_batch would surface it.
+        thread_errors.append(service.error)
+    if thread_errors:
+        raise RuntimeError(
+            f"async runtime worker died after {dt:.1f}s") from thread_errors[0]
+
+    steps = learner_box["steps"]
+    stats = {
+        "seconds": dt,
+        "actor_transitions": float(counters["actor_transitions"]),
+        "learner_transitions": float(steps * cfg.batch_size),
+        "actor_tps": counters["actor_transitions"] / dt if dt > 0 else 0.0,
+        "learner_tps": steps * cfg.batch_size / dt if dt > 0 else 0.0,
+        "rollouts": float(counters["rollouts"]),
+        "learner_steps": float(steps),
+        "actor_blocked": float(counters["actor_blocked"]),
+        "learner_starved": float(counters["learner_starved"]),
+        "param_version": float(store.version),
+        "replay_size": float(service.stats.replay_size),
+    }
+    stats["generate_consume_ratio"] = (
+        stats["actor_tps"] / stats["learner_tps"]
+        if stats["learner_tps"] > 0 else float("inf"))
+    m = last_metrics[0]
+    return RuntimeResult(
+        learner=learner_box["lslice"], stats=stats,
+        service_stats=service.stats,
+        last_actor_metrics=(
+            {k: float(v) for k, v in m.items()} if m is not None else None))

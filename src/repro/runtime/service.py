@@ -1,0 +1,211 @@
+"""Host-side replay service: the paper's central replay memory as a thread.
+
+One owner thread holds the device-resident ``ReplayState`` and is the only
+code that ever touches it, so replay mutation needs no locks. Traffic flows
+through three queues, mirroring Fig. 1's arrows:
+
+* ``add``       (actors → replay, bounded) — blocks of n-step transitions
+  with actor-side initial priorities. A bounded depth gives *backpressure*:
+  when the learner + service fall behind, actors block on ``add`` instead of
+  overrunning memory.
+* ``samples``   (replay → learner, bounded) — prefetched prioritized
+  batches. Depth 2 double-buffers the learner: batch k+1 is sampled while
+  the learner consumes batch k. Empty queue = *starved learner*.
+* ``updates``   (learner → replay) — priority write-backs; applying one
+  counts as a learner step for the periodic eviction clock (paper: evict
+  every 100 learning steps).
+
+Known (and intended) relaxation vs the lockstep driver: a prefetched batch
+may reference slots that a concurrent add overwrites before the learner's
+priorities come back. The paper's distributed system has the same window —
+replay content is allowed to be slightly stale relative to the learner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any
+
+import jax
+
+from repro.core import replay as replay_lib
+from repro.runtime import phases
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    blocks_added: int = 0          # transition blocks applied to replay
+    transitions_added: int = 0     # individual transitions applied
+    batches_sampled: int = 0       # prioritized batches prefetched
+    updates_applied: int = 0       # priority write-backs (= learner steps seen)
+    replay_size: int = 0           # live items at shutdown
+
+
+class ReplayService:
+    """Single replay shard behind double-buffered host-side queues."""
+
+    def __init__(self, cfg, replay_state: replay_lib.ReplayState, *,
+                 batch_size: int | None = None, add_queue_depth: int = 4,
+                 sample_queue_depth: int = 2, seed: int = 0):
+        self._cfg = cfg
+        self._state = replay_state
+        self._rng = jax.random.key(seed)
+        batch = batch_size or cfg.batch_size
+        rcfg = cfg.replay
+
+        self._jit_add = jax.jit(
+            lambda st, block: phases.replay_add(cfg, st, block))
+        self._jit_sample = jax.jit(
+            lambda st, rng: replay_lib.sample(rcfg, st, rng, batch))
+        self._jit_writeback = jax.jit(
+            lambda st, idx, prios, step, rng: phases.priority_writeback(
+                cfg, st, idx, prios, step, rng))
+        self._jit_can_sample = jax.jit(
+            lambda st: replay_lib.can_sample(rcfg, st))
+        self._jit_split = jax.jit(lambda k: jax.random.split(k))
+
+        self._ready = False  # sticky min-fill latch (see _can_sample)
+        self._add_q: queue.Queue = queue.Queue(maxsize=add_queue_depth)
+        self._sample_q: queue.Queue = queue.Queue(maxsize=sample_queue_depth)
+        self._update_q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run_guarded, daemon=True,
+                                        name="replay-service")
+        self.stats = ServiceStats()
+        self.error: BaseException | None = None
+
+    @property
+    def learner_steps(self) -> int:
+        """Eviction-clock position: one applied write-back == one step."""
+        return self.stats.updates_applied
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "ReplayService":
+        self._thread.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        """Ask the service to drain pending work and exit."""
+        self._stop.set()
+        if join and self._thread.is_alive():
+            self._thread.join()
+
+    @property
+    def replay_state(self) -> replay_lib.ReplayState:
+        """Final replay state; only meaningful after ``stop()``."""
+        return self._state
+
+    # -- actor side ---------------------------------------------------------
+
+    def _check_alive(self) -> None:
+        if self.error is not None:
+            raise RuntimeError("replay service died") from self.error
+
+    def add(self, block: phases.TransitionBlock, timeout: float = 0.05) -> bool:
+        """Enqueue a transition block; False when the bounded queue stayed
+        full for ``timeout`` seconds (the caller is being backpressured)."""
+        self._check_alive()
+        try:
+            self._add_q.put(block, timeout=timeout)
+            return True
+        except queue.Full:
+            return False
+
+    # -- learner side -------------------------------------------------------
+
+    def get_batch(self, timeout: float = 0.05):
+        """Next prefetched prioritized batch, or None if starved (replay
+        below min-fill, or sampling not keeping up with the learner)."""
+        self._check_alive()
+        try:
+            return self._sample_q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def write_back(self, indices: jax.Array, priorities: jax.Array) -> None:
+        """Queue a priority write-back (Alg. 2 l.8); applied asynchronously."""
+        self._update_q.put((indices, priorities))
+
+    # -- owner loop ---------------------------------------------------------
+
+    def _apply_add(self, block: phases.TransitionBlock) -> None:
+        self._state = self._jit_add(self._state, block)
+        self.stats.blocks_added += 1
+        self.stats.transitions_added += int(block.priorities.shape[0])
+
+    def _can_sample(self) -> bool:
+        """Min-fill gate with a sticky latch: the device-side check (a host
+        sync) runs only until it first passes. Afterwards FIFO adds keep the
+        buffer full and eviction trims to ``soft_cap >= min_fill``, so the
+        gate can't re-close in any supported config."""
+        if not self._ready:
+            self._ready = bool(self._jit_can_sample(self._state))
+        return self._ready
+
+    def _next_rng(self) -> jax.Array:
+        self._rng, sub = self._jit_split(self._rng)
+        return sub
+
+    def _run_guarded(self) -> None:
+        # A dead service must not fail silently: record the error so actor /
+        # learner calls raise instead of spinning against a stalled queue.
+        try:
+            self._run()
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+
+    def _run(self) -> None:
+        while True:
+            progressed = False
+
+            # 1. Priority write-backs first: they advance the eviction clock
+            # and keep the sampling distribution fresh (Alg. 2 l.8).
+            while True:
+                try:
+                    idx, prios = self._update_q.get_nowait()
+                except queue.Empty:
+                    break
+                self.stats.updates_applied += 1
+                self._state = self._jit_writeback(
+                    self._state, idx, prios, self.stats.updates_applied,
+                    self._next_rng())
+                progressed = True
+
+            # 2. Refill the prefetch buffer (Alg. 2 l.4) before touching the
+            # add backlog: the learner is the scarce consumer the paper
+            # protects, and a starved learner wastes more than a briefly
+            # staler sampling distribution costs.
+            while not self._sample_q.full() and self._can_sample():
+                batch = self._jit_sample(self._state, self._next_rng())
+                try:
+                    self._sample_q.put_nowait(batch)
+                except queue.Full:
+                    break
+                self.stats.batches_sampled += 1
+                progressed = True
+
+            # 3. Drain actor blocks (Alg. 1 l.10-11).
+            while True:
+                try:
+                    block = self._add_q.get_nowait()
+                except queue.Empty:
+                    break
+                self._apply_add(block)
+                progressed = True
+
+            if self._stop.is_set():
+                if self._add_q.empty() and self._update_q.empty():
+                    break
+                continue
+            if not progressed:
+                # Idle: park on the add queue so actors wake us immediately.
+                try:
+                    block = self._add_q.get(timeout=0.002)
+                except queue.Empty:
+                    continue
+                self._apply_add(block)
+
+        self.stats.replay_size = int(self._state.size)

@@ -1,0 +1,50 @@
+"""Degrade gracefully when ``hypothesis`` is absent.
+
+CI installs hypothesis from ``pyproject.toml`` and runs the full property
+suites. In a bare environment the import below fails, and we substitute
+stand-ins: ``@given(...)`` rewraps the test so it calls
+``pytest.importorskip("hypothesis")`` at run time — each property test
+reports as *skipped* instead of breaking collection for the whole module —
+while the deterministic tests in the same file still run.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning another stand-in, so decorator-time expressions
+        like ``st.lists(st.floats(...), min_size=1)`` evaluate fine."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg replacement (no functools.wraps: copying the original
+            # signature would make pytest hunt for fixtures named after the
+            # hypothesis-drawn parameters).
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

@@ -11,6 +11,7 @@ import pytest
 
 from repro.configs import apex_dpg, apex_dqn
 from repro.core import apex
+from repro.launch import mesh as mesh_lib
 
 
 def run_preset(preset, iters, seed=0):
@@ -113,8 +114,7 @@ def test_fixed_eps_set_mode():
 
 
 def test_shard_map_single_device_mesh():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_lib.make_mesh((1,), ("data",))
     preset = apex_dqn.reduced(num_shards=1)
     optimizer = preset.make_optimizer()
     init_fn, step_fn = apex.make_train_fn(

@@ -1,0 +1,235 @@
+"""Async runtime: shared phases, snapshot store, replay-service queue
+behaviour (backpressure + starvation), and an end-to-end decoupled run."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import apex_dqn
+from repro.core import apex, replay as replay_lib
+from repro.core.agents import DQNAgent
+from repro.envs.synthetic import ChainWorld, batch_reset
+from repro.models.qnetworks import DuelingDQN
+from repro.runtime import (AsyncConfig, ParamStore, ReplayService, phases,
+                           run_async)
+
+
+def tiny_preset(min_fill=32):
+    env = ChainWorld(length=6, max_steps=16)
+    agent = DQNAgent(net=DuelingDQN(num_actions=env.num_actions,
+                                    mlp_hidden=(16,), head_hidden=16),
+                     grad_clip=40.0)
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(capacity=512, min_fill=min_fill),
+        lanes_per_shard=4, num_shards=1, rollout_len=8, n_step=3,
+        batch_size=16, learner_steps_per_iter=1, param_sync_period=2,
+        target_update_period=10, evict_interval=10,
+        eps_base=0.4, eps_alpha=7.0)
+    return apex_dqn.ApexDQNPreset(apex=cfg, env=env, agent=agent,
+                                  learning_rate=1e-3)
+
+
+def init_actor(cfg, env, rng):
+    env_state, obs = batch_reset(env, rng, cfg.lanes_per_shard)
+    return phases.ActorSlice(
+        env_state=env_state, obs=obs,
+        ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+        rng=jax.random.fold_in(rng, 1), frames=jnp.zeros((), jnp.int32)), obs
+
+
+# --- shared phases ----------------------------------------------------------
+
+def test_act_phase_block_shape_and_frames():
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    aslice, obs = init_actor(cfg, env, jax.random.key(0))
+    params = agent.init(jax.random.key(1), obs[:1])
+    new_slice, block, metrics = phases.act_phase(cfg, env, agent, params,
+                                                 aslice, 0)
+    n_transitions = cfg.lanes_per_shard * cfg.window
+    assert block.priorities.shape == (n_transitions,)
+    assert block.items["obs"].shape[0] == n_transitions
+    assert int(new_slice.frames) == cfg.lanes_per_shard * cfg.rollout_len
+    assert bool(jnp.all(block.priorities >= 0))
+    assert "mean_ep_return" in metrics
+
+
+def test_sync_driver_composes_shared_phases():
+    """apex.actor_phase == act_phase + replay_add on identical state, so the
+    lockstep driver and the async runtime can never drift apart."""
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    opt = preset.make_optimizer()
+    state = apex.init_state(cfg, env, agent, opt, jax.random.key(0))
+
+    via_driver, _ = apex.actor_phase(cfg, env, agent, state, 0)
+
+    aslice = phases.ActorSlice(env_state=state.env_state, obs=state.obs,
+                               ep_return=state.ep_return, rng=state.rng,
+                               frames=state.frames)
+    aslice2, block, _ = phases.act_phase(cfg, env, agent, state.actor_params,
+                                         aslice, 0)
+    replay2 = phases.replay_add(cfg, state.replay, block)
+
+    np.testing.assert_allclose(np.asarray(via_driver.replay.tree),
+                               np.asarray(replay2.tree), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(via_driver.obs),
+                                  np.asarray(aslice2.obs))
+    assert int(via_driver.frames) == int(aslice2.frames)
+
+
+def test_learn_phase_steps_and_priorities():
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    opt = preset.make_optimizer()
+    aslice, obs = init_actor(cfg, env, jax.random.key(0))
+    params = agent.init(jax.random.key(1), obs[:1])
+    lslice = phases.LearnerSlice(
+        params=params, target_params=jax.tree.map(jnp.copy, params),
+        opt_state=opt.init(params), learner_step=jnp.zeros((), jnp.int32))
+    _, block, _ = phases.act_phase(cfg, env, agent, params, aslice, 0)
+    items = jax.tree.map(lambda x: x[:cfg.batch_size], block.items)
+    w = jnp.ones((cfg.batch_size,), jnp.float32)
+    new_lslice, prios, metrics = phases.learn_phase(cfg, agent, opt, lslice,
+                                                    items, w)
+    assert int(new_lslice.learner_step) == 1
+    assert prios.shape == (cfg.batch_size,)
+    assert bool(jnp.all(jnp.isfinite(prios)))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually moved
+    diff = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.abs(l).sum()),
+        jax.tree.map(lambda a, b: a - b, new_lslice.params, lslice.params), 0.0)
+    assert diff > 0
+
+
+# --- param store ------------------------------------------------------------
+
+def test_param_store_versioning():
+    store = ParamStore({"w": jnp.zeros((2,))})
+    assert store.version == 0
+    v1 = store.publish({"w": jnp.ones((2,))})
+    assert v1 == 1 and store.version == 1
+    snap = store.get()
+    assert snap.version == 1
+    assert float(snap.params["w"][0]) == 1.0
+
+
+def test_param_store_concurrent_reads_never_torn():
+    """Readers must always see a snapshot whose version matches its payload."""
+    store = ParamStore(jnp.zeros((4,)) + 0.0)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            snap = store.get()
+            if float(snap.params[0]) != float(snap.version):
+                errors.append((snap.version, float(snap.params[0])))
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for v in range(1, 200):
+        store.publish(jnp.zeros((4,)) + float(v))
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+
+
+# --- replay service queue paths ---------------------------------------------
+
+def make_block(cfg, env, agent, seed=0):
+    aslice, obs = init_actor(cfg, env, jax.random.key(seed))
+    params = agent.init(jax.random.key(seed + 1), obs[:1])
+    _, block, _ = phases.act_phase(cfg, env, agent, params, aslice, 0)
+    return block
+
+
+def empty_replay(cfg, env):
+    _, obs = batch_reset(env, jax.random.key(9), 1)
+    return replay_lib.init(cfg.replay, phases.item_example(env, obs))
+
+
+def test_actor_backpressure_when_service_stalled():
+    """With the owner thread not running, the bounded add queue fills and
+    further adds report backpressure instead of growing memory."""
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    service = ReplayService(cfg, empty_replay(cfg, env),
+                            add_queue_depth=2)  # never started
+    block = make_block(cfg, env, agent)
+    assert service.add(block, timeout=0.01)
+    assert service.add(block, timeout=0.01)
+    t0 = time.monotonic()
+    assert not service.add(block, timeout=0.05)   # actor would block here
+    assert time.monotonic() - t0 >= 0.04          # it genuinely waited
+
+
+def test_learner_starved_until_min_fill():
+    """Before min-fill the sample queue stays empty (learner-starved path);
+    after enough adds the service starts serving batches."""
+    preset = tiny_preset(min_fill=64)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    service = ReplayService(cfg, empty_replay(cfg, env)).start()
+    try:
+        assert service.get_batch(timeout=0.05) is None   # starved: empty replay
+        block = make_block(cfg, env, agent)              # 24 transitions
+        n_blocks = 64 // int(block.priorities.shape[0]) + 1
+        for _ in range(n_blocks):
+            assert service.add(block, timeout=1.0)
+        batch = None
+        deadline = time.monotonic() + 5.0
+        while batch is None and time.monotonic() < deadline:
+            batch = service.get_batch(timeout=0.1)
+        assert batch is not None, "service never served once min-fill passed"
+        assert batch.items["obs"].shape[0] == cfg.batch_size
+        assert bool(jnp.all(batch.is_weights > 0))
+    finally:
+        service.stop()
+    assert service.stats.transitions_added >= 64
+    assert service.stats.batches_sampled >= 1
+
+
+def test_priority_writeback_applied_on_drain():
+    """Write-backs queued before stop() are applied during the drain."""
+    preset = tiny_preset(min_fill=8)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    service = ReplayService(cfg, empty_replay(cfg, env)).start()
+    block = make_block(cfg, env, agent)
+    assert service.add(block, timeout=1.0)
+    batch = None
+    deadline = time.monotonic() + 5.0
+    while batch is None and time.monotonic() < deadline:
+        batch = service.get_batch(timeout=0.1)
+    assert batch is not None
+    service.write_back(batch.indices,
+                       jnp.full((cfg.batch_size,), 7.0, jnp.float32))
+    service.stop()
+    assert service.stats.updates_applied == 1
+    assert service.learner_steps == 1
+
+
+# --- end to end -------------------------------------------------------------
+
+def test_run_async_end_to_end():
+    preset = tiny_preset()
+    acfg = AsyncConfig(actor_threads=2, total_learner_steps=8,
+                       max_seconds=60.0, seed=3)
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    s = res.stats
+    assert s["learner_steps"] == 8
+    assert int(res.learner.learner_step) == 8
+    assert s["actor_transitions"] > 0
+    assert s["learner_transitions"] == 8 * preset.apex.batch_size
+    assert s["param_version"] >= 1          # learner published snapshots
+    assert s["replay_size"] > 0
+    assert s["generate_consume_ratio"] > 0
+    # every consumed batch's priorities came back to the replay service
+    assert res.service_stats.updates_applied == 8
+    assert res.service_stats.transitions_added == s["actor_transitions"]

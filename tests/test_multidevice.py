@@ -28,8 +28,8 @@ def test_apex_dqn_on_4_shards():
         import jax, jax.numpy as jnp
         from repro.configs import apex_dqn
         from repro.core import apex
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_mesh((4,), ("data",))
         preset = apex_dqn.reduced(num_shards=4)
         opt = preset.make_optimizer()
         init_fn, step_fn = apex.make_train_fn(

@@ -14,6 +14,7 @@ import pytest
 
 from repro.configs import apex_dqn
 from repro.core import apex, priority as prio, replay as replay_lib
+from repro.launch import mesh as mesh_lib
 
 
 def run(cfg, preset, iters, seed=0):
@@ -68,8 +69,7 @@ def test_learner_waits_for_min_fill():
 def test_replay_is_sharded_not_replicated():
     """Cross-shard isolation: the paper's 'shared' memory is logical —
     physical shards never exchange items."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_lib.make_mesh((1,), ("data",))
     preset = apex_dqn.reduced(num_shards=1)
     optimizer = preset.make_optimizer()
     init_fn, step_fn = apex.make_train_fn(
