@@ -75,11 +75,14 @@ def async_rates(preset, acfg: AsyncConfig) -> dict:
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
                     preset.make_optimizer())
     s = res.stats
+    svc = res.service_stats  # thread-safe fabric snapshot (live counters)
     return {"actor_tps": s["actor_tps"], "learner_tps": s["learner_tps"],
             "combined_tps": s["actor_tps"] + s["learner_tps"],
             "ratio": s["generate_consume_ratio"],
             "actor_blocked": s["actor_blocked"],
             "learner_starved": s["learner_starved"],
+            "transitions_added": svc.transitions_added,
+            "batches_sampled": svc.batches_sampled,
             "seconds": s["seconds"]}
 
 
@@ -102,9 +105,12 @@ def main() -> int:
         sync_iters, learner_steps = 25, 150
 
     sync = sync_rates(preset, sync_iters)
+    # progress_every_s exercises ServiceStats.snapshot() while the run is
+    # hot: the runner's progress thread reads the fabric counters live.
     acfg = AsyncConfig(actor_threads=args.actor_threads,
                        total_learner_steps=learner_steps,
-                       max_seconds=180.0 if args.smoke else 600.0)
+                       max_seconds=180.0 if args.smoke else 600.0,
+                       progress_every_s=None if args.smoke else 10.0)
     asy = async_rates(preset, acfg)
 
     us = sync["seconds"] * 1e6 / max(sync_iters, 1)
@@ -124,6 +130,8 @@ def main() -> int:
          f"{asy['actor_blocked']:.0f}")
     emit("async_throughput/async_learner_starved", aus,
          f"{asy['learner_starved']:.0f}")
+    emit("async_throughput/async_transitions_added", aus,
+         f"{asy['transitions_added']:.0f}")
     speedup = asy["combined_tps"] / max(sync["combined_tps"], 1e-9)
     emit("async_throughput/async_vs_sync_combined", aus, f"{speedup:.2f}")
 

@@ -1,0 +1,250 @@
+"""Replay-fabric shard scaling — generate-side transitions/s vs shard count.
+
+The paper scales by sharding the central replay memory (§3): ingest
+bandwidth grows with the number of replay shards because each shard's owner
+thread applies its own adds. This bench measures that axis directly:
+
+* ``gen`` rows — P actor threads push prebuilt (realistic, ``act_phase``
+  -shaped) ``TransitionBlock``s into a ``ReplayFabric`` for a fixed window,
+  with sampling gated off (min-fill unreachable), so the measured rate is the
+  fabric's pure ingest bandwidth. A single shard serializes every add behind
+  one owner thread; N shards apply adds concurrently — the scaling headroom
+  the acceptance bar targets (2 shards >= 1.15x one shard at >= 4 actors).
+* ``e2e`` rows (skipped in ``--smoke``) — full ``run_async`` training at each
+  shard count, reporting the paper's §4.1 generate/consume split.
+
+Emitted rows (benchmarks/common.py CSV convention):
+  shard_scaling/gen_tps_shards{N}_actors{P}
+  shard_scaling/gen_speedup_2shard_vs_1shard
+  shard_scaling/e2e_{actor,learner}_tps_shards{N}   (not in --smoke)
+
+The full result set is also written as JSON to a *stable* artifact path
+(``--json``, default ``benchmarks/artifacts/BENCH_shard_scaling.json``) so CI
+uploads accumulate a perf trajectory. ``--check`` exits nonzero when the
+2-shard generate rate does not reach 1.15x the 1-shard fabric.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import statistics
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.common import emit  # noqa: E402
+from repro.configs import apex_dqn  # noqa: E402
+from repro.core import apex, replay as replay_lib  # noqa: E402
+from repro.core.agents import DQNAgent  # noqa: E402
+from repro.envs.synthetic import ChainWorld, batch_reset  # noqa: E402
+from repro.models.qnetworks import DuelingDQN  # noqa: E402
+from repro.runtime import (AsyncConfig, ReplayFabric, phases,  # noqa: E402
+                           run_async)
+
+DEFAULT_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "artifacts", "BENCH_shard_scaling.json")
+
+
+def bench_preset(lanes: int = 128, rollout: int = 32) -> apex_dqn.ApexDQNPreset:
+    """Ingest-heavy geometry: small net (cheap acting), big blocks (the
+    per-transition cost is dominated by the replay-side sum-tree/storage
+    writes the fabric is supposed to parallelize)."""
+    env = ChainWorld(length=16, max_steps=64)
+    agent = DQNAgent(net=DuelingDQN(num_actions=env.num_actions,
+                                    mlp_hidden=(32,), head_hidden=32),
+                     grad_clip=40.0)
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(capacity=8192, min_fill=512),
+        lanes_per_shard=lanes, num_shards=1, rollout_len=rollout, n_step=3,
+        batch_size=128, learner_steps_per_iter=1, param_sync_period=2,
+        target_update_period=100, evict_interval=50,
+        eps_base=0.4, eps_alpha=7.0)
+    return apex_dqn.ApexDQNPreset(apex=cfg, env=env, agent=agent,
+                                  learning_rate=1e-3)
+
+
+def make_block(cfg, env, agent, seed: int = 0) -> phases.TransitionBlock:
+    """One realistic act_phase output block (shapes/dtypes as in training)."""
+    env_state, obs = batch_reset(env, jax.random.key(seed),
+                                 cfg.lanes_per_shard)
+    aslice = phases.ActorSlice(
+        env_state=env_state, obs=obs,
+        ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+        rng=jax.random.fold_in(jax.random.key(seed), 1),
+        frames=jnp.zeros((), jnp.int32))
+    params = agent.init(jax.random.key(seed + 1), obs[:1])
+    _, block, _ = jax.jit(lambda p, sl: phases.act_phase(
+        cfg, env, agent, p, sl, 0))(params, aslice)
+    return jax.block_until_ready(block)
+
+
+def _ingest_window(fabric, block, pushers: int, seconds: float) -> float:
+    """One measurement window: saturate the fabric with pusher threads for
+    ``seconds`` and return the applied transitions/s (read via thread-safe
+    fabric snapshots while hot)."""
+    stop = threading.Event()
+
+    def push() -> None:
+        while not stop.is_set():
+            fabric.add(block, timeout=0.05)
+
+    threads = [threading.Thread(target=push, daemon=True,
+                                name=f"pusher-{i}") for i in range(pushers)]
+    for th in threads:
+        th.start()
+    snap0 = fabric.snapshot()
+    t0 = time.perf_counter()
+    time.sleep(seconds)
+    snap1 = fabric.snapshot()
+    dt = time.perf_counter() - t0
+    stop.set()
+    for th in threads:
+        th.join()
+    applied = snap1.transitions_added - snap0.transitions_added
+    return applied / dt if dt > 0 else 0.0
+
+
+def gen_rates(preset, shard_counts: list[int], pushers: int, seconds: float,
+              rounds: int = 5) -> list[dict]:
+    """Pure ingest bandwidth per shard count: sampling is gated off
+    (min-fill unreachable) so every owner-thread cycle is an add apply.
+
+    Shard counts are measured in *interleaved rounds* (1-shard window,
+    2-shard window, 1-shard window, ...) and reported as the per-config
+    median: CPU containers drift over tens of seconds (frequency scaling,
+    noisy neighbours), so back-to-back blocks of windows per config would
+    compare different machine states, and a max would reward the burstier
+    configuration. Each round builds a fresh fabric but reuses the
+    per-config compiled ``ShardFns``, so rebuilds cost threads, not XLA
+    compiles."""
+    cfg = preset.apex
+    # min-fill unreachable => shards never prefetch; pure add path.
+    cfg = dataclasses.replace(
+        cfg, replay=dataclasses.replace(cfg.replay,
+                                        min_fill=cfg.replay.capacity * 4))
+    block = make_block(cfg, preset.env, preset.agent)
+    _, obs = batch_reset(preset.env, jax.random.key(9), 1)
+    item = phases.item_example(preset.env, obs, cfg.compress_obs)
+
+    def fresh_fabric(n, fns, seed):
+        fabric = ReplayFabric(cfg, item, num_shards=n, add_queue_depth=4,
+                              seed=seed, fns=fns).start()
+        for _ in range(n * 2):  # pre-fill so the window is steady-state
+            fabric.add(block, timeout=1.0)
+        deadline = time.monotonic() + 2.0
+        while (fabric.snapshot().blocks_added < n * 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        return fabric
+
+    fns = {}
+    for n in shard_counts:  # compile each geometry once before the clock
+        fabric = fresh_fabric(n, None, seed=7)
+        fns[n] = fabric.fns
+        fabric.stop()
+
+    windows: dict[int, list[float]] = {n: [] for n in shard_counts}
+    for r in range(rounds):
+        for n in shard_counts:
+            fabric = fresh_fabric(n, fns[n], seed=100 + r)
+            windows[n].append(_ingest_window(fabric, block, pushers, seconds))
+            fabric.stop()
+            if fabric.error is not None:
+                raise RuntimeError("fabric died mid-bench") from fabric.error
+    return [{"mode": "gen", "shards": n, "actors": pushers,
+             "seconds": seconds * rounds, "window_tps": windows[n],
+             "tps": statistics.median(windows[n])}
+            for n in shard_counts]
+
+
+def e2e_rate(preset, shards: int, actors: int, learner_steps: int) -> dict:
+    acfg = AsyncConfig(actor_threads=actors, replay_shards=shards,
+                       total_learner_steps=learner_steps, max_seconds=600.0)
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    s = res.stats
+    return {"mode": "e2e", "shards": shards, "actors": actors,
+            "seconds": s["seconds"], "actor_tps": s["actor_tps"],
+            "learner_tps": s["learner_tps"],
+            "ratio": s["generate_consume_ratio"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: short ingest windows, no e2e rows")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless 2-shard gen tps >= 1.15x 1-shard")
+    ap.add_argument("--shards", default="1,2",
+                    help="comma-separated shard counts")
+    ap.add_argument("--actors", type=int, default=4,
+                    help="pusher/actor threads (acceptance bar: >= 4)")
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="ingest measurement window per shard count")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="stable artifact path for the JSON result set")
+    args = ap.parse_args()
+
+    shard_counts = [int(s) for s in args.shards.split(",") if s]
+    seconds = args.seconds or (1.5 if args.smoke else 3.0)
+    rounds = 5 if args.smoke else 9
+    preset = bench_preset()
+
+    rows = gen_rates(preset, shard_counts, args.actors, seconds,
+                     rounds=rounds)
+    for r in rows:
+        emit(f"shard_scaling/gen_tps_shards{r['shards']}_actors"
+             f"{args.actors}", r["seconds"] * 1e6, f"{r['tps']:.0f}")
+
+    by_shards = {r["shards"]: r for r in rows if r["mode"] == "gen"}
+    speedup = None
+    if 1 in by_shards and 2 in by_shards:
+        speedup = by_shards[2]["tps"] / max(by_shards[1]["tps"], 1e-9)
+        emit("shard_scaling/gen_speedup_2shard_vs_1shard",
+             seconds * 1e6, f"{speedup:.2f}")
+
+    if not args.smoke:
+        for n in shard_counts:
+            r = e2e_rate(preset, n, args.actors, learner_steps=60)
+            rows.append(r)
+            emit(f"shard_scaling/e2e_actor_tps_shards{n}",
+                 r["seconds"] * 1e6, f"{r['actor_tps']:.0f}")
+            emit(f"shard_scaling/e2e_learner_tps_shards{n}",
+                 r["seconds"] * 1e6, f"{r['learner_tps']:.0f}")
+
+    os.makedirs(os.path.dirname(args.json), exist_ok=True)
+    payload = {
+        "bench": "shard_scaling",
+        "unix_time": time.time(),
+        "cpu_count": os.cpu_count(),
+        "smoke": args.smoke,
+        "actors": args.actors,
+        "seconds_per_window": seconds,
+        "gen_speedup_2shard_vs_1shard": speedup,
+        "rows": rows,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json}")
+
+    if args.check:
+        if speedup is None:
+            print("FAIL: --check needs shard counts 1 and 2", file=sys.stderr)
+            return 1
+        if speedup < 1.15:
+            print(f"FAIL: 2-shard gen tps only {speedup:.2f}x the 1-shard "
+                  f"fabric (need >= 1.15x)", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,11 +5,14 @@ the full production loop at CPU scale (paper Fig. 2 workflow).
   PYTHONPATH=src python examples/train_apex_dqn.py [--iterations 300]
 
 ``--runtime async`` trains through the decoupled actor/learner runtime
-instead (actors + replay service + learner on separate threads, paper Fig. 1)
-and then runs the same greedy evaluation on the learned parameters:
+instead (actors + replay fabric + learner on separate threads, paper Fig. 1)
+and then runs the same greedy evaluation on the learned parameters;
+``--replay-shards`` shards the replay fabric and ``--inference-batching``
+shares one batched act dispatch across the actor threads:
 
   PYTHONPATH=src python examples/train_apex_dqn.py --runtime async \
-      --iterations 300 --actor-threads 2
+      --iterations 300 --actor-threads 2 --replay-shards 2 \
+      --inference-batching
 """
 
 import argparse
@@ -52,7 +55,8 @@ def main_async(args):
     preset = apex_dqn.reduced()
     os.makedirs(args.ckpt_dir, exist_ok=True)
     res = run_apex_async(preset, args.iterations, args.actor_threads,
-                         args.ckpt_dir)
+                         args.ckpt_dir, args.replay_shards,
+                         args.inference_batching)
     final = evaluate_greedy(preset, res.learner.params, episodes=16)
     print(f"\nfinal greedy evaluation over 16 episodes: {final:.3f}")
 
@@ -64,6 +68,8 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--runtime", choices=("sync", "async"), default="sync")
     ap.add_argument("--actor-threads", type=int, default=1)
+    ap.add_argument("--replay-shards", type=int, default=1)
+    ap.add_argument("--inference-batching", action="store_true")
     args = ap.parse_args()
 
     if args.runtime == "async":

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import priority as prio, replay as replay_lib
+from repro.core import priority as prio, replay as replay_lib, sampling
 from repro.envs.synthetic import batch_reset
 from repro.runtime import phases
 
@@ -154,16 +154,15 @@ def _global_is_weights(cfg: ApexConfig, batch: replay_lib.SampleBatch,
 
     With equal per-shard quotas, P(i) = leaf_i / (shard_total * num_shards);
     correcting with the global N and global max keeps the estimate unbiased
-    even when shard masses drift apart. Two scalar collectives total.
+    even when shard masses drift apart. Two scalar collectives total. The
+    formula itself lives in ``repro.core.sampling`` and is shared with the
+    async fabric's host-side merge (``sampling.merged_is_weights``).
     """
     if axis_name is None:
         return batch.is_weights
-    n_global = jax.lax.psum(size, axis_name)
-    p = batch.leaf_mass / jnp.maximum(batch.total_mass * cfg.num_shards, 1e-30)
-    w = jnp.power(jnp.maximum(n_global.astype(jnp.float32), 1.0)
-                  * jnp.maximum(p, 1e-30), -cfg.replay.beta)
-    w_max = jax.lax.pmax(jnp.max(w), axis_name)
-    return w / jnp.maximum(w_max, 1e-30)
+    return sampling.collective_is_weights(
+        batch.leaf_mass, batch.total_mass, size, cfg.num_shards,
+        cfg.replay.beta, axis_name)
 
 
 def learner_phase(cfg: ApexConfig, agent, optimizer, state: ApexState,

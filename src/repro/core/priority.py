@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import sampling
+
 # Paper defaults (§4.1, Appendix C/D).
 PRIORITY_EXPONENT = 0.6       # alpha_sample
 IS_EXPONENT = 0.4             # beta
@@ -37,11 +39,11 @@ def importance_weights(
 
     ``leaf_values`` are the p^alpha masses of the sampled leaves; P(i) =
     leaf/total. Normalizing by the batch max keeps weights <= 1 (paper follows
-    Schaul et al. 2016).
+    Schaul et al. 2016). The formula lives in ``repro.core.sampling`` (this is
+    its single-shard specialization) so sharded paths provably match it.
     """
-    p = leaf_values / jnp.maximum(total_mass, 1e-30)
-    w = jnp.power(jnp.maximum(num_items.astype(jnp.float32), 1.0) * jnp.maximum(p, 1e-30), -beta)
-    return w / jnp.maximum(jnp.max(w), 1e-30)
+    w = sampling.raw_weights(leaf_values, total_mass, num_items, beta)
+    return sampling.max_normalize(w)
 
 
 def epsilon_ladder(

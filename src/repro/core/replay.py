@@ -45,6 +45,8 @@ class SampleBatch(NamedTuple):
     is_weights: jax.Array  # (B,) max-normalized importance weights
     leaf_mass: jax.Array   # (B,) p^alpha of each sampled slot
     total_mass: jax.Array  # scalar, shard total priority mass
+    size: jax.Array        # scalar, shard live-item count at sample time
+                           # (feeds the global-N term when shards are merged)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,29 +142,48 @@ def add_alloc(
     valid: jax.Array | None = None,
 ) -> ReplayState:
     """Add into *free* slots (leaf mass == 0) — DPG mode, paired with
-    prioritized eviction which frees slots instead of a moving FIFO head."""
+    prioritized eviction which frees slots instead of a moving FIFO head.
+
+    When the block is larger than the number of free slots, the overflow
+    lanes are *dropped* (masked like invalid lanes) rather than spilling into
+    live slots: eviction is the only thing allowed to free a live slot, so a
+    full buffer sheds the overflow instead of silently clobbering experience
+    (``total_added`` counts only lanes actually stored, so drops are visible
+    as ``total_added`` falling behind the offered count).
+    """
     (batch,) = priorities.shape
     if valid is None:
         valid = jnp.ones((batch,), bool)
+    # Pack valid lanes first (stable, like add_fifo) so invalid lanes don't
+    # waste free slots.
+    order = jnp.argsort(~valid, stable=True)
+    items = jax.tree.map(lambda x: x[order], items)
+    priorities = priorities[order]
+    valid = valid[order]
+
     live = sumtree.leaves(state.tree) > 0
     free_first = jnp.argsort(live, stable=True)  # free slots first, by index
     idx = free_first[:batch]
-    was_live = live[idx]
-    leaf = jnp.where(valid, prio.to_leaf(priorities, cfg.alpha), sumtree.leaves(state.tree)[idx])
+    num_free = (~live).sum().astype(jnp.int32)
+    offs = jnp.arange(batch, dtype=jnp.int32)
+    # Lanes past the free-slot count would land on live slots: mask them out.
+    applied = valid & (offs < num_free)
+    leaf = jnp.where(applied, prio.to_leaf(priorities, cfg.alpha),
+                     sumtree.leaves(state.tree)[idx])
     storage = jax.tree.map(
         lambda buf, x: buf.at[idx].set(
-            jnp.where(jnp.expand_dims(valid, tuple(range(1, x.ndim))), x.astype(buf.dtype), buf[idx])
+            jnp.where(jnp.expand_dims(applied, tuple(range(1, x.ndim))), x.astype(buf.dtype), buf[idx])
         ),
         state.storage, items,
     )
     tree = sumtree.write(state.tree, idx, leaf)
-    n_new = (valid & ~was_live).sum().astype(jnp.int32)
+    n_new = applied.sum().astype(jnp.int32)
     return ReplayState(
         storage=storage,
         tree=tree,
         write_pos=state.write_pos,
         size=jnp.minimum(state.size + n_new, cfg.capacity),
-        total_added=state.total_added + valid.sum().astype(jnp.int32),
+        total_added=state.total_added + n_new,
     )
 
 
@@ -172,7 +193,7 @@ def sample(cfg: ReplayConfig, state: ReplayState, rng: jax.Array, batch: int) ->
     leaf = sumtree.leaves(state.tree)[idx]
     items = jax.tree.map(lambda buf: buf[idx], state.storage)
     w = prio.importance_weights(leaf, sumtree.total(state.tree), state.size, cfg.beta)
-    return SampleBatch(idx, items, w, leaf, sumtree.total(state.tree))
+    return SampleBatch(idx, items, w, leaf, sumtree.total(state.tree), state.size)
 
 
 def set_priorities(

@@ -1,0 +1,77 @@
+"""Backend-agnostic global importance-sampling weight math.
+
+The paper's learner corrects prioritized sampling with importance weights
+``w_i = (N * P(i))^-beta / max_j w_j`` computed against the *global* sampling
+distribution, even when the replay memory is physically sharded. With equal
+per-shard sample quotas the actual distribution is
+
+    P(i) = leaf_i / (shard_total(i) * num_shards)
+
+so the correction needs exactly two global reductions: the global item count
+``N`` and the global max weight. This module holds that formula **once** and
+exposes it through two reduction backends:
+
+* ``collective_is_weights`` — inside ``shard_map``/``vmap`` with a named
+  axis: the reductions are ``lax.psum`` / ``lax.pmax`` collectives (the
+  synchronous ``repro.core.apex`` driver).
+* ``merged_is_weights``     — over host-stacked per-shard sub-samples: the
+  reductions are plain ``sum`` / ``max`` over the stacked axis (the async
+  ``repro.runtime.fabric.ReplayFabric`` learner-side merge).
+
+Both call the same ``raw_weights`` kernel, so the sync and async paths cannot
+drift numerically; ``repro.core.priority.importance_weights`` (the
+single-shard case) delegates here too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def raw_weights(leaf_mass: jax.Array, scaled_total: jax.Array,
+                num_items: jax.Array, beta: float) -> jax.Array:
+    """Unnormalized ``(N * P(i))^-beta`` for leaves with mass ``leaf_mass``.
+
+    ``scaled_total`` is the denominator of P(i): the owning shard's total
+    priority mass times the number of shards (``num_shards == 1`` recovers
+    the plain single-buffer probability). ``num_items`` is the *global* live
+    item count N.
+    """
+    p = leaf_mass / jnp.maximum(scaled_total, 1e-30)
+    n = jnp.maximum(num_items.astype(jnp.float32), 1.0)
+    return jnp.power(n * jnp.maximum(p, 1e-30), -beta)
+
+
+def max_normalize(w: jax.Array, w_max: jax.Array | None = None) -> jax.Array:
+    """Divide by the (global) max weight so corrections only scale down."""
+    if w_max is None:
+        w_max = jnp.max(w)
+    return w / jnp.maximum(w_max, 1e-30)
+
+
+def collective_is_weights(leaf_mass: jax.Array, total_mass: jax.Array,
+                          size: jax.Array, num_shards: int, beta: float,
+                          axis_name: str) -> jax.Array:
+    """IS weights inside a ``shard_map``/``vmap`` body: N and the max weight
+    are reduced with one ``psum`` and one ``pmax`` over ``axis_name``."""
+    n_global = jax.lax.psum(size, axis_name)
+    w = raw_weights(leaf_mass, total_mass * num_shards, n_global, beta)
+    return max_normalize(w, jax.lax.pmax(jnp.max(w), axis_name))
+
+
+def merged_is_weights(leaf_mass: jax.Array, total_mass: jax.Array,
+                      sizes: jax.Array, beta: float) -> jax.Array:
+    """IS weights for host-merged per-shard sub-samples.
+
+    ``leaf_mass`` is ``(S, b)`` — one row of sampled leaf masses per shard —
+    ``total_mass`` and ``sizes`` are ``(S,)`` per-shard totals/live counts.
+    The reductions that were collectives in ``collective_is_weights`` are
+    plain ``sum``/``max`` over the stacked shard axis; the per-item formula
+    is the identical ``raw_weights``. Returns ``(S, b)`` weights.
+    """
+    num_shards = leaf_mass.shape[0]
+    n_global = jnp.sum(sizes)
+    w = raw_weights(leaf_mass, (total_mass * num_shards)[:, None],
+                    n_global, beta)
+    return max_normalize(w)

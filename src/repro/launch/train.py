@@ -60,10 +60,13 @@ def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
 
 
 def run_apex_async(preset, learner_steps: int, actor_threads: int,
-                   ckpt_dir: str | None):
-    """Decoupled runtime: actors, replay service, and learner on their own
-    clocks; reports generate/consume transitions-per-second separately."""
+                   ckpt_dir: str | None, replay_shards: int = 1,
+                   inference_batching: bool = False):
+    """Decoupled runtime: actors, replay fabric shards, and learner on their
+    own clocks; reports generate/consume transitions-per-second separately."""
     acfg = AsyncConfig(actor_threads=actor_threads,
+                       replay_shards=replay_shards,
+                       inference_batching=inference_batching,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -78,7 +81,12 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
           f"(paper §4.1: ~12.5K:9.7K ~ 1.29)")
     print(f"  actor_blocked={int(s['actor_blocked'])} "
           f"learner_starved={int(s['learner_starved'])} "
-          f"replay_size={int(s['replay_size'])}")
+          f"replay_size={int(s['replay_size'])} "
+          f"shards={int(s['replay_shards'])}")
+    if res.inference_stats is not None:
+        i = res.inference_stats
+        print(f"  inference: {i.requests} act-requests in {i.dispatches} "
+              f"device dispatches ({i.full_waves} full waves)")
     if res.last_actor_metrics:
         print(f"  last mean_ep_return="
               f"{res.last_actor_metrics['mean_ep_return']:.3f}")
@@ -139,12 +147,20 @@ def main():
                          "(apex modes only)")
     ap.add_argument("--actor-threads", type=int, default=1,
                     help="actor threads for --runtime async")
+    ap.add_argument("--replay-shards", type=int, default=1,
+                    help="replay fabric shards for --runtime async (actor "
+                         "blocks route round-robin; learner batches merge "
+                         "per-shard sub-samples)")
+    ap.add_argument("--inference-batching", action="store_true",
+                    help="share one batched act dispatch across all actor "
+                         "threads (--runtime async)")
     args = ap.parse_args()
 
     def run_preset(preset):
         if args.runtime == "async":
             run_apex_async(preset, args.iterations, args.actor_threads,
-                           args.ckpt_dir)
+                           args.ckpt_dir, args.replay_shards,
+                           args.inference_batching)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

@@ -2,26 +2,59 @@
 
 Layering:
 
-* ``phases``  — pure, jittable per-phase functions shared with the
+* ``phases``    — pure, jittable per-phase functions shared with the
   synchronous ``repro.core.apex`` driver.
-* ``params``  — versioned lock-free parameter snapshot store (learner
+* ``params``    — versioned lock-free parameter snapshot store (learner
   publishes, actors pull every ``param_sync_period`` rollouts).
-* ``service`` — host-side replay service: a single owner thread applying
-  adds / priority write-backs to the sharded ``ReplayState`` behind
-  double-buffered bounded queues.
-* ``runner``  — thread wiring + throughput accounting (``run_async``).
+* ``service``   — ``ReplayShard``: a single owner thread applying adds /
+  priority write-backs to one device-resident ``ReplayState`` behind
+  double-buffered bounded queues (``ReplayService`` is the PR 1 alias).
+* ``fabric``    — ``ReplayFabric``: N shards composed into one replay
+  memory (topology below).
+* ``inference`` — ``InferenceServer``: coalesces actor act-requests into
+  one jitted ``vmap(act_phase)`` device dispatch shared by all actor
+  threads (the paper's 1/139 FPS-per-actor economics).
+* ``runner``    — thread wiring + throughput accounting (``run_async``).
+
+Fabric topology and the (shard, slot) key scheme
+------------------------------------------------
+
+::
+
+    actor 0 ─┐                       ┌─ ReplayShard 0 (owner thread) ─┐
+    actor 1 ─┼── add: round-robin ───┼─ ReplayShard 1                 ├─ merge ── learner
+      ...    │   (ticket counter)    │    ...                         │  (concat sub-samples,
+    actor K ─┘                       └─ ReplayShard N-1 ──────────────┘   merged IS weights)
+
+Each shard owns exactly ``capacity / N`` slots (so N must split the
+power-of-two capacity into power-of-two slices) and prefetches
+``batch_size / N``-item sub-batches on its own clock. A sampled transition's
+global key is ``global_index = shard_id * shard_capacity + slot`` — the
+paper's "keys" for the distributed replay — so learner priority write-backs
+are scattered back to the owning shard by decoding ``shard_id = key //
+shard_capacity``, ``slot = key % shard_capacity``. Importance weights for
+the merged batch are computed against the *global* sampling distribution
+``P(i) = leaf_i / (shard_total(i) * N)`` by ``repro.core.sampling`` — the
+exact formula the synchronous ``shard_map`` driver evaluates with
+``psum``/``pmax`` collectives, evaluated here with host-side reductions.
 """
 
+from repro.runtime.fabric import (FabricBatch, ReplayFabric,
+                                  shard_replay_config)
+from repro.runtime.inference import InferenceServer, InferenceStats
 from repro.runtime.params import ParamSnapshot, ParamStore
 from repro.runtime.phases import (ActorSlice, LearnerSlice, TransitionBlock,
                                   act_phase, lane_epsilons, learn_phase,
                                   priority_writeback, replay_add)
 from repro.runtime.runner import AsyncConfig, RuntimeResult, run_async
-from repro.runtime.service import ReplayService, ServiceStats
+from repro.runtime.service import (ReplayService, ReplayShard, ServiceStats,
+                                   ShardFns, make_shard_fns)
 
 __all__ = [
-    "ActorSlice", "AsyncConfig", "LearnerSlice", "ParamSnapshot", "ParamStore",
-    "ReplayService", "RuntimeResult", "ServiceStats", "TransitionBlock",
-    "act_phase", "lane_epsilons", "learn_phase", "priority_writeback",
-    "replay_add", "run_async",
+    "ActorSlice", "AsyncConfig", "FabricBatch", "InferenceServer",
+    "InferenceStats", "LearnerSlice", "ParamSnapshot", "ParamStore",
+    "ReplayFabric", "ReplayService", "ReplayShard", "RuntimeResult",
+    "ServiceStats", "ShardFns", "TransitionBlock", "act_phase",
+    "lane_epsilons", "learn_phase", "make_shard_fns", "priority_writeback",
+    "replay_add", "run_async", "shard_replay_config",
 ]

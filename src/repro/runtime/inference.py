@@ -1,0 +1,196 @@
+"""Shared actor inference server: K actor threads, one device dispatch.
+
+The paper's FPS economics (§4.1) rest on actors being nearly free relative to
+the learner — Ape-X runs 360 actors at ~1/139th of the learner's FPS each —
+which in practice requires *batching* actor policy evaluation so the device
+is dispatched once per wave of actors, not once per actor. Here actor threads
+submit their ``ActorSlice`` to a server thread that coalesces pending
+requests and runs **one** jitted ``vmap(act_phase)`` call over the stacked
+slices (parameters broadcast), then hands each actor its own slice of the
+stacked results.
+
+Semantics vs per-actor dispatch:
+
+* Numerics are identical per actor — ``act_phase`` is pure and the vmap axis
+  is the actor axis, so each actor's rollout uses its own rng/env state and
+  its shard's slice of the exploration ladder.
+* Parameter staleness is unified: the server refreshes its ``ParamStore``
+  snapshot every ``param_sync_period`` *dispatches* (a dispatch is one
+  rollout per participating actor), replacing the per-actor refresh clock.
+* Coalescing waits up to ``coalesce_s`` after the first pending request for
+  the rest of the wave; in steady state all actors block on results and
+  resubmit together, so full waves form naturally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import phases
+from repro.runtime.params import ParamStore
+
+
+@dataclasses.dataclass
+class InferenceStats:
+    requests: int = 0        # act() calls served
+    dispatches: int = 0      # jitted batched calls issued
+    full_waves: int = 0      # dispatches that batched max_batch requests
+    param_refreshes: int = 0
+
+
+class _Request:
+    __slots__ = ("aslice", "shard_id", "event", "result")
+
+    def __init__(self, aslice: phases.ActorSlice, shard_id: int):
+        self.aslice = aslice
+        self.shard_id = shard_id
+        self.event = threading.Event()
+        self.result = None
+
+
+class InferenceServer:
+    """Batches ``act_phase`` across actor threads into one jitted call."""
+
+    def __init__(self, cfg, env, agent, store: ParamStore, *,
+                 max_batch: int, param_sync_period: int | None = None,
+                 coalesce_s: float = 0.002):
+        self._cfg = cfg
+        self._store = store
+        self._max_batch = max_batch
+        self._sync_period = (param_sync_period if param_sync_period is not None
+                             else cfg.param_sync_period)
+        self._coalesce_s = coalesce_s
+        self._snap = store.get()
+
+        def batched(params, slices, sids):
+            return jax.vmap(lambda sl, sid: phases.act_phase(
+                cfg, env, agent, params, sl, sid))(slices, sids)
+
+        self._fn = jax.jit(batched)
+
+        self._pending: list[_Request] = []
+        self._cond = threading.Condition()
+        self._stop = threading.Event()
+        self._stats_lock = threading.Lock()
+        self.stats = InferenceStats()
+        self.error: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="inference-server")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "InferenceServer":
+        self._thread.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        if join and self._thread.is_alive():
+            self._thread.join()
+
+    def warm(self, aslice: phases.ActorSlice) -> int:
+        """Compile the full-wave batched call before the clock starts;
+        returns the measured per-actor transitions-per-block."""
+        slices = jax.tree.map(
+            lambda x: jnp.stack([x] * self._max_batch), aslice)
+        sids = jnp.arange(self._max_batch, dtype=jnp.int32)
+        _, blocks, _ = jax.block_until_ready(
+            self._fn(self._snap.params, slices, sids))
+        return int(blocks.priorities.shape[1])
+
+    def snapshot(self) -> InferenceStats:
+        with self._stats_lock:
+            return dataclasses.replace(self.stats)
+
+    # -- actor side ---------------------------------------------------------
+
+    def act(self, aslice: phases.ActorSlice, shard_id: int,
+            ) -> tuple[phases.ActorSlice, phases.TransitionBlock, dict] | None:
+        """Submit one rollout request and wait for its slice of the batched
+        result. Returns None when the server (or runtime) is stopping."""
+        if self.error is not None:
+            raise RuntimeError("inference server died") from self.error
+        req = _Request(aslice, shard_id)
+        with self._cond:
+            self._pending.append(req)
+            self._cond.notify_all()
+        while not req.event.wait(timeout=0.05):
+            if self.error is not None:
+                raise RuntimeError("inference server died") from self.error
+            if self._stop.is_set():
+                return None
+        if req.result is None:
+            if self.error is not None:
+                raise RuntimeError("inference server died") from self.error
+            return None  # stopped mid-dispatch
+        return req.result
+
+    # -- server loop --------------------------------------------------------
+
+    def _take_wave(self) -> list[_Request]:
+        with self._cond:
+            while not self._pending and not self._stop.is_set():
+                self._cond.wait(timeout=0.05)
+            if self._stop.is_set():
+                return []
+            deadline = time.monotonic() + self._coalesce_s
+            while len(self._pending) < self._max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(timeout=remaining)
+            wave = self._pending[:self._max_batch]
+            del self._pending[:len(wave)]
+            return wave
+
+    def _run(self) -> None:
+        try:
+            while not self._stop.is_set():
+                wave = self._take_wave()
+                if not wave:
+                    continue
+                self._dispatch(wave)
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+        finally:
+            with self._cond:  # unblock any actor still parked on a request
+                for req in self._pending:
+                    req.event.set()
+                self._pending.clear()
+
+    def _dispatch(self, wave: list[_Request]) -> None:
+        with self._stats_lock:
+            if self.stats.dispatches % self._sync_period == 0:
+                self._snap = self._store.get()
+                self.stats.param_refreshes += 1
+            self.stats.dispatches += 1
+            self.stats.requests += len(wave)
+            self.stats.full_waves += int(len(wave) == self._max_batch)
+        try:
+            # Pad short waves to max_batch by replicating the last request:
+            # one compiled shape forever instead of one trace per wave size
+            # (padding lanes recompute a duplicate rollout and are dropped).
+            pad = self._max_batch - len(wave)
+            reqs = wave + [wave[-1]] * pad
+            slices = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[r.aslice for r in reqs])
+            sids = jnp.asarray([r.shard_id for r in reqs], jnp.int32)
+            out = self._fn(self._snap.params, slices, sids)
+            for i, req in enumerate(wave):
+                req.result = jax.tree.map(lambda x: x[i], out)
+        except BaseException as e:  # noqa: BLE001
+            self.error = e  # recorded *before* actors wake, so act() raises
+            raise
+        finally:
+            # Whatever failed above, a taken wave must never park its actors
+            # forever: wake them (result stays None; act() re-raises).
+            for req in wave:
+                req.event.set()

@@ -6,13 +6,18 @@ inside one jitted step, which pins the generate:consume ratio to whatever
 free:
 
 * N actor threads each own an ``ActorSlice`` (``lanes_per_shard`` vector
-  envs) and loop: refresh params from the ``ParamStore`` every
-  ``param_sync_period`` rollouts → jitted ``act_phase`` → push the
-  ``TransitionBlock`` into the ``ReplayService`` (blocking on a bounded
-  queue = backpressure).
-* The learner thread loops: pop a prefetched prioritized batch → jitted
-  ``learn_phase`` → queue the priority write-back → publish fresh params.
-* The ``ReplayService`` owner thread is the only mutator of replay state.
+  envs) and loop: jitted ``act_phase`` → push the ``TransitionBlock`` into
+  the ``ReplayFabric`` (blocking on a bounded queue = backpressure). With
+  ``inference_batching`` the per-thread dispatch is replaced by one batched
+  ``vmap(act_phase)`` call shared by all actors (``runtime.inference``) —
+  the paper's FPS-per-actor economics.
+* The ``ReplayFabric`` owns ``replay_shards`` independent ``ReplayShard``
+  owner threads; actor blocks route round-robin and the learner batch is
+  merged from per-shard sub-samples with globally-corrected IS weights
+  (``repro.core.sampling``).
+* The learner thread loops: pop a merged prioritized batch → jitted
+  ``learn_phase`` → scatter the priority write-back to the owning shards →
+  publish fresh params through the versioned lock-free ``ParamStore``.
 
 Threads overlap because XLA releases the GIL while kernels execute, so actor
 rollouts, learner updates, and replay maintenance genuinely run concurrently
@@ -33,11 +38,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import replay as replay_lib
 from repro.envs.synthetic import batch_reset
 from repro.runtime import phases
+from repro.runtime.fabric import ReplayFabric
+from repro.runtime.inference import InferenceServer, InferenceStats
 from repro.runtime.params import ParamStore
-from repro.runtime.service import ReplayService, ServiceStats
+from repro.runtime.service import ServiceStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,12 +51,22 @@ class AsyncConfig:
     """Runtime geometry: thread counts, queue depths, stop conditions."""
 
     actor_threads: int = 1           # each runs cfg.lanes_per_shard lanes
-    add_queue_depth: int = 4         # actor→replay backpressure bound
+    replay_shards: int = 1           # ReplayShard owner threads in the fabric
+    inference_batching: bool = False # one vmapped act dispatch for all actors
+    add_queue_depth: int = 4         # actor→replay backpressure bound (per shard)
     sample_queue_depth: int = 2      # replay→learner prefetch (double buffer)
     total_learner_steps: int = 200   # stop once the learner consumed this many
     max_seconds: float | None = None # wall-clock safety stop
     publish_every: int = 1           # learner steps between param publications
-    starve_timeout_s: float = 0.02   # learner wait per empty-queue attempt
+    starve_timeout_s: float = 0.02   # learner wait per fabric.get_batch poll
+    add_poll_s: float = 0.02         # actor wait per fabric.add poll (these
+                                     # two replace the hardcoded add/get_batch
+                                     # poll intervals; direct ReplayShard /
+                                     # ReplayFabric users tune `poll_s` at
+                                     # construction instead)
+    coalesce_s: float = 0.002        # inference-server wave-forming window
+    progress_every_s: float | None = None  # log a fabric-snapshot line every
+                                     # so many seconds (None: no progress log)
     seed: int = 0
 
 
@@ -58,8 +74,10 @@ class AsyncConfig:
 class RuntimeResult:
     learner: phases.LearnerSlice     # final params/target/opt state
     stats: dict[str, float]          # throughput + contention counters
-    service_stats: ServiceStats
+    service_stats: ServiceStats      # fabric aggregate (summed over shards)
+    shard_stats: list[ServiceStats]  # per-shard counters
     last_actor_metrics: dict | None  # last act_phase metrics (any actor)
+    inference_stats: InferenceStats | None = None  # when inference_batching
 
 
 def _actor_geometry(cfg, acfg: AsyncConfig):
@@ -78,6 +96,9 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     if acfg.total_learner_steps < 1:
         raise ValueError("AsyncConfig.total_learner_steps must be >= 1, got "
                          f"{acfg.total_learner_steps}")
+    if acfg.replay_shards < 1:
+        raise ValueError("AsyncConfig.replay_shards must be >= 1, got "
+                         f"{acfg.replay_shards}")
     cfg = _actor_geometry(cfg, acfg)
     rng = jax.random.key(acfg.seed) if rng is None else rng
     p_rng, e_rng = jax.random.split(rng)
@@ -98,28 +119,48 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         params=params, target_params=jax.tree.map(jnp.copy, params),
         opt_state=optimizer.init(params),
         learner_step=jnp.zeros((), jnp.int32))
-    replay0 = replay_lib.init(
-        cfg.replay, phases.item_example(env, obs0, cfg.compress_obs))
+    item = phases.item_example(env, obs0, cfg.compress_obs)
 
     store = ParamStore(params)
-    service = ReplayService(
-        cfg, replay0, add_queue_depth=acfg.add_queue_depth,
+    fabric = ReplayFabric(
+        cfg, item, num_shards=acfg.replay_shards,
+        add_queue_depth=acfg.add_queue_depth,
         sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1)
+    server = (InferenceServer(cfg, env, agent, store,
+                              max_batch=acfg.actor_threads,
+                              coalesce_s=acfg.coalesce_s)
+              if acfg.inference_batching else None)
 
-    act_fn = jax.jit(lambda p, sl, sid: phases.act_phase(
-        cfg, env, agent, p, sl, sid))
+    act_fn = (None if server is not None else
+              jax.jit(lambda p, sl, sid: phases.act_phase(
+                  cfg, env, agent, p, sl, sid)))
     learn_fn = jax.jit(lambda lsl, items, w: phases.learn_phase(
         cfg, agent, optimizer, lsl, items, w, None))
 
-    # Warm the caches before the clock starts: one throwaway rollout and one
-    # throwaway update on storage-shaped garbage (results discarded).
-    _, block0, _ = jax.block_until_ready(
-        act_fn(params, slices[0], jnp.int32(0)))
-    items_ex = jax.tree.map(lambda b: b[:cfg.batch_size], replay0.storage)
+    # Warm the caches before the clock starts: one throwaway rollout (the
+    # batched server wave when inference batching is on, the per-actor fn
+    # otherwise — only the variant that will actually run) and one throwaway
+    # update on storage-shaped garbage (results discarded). The warm rollout
+    # also *measures* the block size, so accounting follows whatever
+    # act_phase actually emits.
+    if server is not None:
+        block_transitions = server.warm(slices[0])
+    else:
+        _, block0, _ = jax.block_until_ready(
+            act_fn(params, slices[0], jnp.int32(0)))
+        block_transitions = int(block0.priorities.shape[0])
+    if block_transitions > fabric.shard_capacity:
+        # a block must fit inside one shard or the circular add would alias
+        raise ValueError(
+            f"transition block ({block_transitions}) larger than per-shard "
+            f"replay capacity ({fabric.shard_capacity}): lower "
+            f"AsyncConfig.replay_shards (= {acfg.replay_shards}) or shrink "
+            f"lanes_per_shard * (rollout_len - n_step + 1) * replicate_k")
+    items_ex = jax.tree.map(
+        lambda a: jnp.zeros((cfg.batch_size,) + jnp.shape(a),
+                            jnp.asarray(a).dtype), item)
     jax.block_until_ready(
         learn_fn(lslice, items_ex, jnp.ones((cfg.batch_size,), jnp.float32)))
-
-    block_transitions = int(block0.priorities.shape[0])
     stop = threading.Event()
     counters = {"actor_transitions": 0, "actor_blocked": 0,
                 "learner_starved": 0, "rollouts": 0}
@@ -145,11 +186,18 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         snap = store.get()
         rollouts = blocked = pushed = 0
         while not stop.is_set():
-            if rollouts % cfg.param_sync_period == 0:
-                snap = store.get()
-            sl, block, metrics = act_fn(snap.params, sl, sid)
+            if server is not None:
+                # Batched inference: param refresh happens server-side.
+                res = server.act(sl, t)
+                if res is None:  # server (or runtime) stopping
+                    break
+                sl, block, metrics = res
+            else:
+                if rollouts % cfg.param_sync_period == 0:
+                    snap = store.get()
+                sl, block, metrics = act_fn(snap.params, sl, sid)
             while not stop.is_set():
-                if service.add(block, timeout=0.02):
+                if fabric.add(block, timeout=acfg.add_poll_s):
                     pushed += 1
                     break
                 blocked += 1  # bounded queue full: actor is backpressured
@@ -167,12 +215,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         lsl = learner_box["lslice"]
         steps = starved = 0
         while steps < acfg.total_learner_steps and not stop.is_set():
-            batch = service.get_batch(timeout=acfg.starve_timeout_s)
+            batch = fabric.get_batch(timeout=acfg.starve_timeout_s)
             if batch is None:
                 starved += 1  # replay below min-fill or prefetch lagging
                 continue
             lsl, new_prios, _ = learn_fn(lsl, batch.items, batch.is_weights)
-            service.write_back(batch.indices, new_prios)
+            fabric.write_back(batch.indices, new_prios)
             steps += 1
             if steps % acfg.publish_every == 0:
                 store.publish(lsl.params)
@@ -181,33 +229,62 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         learner_box["steps"] = steps
         counters["learner_starved"] = starved
 
+    # -- progress logging (satellite of the fabric: observable while hot) --
+    def progress_loop() -> None:
+        t_start = time.perf_counter()
+        while not stop.wait(timeout=acfg.progress_every_s):
+            snap = fabric.snapshot()
+            dt = time.perf_counter() - t_start
+            print(f"[async +{dt:6.1f}s] generated={snap.transitions_added} "
+                  f"sampled_batches={snap.batches_sampled} "
+                  f"writebacks={snap.updates_applied} "
+                  f"replay_size~{snap.replay_size} "
+                  f"params_v{store.version}")
+
     # -- drive ------------------------------------------------------------
-    service.start()
+    fabric.start()
+    if server is not None:
+        server.start()
     actors = [threading.Thread(target=guarded(actor_loop), args=(t,),
                                daemon=True, name=f"actor-{t}")
               for t in range(acfg.actor_threads)]
     learner = threading.Thread(target=guarded(learner_loop), daemon=True,
                                name="learner")
+    progress = (threading.Thread(target=progress_loop, daemon=True,
+                                 name="progress")
+                if acfg.progress_every_s else None)
     t0 = time.perf_counter()
     for th in actors:
         th.start()
     learner.start()
+    if progress is not None:
+        progress.start()
     learner.join(timeout=acfg.max_seconds)
     stop.set()
+    if server is not None:
+        server.stop(join=False)  # unblock actors parked on act() first
     for th in actors:
         th.join()
     learner.join()
+    if progress is not None:
+        progress.join()
     dt = time.perf_counter() - t0
-    service.stop()
-    if service.error is not None:
-        # The service may die after the learner's last call (e.g. during the
+    if server is not None:
+        server.stop()
+        if server.error is not None:
+            thread_errors.append(server.error)
+    fabric.stop()
+    if fabric.error is not None:
+        # A shard may die after the learner's last call (e.g. during the
         # final drain) — no later add/get_batch would surface it.
-        thread_errors.append(service.error)
+        thread_errors.append(fabric.error)
     if thread_errors:
         raise RuntimeError(
             f"async runtime worker died after {dt:.1f}s") from thread_errors[0]
 
     steps = learner_box["steps"]
+    shard_stats = fabric.shard_snapshots()
+    agg = fabric.snapshot()
     stats = {
         "seconds": dt,
         "actor_transitions": float(counters["actor_transitions"]),
@@ -219,7 +296,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         "actor_blocked": float(counters["actor_blocked"]),
         "learner_starved": float(counters["learner_starved"]),
         "param_version": float(store.version),
-        "replay_size": float(service.stats.replay_size),
+        "replay_size": float(agg.replay_size),
+        "replay_shards": float(acfg.replay_shards),
     }
     stats["generate_consume_ratio"] = (
         stats["actor_tps"] / stats["learner_tps"]
@@ -227,6 +305,7 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     m = last_metrics[0]
     return RuntimeResult(
         learner=learner_box["lslice"], stats=stats,
-        service_stats=service.stats,
+        service_stats=agg, shard_stats=shard_stats,
         last_actor_metrics=(
-            {k: float(v) for k, v in m.items()} if m is not None else None))
+            {k: float(v) for k, v in m.items()} if m is not None else None),
+        inference_stats=server.snapshot() if server is not None else None)

@@ -1,6 +1,6 @@
-"""Host-side replay service: the paper's central replay memory as a thread.
+"""Host-side replay shard: one slice of the paper's central replay memory.
 
-One owner thread holds the device-resident ``ReplayState`` and is the only
+One owner thread holds a device-resident ``ReplayState`` and is the only
 code that ever touches it, so replay mutation needs no locks. Traffic flows
 through three queues, mirroring Fig. 1's arrows:
 
@@ -15,6 +15,13 @@ through three queues, mirroring Fig. 1's arrows:
   counts as a learner step for the periodic eviction clock (paper: evict
   every 100 learning steps).
 
+A single ``ReplayShard`` *is* PR 1's ``ReplayService`` (the name is kept as
+an alias); ``repro.runtime.fabric.ReplayFabric`` composes N of them into the
+sharded replay fabric, routing actor blocks round-robin and merging per-shard
+sub-samples on the learner side. When a fabric owns several shards it builds
+one set of jitted phase functions (``make_shard_fns``) and passes it to every
+shard, so N shards share one compilation cache entry per op.
+
 Known (and intended) relaxation vs the lockstep driver: a prefetched batch
 may reference slots that a concurrent add overwrites before the learner's
 priorities come back. The paper's distributed system has the same window —
@@ -26,45 +33,72 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 
 from repro.core import replay as replay_lib
 from repro.runtime import phases
 
+# Owner-loop ops between refreshes of the host-visible ``replay_size`` (each
+# refresh is a device sync; counters stay exact, size is near-real-time).
+_SIZE_REFRESH_OPS = 32
+
 
 @dataclasses.dataclass
 class ServiceStats:
     blocks_added: int = 0          # transition blocks applied to replay
-    transitions_added: int = 0     # individual transitions applied
+    transitions_added: int = 0     # transitions offered to the replay op (in
+                                   # alloc/prioritized mode a full buffer may
+                                   # drop overflow lanes device-side; compare
+                                   # ReplayState.total_added for stored count)
     batches_sampled: int = 0       # prioritized batches prefetched
-    updates_applied: int = 0       # priority write-backs (= learner steps seen)
-    replay_size: int = 0           # live items at shutdown
+    updates_applied: int = 0       # priority write-backs applied by this
+                                   # shard (aggregated fabric stats sum these:
+                                   # one learner step touches every shard)
+    replay_size: int = 0           # live items (refreshed periodically while
+                                   # running; exact after stop())
 
 
-class ReplayService:
+class ShardFns(NamedTuple):
+    """Jitted phase functions for one shard geometry. Built once per fabric
+    (or per standalone shard) and shared, so N identical shards trace and
+    compile each op exactly once."""
+    add: Any
+    sample: Any
+    writeback: Any
+    can_sample: Any
+    split: Any
+
+
+def make_shard_fns(cfg, batch_size: int) -> ShardFns:
+    rcfg = cfg.replay
+    return ShardFns(
+        add=jax.jit(lambda st, block: phases.replay_add(cfg, st, block)),
+        sample=jax.jit(
+            lambda st, rng: replay_lib.sample(rcfg, st, rng, batch_size)),
+        writeback=jax.jit(
+            lambda st, idx, prios, step, rng: phases.priority_writeback(
+                cfg, st, idx, prios, step, rng)),
+        can_sample=jax.jit(lambda st: replay_lib.can_sample(rcfg, st)),
+        split=jax.jit(lambda k: jax.random.split(k)),
+    )
+
+
+class ReplayShard:
     """Single replay shard behind double-buffered host-side queues."""
 
     def __init__(self, cfg, replay_state: replay_lib.ReplayState, *,
                  batch_size: int | None = None, add_queue_depth: int = 4,
-                 sample_queue_depth: int = 2, seed: int = 0):
+                 sample_queue_depth: int = 2, seed: int = 0,
+                 shard_id: int = 0, fns: ShardFns | None = None,
+                 poll_s: float = 0.05):
         self._cfg = cfg
         self._state = replay_state
         self._rng = jax.random.key(seed)
-        batch = batch_size or cfg.batch_size
-        rcfg = cfg.replay
-
-        self._jit_add = jax.jit(
-            lambda st, block: phases.replay_add(cfg, st, block))
-        self._jit_sample = jax.jit(
-            lambda st, rng: replay_lib.sample(rcfg, st, rng, batch))
-        self._jit_writeback = jax.jit(
-            lambda st, idx, prios, step, rng: phases.priority_writeback(
-                cfg, st, idx, prios, step, rng))
-        self._jit_can_sample = jax.jit(
-            lambda st: replay_lib.can_sample(rcfg, st))
-        self._jit_split = jax.jit(lambda k: jax.random.split(k))
+        self._fns = fns or make_shard_fns(cfg, batch_size or cfg.batch_size)
+        self._poll_s = poll_s
+        self.shard_id = shard_id
 
         self._ready = False  # sticky min-fill latch (see _can_sample)
         self._add_q: queue.Queue = queue.Queue(maxsize=add_queue_depth)
@@ -72,7 +106,9 @@ class ReplayService:
         self._update_q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run_guarded, daemon=True,
-                                        name="replay-service")
+                                        name=f"replay-shard-{shard_id}")
+        self._stats_lock = threading.Lock()
+        self._ops_since_size = 0
         self.stats = ServiceStats()
         self.error: BaseException | None = None
 
@@ -83,12 +119,12 @@ class ReplayService:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def start(self) -> "ReplayService":
+    def start(self) -> "ReplayShard":
         self._thread.start()
         return self
 
     def stop(self, join: bool = True) -> None:
-        """Ask the service to drain pending work and exit."""
+        """Ask the shard to drain pending work and exit."""
         self._stop.set()
         if join and self._thread.is_alive():
             self._thread.join()
@@ -98,30 +134,46 @@ class ReplayService:
         """Final replay state; only meaningful after ``stop()``."""
         return self._state
 
+    # -- observability ------------------------------------------------------
+
+    def snapshot(self) -> ServiceStats:
+        """Consistent copy of the running counters, safe to call from any
+        thread at any time. ``replay_size`` is refreshed by the owner loop
+        every ~``_SIZE_REFRESH_OPS`` applied ops (exact after ``stop()``);
+        the other counters are exact at the moment of the snapshot."""
+        with self._stats_lock:
+            return dataclasses.replace(self.stats)
+
     # -- actor side ---------------------------------------------------------
 
     def _check_alive(self) -> None:
         if self.error is not None:
-            raise RuntimeError("replay service died") from self.error
+            raise RuntimeError(
+                f"replay shard {self.shard_id} died") from self.error
 
-    def add(self, block: phases.TransitionBlock, timeout: float = 0.05) -> bool:
+    def add(self, block: phases.TransitionBlock,
+            timeout: float | None = None) -> bool:
         """Enqueue a transition block; False when the bounded queue stayed
-        full for ``timeout`` seconds (the caller is being backpressured)."""
+        full for ``timeout`` seconds (the caller is being backpressured).
+        ``timeout=None`` uses the ``poll_s`` configured at construction
+        (the runner instead passes ``AsyncConfig.add_poll_s`` explicitly)."""
         self._check_alive()
         try:
-            self._add_q.put(block, timeout=timeout)
+            self._add_q.put(block, timeout=self._poll_s if timeout is None
+                            else timeout)
             return True
         except queue.Full:
             return False
 
     # -- learner side -------------------------------------------------------
 
-    def get_batch(self, timeout: float = 0.05):
+    def get_batch(self, timeout: float | None = None):
         """Next prefetched prioritized batch, or None if starved (replay
         below min-fill, or sampling not keeping up with the learner)."""
         self._check_alive()
         try:
-            return self._sample_q.get(timeout=timeout)
+            return self._sample_q.get(timeout=self._poll_s if timeout is None
+                                      else timeout)
         except queue.Empty:
             return None
 
@@ -131,26 +183,46 @@ class ReplayService:
 
     # -- owner loop ---------------------------------------------------------
 
+    def _bump(self, **deltas: int) -> None:
+        with self._stats_lock:
+            for k, d in deltas.items():
+                setattr(self.stats, k, getattr(self.stats, k) + d)
+            self._ops_since_size += 1
+            refresh = self._ops_since_size >= _SIZE_REFRESH_OPS
+            if refresh:
+                self._ops_since_size = 0
+        if refresh:
+            # Outside the lock: int() blocks on the device, and readers only
+            # need the counters to stay consistent, not the size to be fresh.
+            size = int(self._state.size)
+            with self._stats_lock:
+                self.stats.replay_size = size
+
     def _apply_add(self, block: phases.TransitionBlock) -> None:
-        self._state = self._jit_add(self._state, block)
-        self.stats.blocks_added += 1
-        self.stats.transitions_added += int(block.priorities.shape[0])
+        self._state = self._fns.add(self._state, block)
+        self._bump(blocks_added=1,
+                   transitions_added=int(block.priorities.shape[0]))
 
     def _can_sample(self) -> bool:
         """Min-fill gate with a sticky latch: the device-side check (a host
         sync) runs only until it first passes. Afterwards FIFO adds keep the
         buffer full and eviction trims to ``soft_cap >= min_fill``, so the
-        gate can't re-close in any supported config."""
+        gate can't re-close in any supported config. Before the gate can
+        possibly pass, a host-side counter short-circuits the device sync:
+        live size never exceeds the transitions offered, so while
+        ``transitions_added < min_fill`` the owner loop stays sync-free."""
         if not self._ready:
-            self._ready = bool(self._jit_can_sample(self._state))
+            if self.stats.transitions_added < self._cfg.replay.min_fill:
+                return False
+            self._ready = bool(self._fns.can_sample(self._state))
         return self._ready
 
     def _next_rng(self) -> jax.Array:
-        self._rng, sub = self._jit_split(self._rng)
+        self._rng, sub = self._fns.split(self._rng)
         return sub
 
     def _run_guarded(self) -> None:
-        # A dead service must not fail silently: record the error so actor /
+        # A dead shard must not fail silently: record the error so actor /
         # learner calls raise instead of spinning against a stalled queue.
         try:
             self._run()
@@ -168,10 +240,10 @@ class ReplayService:
                     idx, prios = self._update_q.get_nowait()
                 except queue.Empty:
                     break
-                self.stats.updates_applied += 1
-                self._state = self._jit_writeback(
-                    self._state, idx, prios, self.stats.updates_applied,
-                    self._next_rng())
+                step = self.stats.updates_applied + 1
+                self._state = self._fns.writeback(
+                    self._state, idx, prios, step, self._next_rng())
+                self._bump(updates_applied=1)
                 progressed = True
 
             # 2. Refill the prefetch buffer (Alg. 2 l.4) before touching the
@@ -179,12 +251,12 @@ class ReplayService:
             # protects, and a starved learner wastes more than a briefly
             # staler sampling distribution costs.
             while not self._sample_q.full() and self._can_sample():
-                batch = self._jit_sample(self._state, self._next_rng())
+                batch = self._fns.sample(self._state, self._next_rng())
                 try:
                     self._sample_q.put_nowait(batch)
                 except queue.Full:
                     break
-                self.stats.batches_sampled += 1
+                self._bump(batches_sampled=1)
                 progressed = True
 
             # 3. Drain actor blocks (Alg. 1 l.10-11).
@@ -208,4 +280,10 @@ class ReplayService:
                     continue
                 self._apply_add(block)
 
-        self.stats.replay_size = int(self._state.size)
+        size = int(self._state.size)
+        with self._stats_lock:
+            self.stats.replay_size = size
+
+
+# PR 1 name for the single-shard service; the owner loop is unchanged.
+ReplayService = ReplayShard

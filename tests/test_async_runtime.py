@@ -8,36 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import apex_dqn
+from _apex_helpers import init_actor, item_example, make_block, tiny_preset
+
 from repro.core import apex, replay as replay_lib
-from repro.core.agents import DQNAgent
-from repro.envs.synthetic import ChainWorld, batch_reset
-from repro.models.qnetworks import DuelingDQN
 from repro.runtime import (AsyncConfig, ParamStore, ReplayService, phases,
                            run_async)
-
-
-def tiny_preset(min_fill=32):
-    env = ChainWorld(length=6, max_steps=16)
-    agent = DQNAgent(net=DuelingDQN(num_actions=env.num_actions,
-                                    mlp_hidden=(16,), head_hidden=16),
-                     grad_clip=40.0)
-    cfg = apex.ApexConfig(
-        replay=replay_lib.ReplayConfig(capacity=512, min_fill=min_fill),
-        lanes_per_shard=4, num_shards=1, rollout_len=8, n_step=3,
-        batch_size=16, learner_steps_per_iter=1, param_sync_period=2,
-        target_update_period=10, evict_interval=10,
-        eps_base=0.4, eps_alpha=7.0)
-    return apex_dqn.ApexDQNPreset(apex=cfg, env=env, agent=agent,
-                                  learning_rate=1e-3)
-
-
-def init_actor(cfg, env, rng):
-    env_state, obs = batch_reset(env, rng, cfg.lanes_per_shard)
-    return phases.ActorSlice(
-        env_state=env_state, obs=obs,
-        ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
-        rng=jax.random.fold_in(rng, 1), frames=jnp.zeros((), jnp.int32)), obs
 
 
 # --- shared phases ----------------------------------------------------------
@@ -143,16 +118,8 @@ def test_param_store_concurrent_reads_never_torn():
 
 # --- replay service queue paths ---------------------------------------------
 
-def make_block(cfg, env, agent, seed=0):
-    aslice, obs = init_actor(cfg, env, jax.random.key(seed))
-    params = agent.init(jax.random.key(seed + 1), obs[:1])
-    _, block, _ = phases.act_phase(cfg, env, agent, params, aslice, 0)
-    return block
-
-
 def empty_replay(cfg, env):
-    _, obs = batch_reset(env, jax.random.key(9), 1)
-    return replay_lib.init(cfg.replay, phases.item_example(env, obs))
+    return replay_lib.init(cfg.replay, item_example(env))
 
 
 def test_actor_backpressure_when_service_stalled():

@@ -82,6 +82,33 @@ def test_alloc_reuses_freed_slots():
     assert int(state2.size) == 16
 
 
+def test_alloc_overflow_drops_instead_of_clobbering_live_slots():
+    """A block larger than the free-slot count must not overwrite live
+    experience: overflow lanes are dropped (only eviction frees live slots)."""
+    cfg = replay.ReplayConfig(capacity=16, soft_capacity=12, min_fill=1)
+    state = replay.init(cfg, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
+    state = replay.add_alloc(cfg, state, make_items(12), jnp.full(12, 2.0))
+    before_x = np.asarray(state.storage["x"]).copy()
+    before_leaves = np.asarray(sumtree.leaves(state.tree)).copy()
+    # 4 free slots, 10-lane block: 4 applied, 6 overflow lanes dropped.
+    state = replay.add_alloc(cfg, state, make_items(10, base=100),
+                             jnp.full(10, 9.0))
+    assert int(state.size) == 16
+    assert int(state.total_added) == 12 + 4
+    x = np.asarray(state.storage["x"])
+    leaves = np.asarray(sumtree.leaves(state.tree))
+    # the 12 live slots kept their items and priorities
+    np.testing.assert_array_equal(x[:12], before_x[:12])
+    np.testing.assert_allclose(leaves[:12], before_leaves[:12])
+    # the 4 free slots got the first 4 lanes of the new block
+    np.testing.assert_array_equal(x[12:16], np.arange(100, 104, dtype=np.float32))
+    # a completely full buffer drops the whole block
+    state2 = replay.add_alloc(cfg, state, make_items(8, base=500),
+                              jnp.full(8, 1.0))
+    assert int(state2.size) == 16
+    np.testing.assert_array_equal(np.asarray(state2.storage["x"]), x)
+
+
 def test_is_weights_uniform_priorities_are_one():
     state = replay.init(CFG, {"x": jnp.zeros(()), "y": jnp.zeros((3,), jnp.int32)})
     state = replay.add_fifo(CFG, state, make_items(32), jnp.ones(32))

@@ -1,0 +1,348 @@
+"""Sharded replay fabric: IS-weight equivalence across the sync collective
+path / the async host-merge path / the single-shard formula, round-robin
+routing, (shard, slot) key write-back scatter, thread-safe stats snapshots,
+and batched actor inference."""
+
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _apex_helpers import item_example, make_block, tiny_preset
+from _hypothesis_fallback import given, settings, st
+
+from repro.core import apex, priority as prio, replay as replay_lib
+from repro.core import sampling, sumtree
+from repro.envs.synthetic import batch_reset
+from repro.runtime import (AsyncConfig, InferenceServer, ParamStore,
+                           ReplayFabric, ReplayShard, phases, run_async,
+                           shard_replay_config)
+
+
+def fill_fabric(fabric, cfg, env, agent, n_blocks, timeout=5.0):
+    block = make_block(cfg, env, agent)
+    for _ in range(n_blocks):
+        assert fabric.add(block, timeout=1.0)
+    deadline = time.monotonic() + timeout
+    while (fabric.snapshot().blocks_added < n_blocks
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+    assert fabric.snapshot().blocks_added >= n_blocks
+    return int(block.priorities.shape[0])
+
+
+# --- IS-weight equivalence ---------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(shards=st.integers(2, 4), sub_batch=st.integers(1, 16),
+       seed=st.integers(0, 10_000))
+def test_merged_weights_equal_collective_weights(shards, sub_batch, seed):
+    """The fabric's host-side merge and the sync driver's psum/pmax
+    collective path are the same formula: on identical per-shard sampled
+    leaf masses / totals / sizes they must agree to float exactness."""
+    rng = np.random.RandomState(seed)
+    leaf = jnp.asarray(rng.uniform(1e-4, 5.0, (shards, sub_batch)),
+                       jnp.float32)
+    totals = jnp.asarray(rng.uniform(1.0, 100.0, shards), jnp.float32)
+    sizes = jnp.asarray(rng.randint(1, 300, shards), jnp.int32)
+    beta = 0.4
+
+    merged = sampling.merged_is_weights(leaf, totals, sizes, beta)
+    collective = jax.vmap(
+        lambda l, t, s: sampling.collective_is_weights(
+            l, t, s, shards, beta, "data"),
+        axis_name="data")(leaf, totals, sizes)
+    np.testing.assert_array_equal(np.asarray(merged),
+                                  np.asarray(collective))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shards=st.integers(1, 4), sub_batch=st.integers(1, 16),
+       seed=st.integers(0, 10_000))
+def test_merged_weights_equal_single_buffer_weights(shards, sub_batch, seed):
+    """With equal per-shard priority masses (the regime equal sampling
+    quotas assume), the N-shard merged weights equal the weights a single
+    global buffer would assign the same leaves — i.e. sharding the memory
+    does not change the learner's correction."""
+    rng = np.random.RandomState(seed)
+    leaf = rng.uniform(1e-4, 5.0, (shards, sub_batch)).astype(np.float32)
+    # normalize each shard to the same total mass
+    leaf = leaf / leaf.sum(axis=1, keepdims=True) * 37.5
+    extra = rng.uniform(0.0, 50.0, shards).astype(np.float32)
+    extra[:] = extra[0]  # same unsampled mass per shard
+    totals = jnp.asarray(leaf.sum(axis=1) + extra)
+    sizes = jnp.asarray(rng.randint(1, 300, shards), jnp.int32)
+
+    merged = sampling.merged_is_weights(jnp.asarray(leaf), totals, sizes,
+                                        prio.IS_EXPONENT)
+    single = prio.importance_weights(
+        jnp.asarray(leaf).reshape(-1), jnp.sum(totals), jnp.sum(sizes),
+        prio.IS_EXPONENT)
+    np.testing.assert_allclose(np.asarray(merged).reshape(-1),
+                               np.asarray(single), rtol=1e-6)
+
+
+def test_sync_collective_path_matches_fabric_formula():
+    """End-to-end formula check against the *actual* sync driver helper:
+    apex._global_is_weights under a named axis == sampling.merged on the
+    same sampled sub-batches."""
+    preset = tiny_preset()
+    cfg = dataclasses.replace(preset.apex, num_shards=2)
+    item = item_example(preset.env)
+    rcfg = cfg.replay
+    states, batches = [], []
+    for k in range(2):
+        st_k = replay_lib.init(rcfg, item)
+        n = 40 + 10 * k
+        items = jax.tree.map(
+            lambda a: jnp.stack([jnp.asarray(a)] * n), item)
+        pr = jax.random.uniform(jax.random.key(k), (n,)) * 3 + 0.1
+        st_k = replay_lib.add_fifo(rcfg, st_k, items, pr)
+        states.append(st_k)
+        batches.append(replay_lib.sample(rcfg, st_k, jax.random.key(10 + k),
+                                         cfg.batch_size // 2))
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    sizes = jnp.stack([s.size for s in states])
+    via_apex = jax.vmap(
+        lambda b, s: apex._global_is_weights(cfg, b, s, "data"),
+        axis_name="data")(stacked, sizes)
+    via_fabric = sampling.merged_is_weights(
+        stacked.leaf_mass, stacked.total_mass, sizes, rcfg.beta)
+    np.testing.assert_array_equal(np.asarray(via_apex),
+                                  np.asarray(via_fabric))
+
+
+# --- fabric routing ----------------------------------------------------------
+
+def test_fabric_round_robin_coverage():
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    fabric = ReplayFabric(cfg, item_example(env), num_shards=4,
+                          batch_size=16).start()
+    try:
+        fill_fabric(fabric, cfg, env, agent, n_blocks=12)
+        per_shard = [s.blocks_added for s in fabric.shard_snapshots()]
+        assert per_shard == [3, 3, 3, 3]
+    finally:
+        fabric.stop()
+    assert fabric.error is None
+
+
+def test_fabric_merged_batch_and_writeback_owning_shard():
+    preset = tiny_preset(min_fill=48, batch_size=16)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    fabric = ReplayFabric(cfg, item_example(env), num_shards=2).start()
+    try:
+        fill_fabric(fabric, cfg, env, agent, n_blocks=6)  # 3 blocks/shard
+        batch = None
+        deadline = time.monotonic() + 5.0
+        while batch is None and time.monotonic() < deadline:
+            batch = fabric.get_batch(timeout=0.1)
+        assert batch is not None, "fabric never served once min-fill passed"
+        assert batch.items["obs"].shape[0] == cfg.batch_size
+        idx = np.asarray(batch.indices)
+        cap = fabric.shard_capacity
+        # layout invariant: first half shard 0's keys, second half shard 1's
+        assert (idx[:8] < cap).all() and (idx[8:] >= cap).all()
+        w = np.asarray(batch.is_weights)
+        assert (w > 0).all() and (w <= 1.0 + 1e-6).all()
+
+        # distinct per-shard priorities: the scatter must land on the owner
+        prios = jnp.concatenate([jnp.full((8,), 3.0), jnp.full((8,), 9.0)])
+        fabric.write_back(batch.indices, prios)
+    finally:
+        fabric.stop()
+    assert fabric.error is None
+    for k, (state, val) in enumerate(zip(fabric.replay_states(), (3.0, 9.0))):
+        slots = np.asarray(batch.indices)[k * 8:(k + 1) * 8] - k * cap
+        leaves = np.asarray(sumtree.leaves(state.tree))
+        np.testing.assert_allclose(
+            leaves[slots], float(prio.to_leaf(jnp.asarray(val))), rtol=1e-6)
+        assert fabric.shards[k].snapshot().updates_applied == 1
+
+
+def test_shard_replay_config_partition():
+    rcfg = replay_lib.ReplayConfig(capacity=1024, soft_capacity=896,
+                                   min_fill=100)
+    sub = shard_replay_config(rcfg, 4)
+    assert sub.capacity == 256
+    assert sub.soft_capacity == 224
+    assert sub.min_fill == 25
+    assert shard_replay_config(rcfg, 1) is rcfg
+    # shard counts that cannot split the capacity into power-of-two slices
+    # are rejected rather than silently inflating/shrinking the memory
+    with pytest.raises(ValueError, match="power-of-two"):
+        shard_replay_config(rcfg, 3)
+
+
+def test_fabric_scales_eviction_quota_per_shard():
+    """Prioritized eviction fires on every shard per learner step; the
+    victim count must scale down with the per-shard buffer."""
+    preset = tiny_preset()
+    cfg = dataclasses.replace(preset.apex, eviction="prioritized",
+                              evict_num=12)
+    fabric = ReplayFabric(cfg, item_example(preset.env), num_shards=2)
+    assert fabric._cfg.evict_num == 6
+    # evict_num=0 falls back to batch_size in priority_writeback: scale that
+    cfg = dataclasses.replace(cfg, evict_num=0)
+    fabric = ReplayFabric(cfg, item_example(preset.env), num_shards=2)
+    assert fabric._cfg.evict_num == cfg.batch_size // 2
+    # single-shard fabrics keep the config untouched
+    assert ReplayFabric(cfg, item_example(preset.env),
+                        num_shards=1)._cfg is cfg
+
+
+def test_fabric_rejects_indivisible_batch():
+    preset = tiny_preset()
+    with pytest.raises(ValueError, match="divisible"):
+        ReplayFabric(preset.apex, item_example(preset.env), num_shards=4,
+                     batch_size=18)
+
+
+# --- stats observability -----------------------------------------------------
+
+def test_service_stats_snapshot_while_running():
+    """snapshot() is safe and consistent from another thread mid-run, and
+    replay_size becomes visible while the shard is still running (it was
+    only valid after stop() before)."""
+    preset = tiny_preset(capacity=8192)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    shard = ReplayShard(cfg, replay_lib.init(cfg.replay, item_example(env)),
+                        add_queue_depth=8).start()
+    block = make_block(cfg, env, agent)
+    n_blocks = 48  # > _SIZE_REFRESH_OPS so the live size refresh triggers
+    stop = threading.Event()
+    snaps = []
+
+    def watcher():
+        while not stop.is_set():
+            snaps.append(shard.snapshot())
+            time.sleep(0.001)  # don't starve the owner thread of the GIL
+
+    w = threading.Thread(target=watcher, daemon=True)
+    w.start()
+    try:
+        for _ in range(n_blocks):
+            assert shard.add(block, timeout=5.0)
+        deadline = time.monotonic() + 30.0
+        while (shard.snapshot().blocks_added < n_blocks
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        live = shard.snapshot()  # before stop(): must already be populated
+    finally:
+        stop.set()
+        w.join()
+        shard.stop()
+    assert live.blocks_added == n_blocks
+    assert live.replay_size > 0
+    blocks_seen = [s.blocks_added for s in snaps]
+    assert blocks_seen == sorted(blocks_seen)  # monotonic, never torn
+    for s in snaps:
+        assert s.transitions_added == s.blocks_added * int(
+            block.priorities.shape[0])
+
+
+def test_shard_poll_default_configurable():
+    """The poll interval that used to be a hardcoded 0.05 is configurable:
+    per-shard via the ``poll_s`` constructor arg (direct API users), and in
+    the runner via AsyncConfig.add_poll_s / starve_timeout_s."""
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    shard = ReplayShard(cfg, replay_lib.init(cfg.replay, item_example(env)),
+                        add_queue_depth=1, poll_s=0.01)  # never started
+    block = make_block(cfg, env, agent)
+    assert shard.add(block)
+    t0 = time.monotonic()
+    assert not shard.add(block)          # full queue, default (0.01s) poll
+    assert time.monotonic() - t0 < 0.5   # a 0.05 default would also pass,
+    assert shard.get_batch() is None     # but the wiring is what's under test
+    acfg = AsyncConfig(add_poll_s=0.01, starve_timeout_s=0.03)
+    assert acfg.add_poll_s == 0.01 and acfg.starve_timeout_s == 0.03
+
+
+# --- batched inference -------------------------------------------------------
+
+def test_inference_server_matches_direct_act():
+    """K actors through one batched dispatch get the same rollout results
+    as direct per-actor act_phase calls with the same params/slices."""
+    preset = tiny_preset()
+    cfg, env, agent = dataclasses.replace(preset.apex, num_shards=2), \
+        preset.env, preset.agent
+    slices = []
+    for t in range(2):
+        env_state, obs = batch_reset(env, jax.random.key(t),
+                                     cfg.lanes_per_shard)
+        slices.append(phases.ActorSlice(
+            env_state=env_state, obs=obs,
+            ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+            rng=jax.random.fold_in(jax.random.key(t), 1),
+            frames=jnp.zeros((), jnp.int32)))
+    params = agent.init(jax.random.key(7), slices[0].obs[:1])
+    store = ParamStore(params)
+    server = InferenceServer(cfg, env, agent, store, max_batch=2).start()
+    try:
+        results = [None, None]
+
+        def worker(t):
+            results[t] = server.act(slices[t], t)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(2)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    finally:
+        server.stop()
+    assert server.error is None
+    stats = server.snapshot()
+    assert stats.requests == 2
+    assert stats.dispatches <= 2  # coalesced (1 in the common case)
+    for t in range(2):
+        assert results[t] is not None
+        _, block, _ = results[t]
+        _, ref_block, _ = phases.act_phase(cfg, env, agent, params,
+                                           slices[t], t)
+        np.testing.assert_allclose(np.asarray(block.priorities),
+                                   np.asarray(ref_block.priorities),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(block.items["obs"]),
+                                   np.asarray(ref_block.items["obs"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --- end to end --------------------------------------------------------------
+
+def test_run_async_two_shards_end_to_end():
+    preset = tiny_preset()
+    acfg = AsyncConfig(actor_threads=2, replay_shards=2,
+                       total_learner_steps=8, max_seconds=120.0, seed=3)
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    s = res.stats
+    assert s["learner_steps"] == 8
+    assert int(res.learner.learner_step) == 8
+    assert s["actor_transitions"] > 0
+    assert s["replay_size"] > 0
+    assert len(res.shard_stats) == 2
+    for shard in res.shard_stats:
+        assert shard.blocks_added > 0        # round robin reached both
+        assert shard.updates_applied == 8    # every step scattered to both
+    assert res.service_stats.transitions_added == s["actor_transitions"]
+
+
+def test_run_async_inference_batching_end_to_end():
+    preset = tiny_preset()
+    acfg = AsyncConfig(actor_threads=2, replay_shards=2,
+                       inference_batching=True, total_learner_steps=6,
+                       max_seconds=120.0, seed=5)
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    assert res.stats["learner_steps"] == 6
+    assert res.inference_stats is not None
+    assert res.inference_stats.requests >= res.inference_stats.dispatches
+    assert res.inference_stats.dispatches > 0
