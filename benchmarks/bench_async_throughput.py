@@ -26,10 +26,11 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import emit, run_apex  # noqa: E402
+from benchmarks.common import emit, run_apex, write_artifact  # noqa: E402
 from repro.configs import apex_dqn  # noqa: E402
 from repro.core import apex, replay as replay_lib  # noqa: E402
 from repro.core.agents import DQNAgent  # noqa: E402
@@ -134,6 +135,17 @@ def main() -> int:
          f"{asy['transitions_added']:.0f}")
     speedup = asy["combined_tps"] / max(sync["combined_tps"], 1e-9)
     emit("async_throughput/async_vs_sync_combined", aus, f"{speedup:.2f}")
+
+    write_artifact("async_throughput", {
+        "bench": "async_throughput",
+        "unix_time": time.time(),
+        "cpu_count": os.cpu_count(),
+        "smoke": args.smoke,
+        "actor_threads": args.actor_threads,
+        "async_vs_sync_combined": speedup,
+        "sync": sync,
+        "async": asy,
+    })
 
     if args.check and speedup <= 1.0:
         print(f"FAIL: async combined {asy['combined_tps']:.0f} tps did not "

@@ -19,16 +19,16 @@ Emitted rows (benchmarks/common.py CSV convention):
   shard_scaling/e2e_{actor,learner}_tps_shards{N}   (not in --smoke)
 
 The full result set is also written as JSON to a *stable* artifact path
-(``--json``, default ``benchmarks/artifacts/BENCH_shard_scaling.json``) so CI
-uploads accumulate a perf trajectory. ``--check`` exits nonzero when the
-2-shard generate rate does not reach 1.15x the 1-shard fabric.
+(``--json``, default ``benchmarks/artifacts/BENCH_shard_scaling.json``) plus
+a repo-root ``BENCH_shard_scaling.json`` twin that is committed, so the perf
+trajectory accumulates in git history across PRs. ``--check`` exits nonzero
+when the 2-shard generate rate does not reach 1.15x the 1-shard fabric.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import statistics
 import sys
@@ -40,7 +40,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from benchmarks.common import emit  # noqa: E402
+from benchmarks.common import emit, write_artifact  # noqa: E402
 from repro.configs import apex_dqn  # noqa: E402
 from repro.core import apex, replay as replay_lib  # noqa: E402
 from repro.core.agents import DQNAgent  # noqa: E402
@@ -220,7 +220,6 @@ def main() -> int:
             emit(f"shard_scaling/e2e_learner_tps_shards{n}",
                  r["seconds"] * 1e6, f"{r['learner_tps']:.0f}")
 
-    os.makedirs(os.path.dirname(args.json), exist_ok=True)
     payload = {
         "bench": "shard_scaling",
         "unix_time": time.time(),
@@ -231,9 +230,7 @@ def main() -> int:
         "gen_speedup_2shard_vs_1shard": speedup,
         "rows": rows,
     }
-    with open(args.json, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"wrote {args.json}")
+    write_artifact("shard_scaling", payload, args.json)
 
     if args.check:
         if speedup is None:

@@ -9,12 +9,45 @@ structure (scaling slopes, orderings) is what reproduces the paper's claims.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.core import apex
+
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+_REPO_ROOT = os.path.dirname(_BENCH_DIR)
+ARTIFACT_DIR = os.path.join(_BENCH_DIR, "artifacts")
+
+
+def artifact_path(bench_name: str) -> str:
+    """Default (stable) JSON artifact path for a benchmark."""
+    return os.path.join(ARTIFACT_DIR, f"BENCH_{bench_name}.json")
+
+
+def write_artifact(bench_name: str, payload: dict,
+                   json_path: str | None = None) -> list[str]:
+    """Write a benchmark's JSON result set to its artifact path(s).
+
+    Always writes a repo-root ``BENCH_<name>.json`` twin alongside the
+    ``benchmarks/artifacts/`` copy (or an explicit ``json_path``): the root
+    copy is committed, so the perf trajectory accumulates in git history
+    across PRs instead of evaporating with each CI run."""
+    paths = [json_path or artifact_path(bench_name)]
+    root_twin = os.path.join(_REPO_ROOT, f"BENCH_{bench_name}.json")
+    if os.path.abspath(paths[0]) != root_twin:
+        paths.append(root_twin)
+    for path in paths:
+        parent = os.path.dirname(path)
+        if parent:  # bare filenames write to the cwd
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path}")
+    return paths
 
 
 def run_apex(cfg, preset, iters: int, seed: int = 0, warmup: int = 2):

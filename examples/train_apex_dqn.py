@@ -56,7 +56,8 @@ def main_async(args):
     os.makedirs(args.ckpt_dir, exist_ok=True)
     res = run_apex_async(preset, args.iterations, args.actor_threads,
                          args.ckpt_dir, args.replay_shards,
-                         args.inference_batching)
+                         args.inference_batching, args.actor_procs,
+                         args.learn_batches)
     final = evaluate_greedy(preset, res.learner.params, episodes=16)
     print(f"\nfinal greedy evaluation over 16 episodes: {final:.3f}")
 
@@ -68,8 +69,12 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--runtime", choices=("sync", "async"), default="sync")
     ap.add_argument("--actor-threads", type=int, default=1)
+    ap.add_argument("--actor-procs", type=int, default=0,
+                    help="remote actor OS processes via the replay gateway")
     ap.add_argument("--replay-shards", type=int, default=1)
     ap.add_argument("--inference-batching", action="store_true")
+    ap.add_argument("--learn-batches", type=int, default=1,
+                    help="batches per jitted learner call (lax.scan)")
     args = ap.parse_args()
 
     if args.runtime == "async":

@@ -16,6 +16,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class EncodedObs(NamedTuple):
@@ -45,6 +46,36 @@ def encode(obs: jax.Array, feature_dims: int = 1) -> EncodedObs:
 def decode(enc: EncodedObs, dtype=jnp.float32) -> jax.Array:
     """Inverse of :func:`encode` (exact for uint8 passthrough)."""
     return (enc.data.astype(jnp.float32) * enc.scale + enc.offset).astype(dtype)
+
+
+def encode_np(obs: np.ndarray, feature_dims: int = 1) -> EncodedObs:
+    """Host-side (numpy) twin of :func:`encode`, same affine/rounding math.
+
+    The wire codec (``repro.net.wire``) quantizes observations on the actor
+    host before serialization; running the device version there would cost a
+    dispatch + transfer per frame, so this stays in numpy. float32 min/max,
+    divide, and round-half-to-even match XLA's CPU lowering elementwise, so
+    both paths produce the same bytes (property-tested in
+    ``tests/test_net_wire.py``).
+    """
+    obs = np.asarray(obs)
+    if obs.dtype == np.uint8:
+        lead = obs.shape[:obs.ndim - feature_dims] + (1,) * feature_dims
+        return EncodedObs(obs, np.ones(lead, np.float32),
+                          np.zeros(lead, np.float32))
+    axes = tuple(range(obs.ndim - feature_dims, obs.ndim))
+    x = obs.astype(np.float32)
+    lo = x.min(axis=axes, keepdims=True)
+    hi = x.max(axis=axes, keepdims=True)
+    scale = np.maximum(hi - lo, np.float32(1e-12)) / np.float32(255.0)
+    q = np.clip(np.round((x - lo) / scale), 0, 255).astype(np.uint8)
+    return EncodedObs(q, scale.astype(np.float32), lo.astype(np.float32))
+
+
+def decode_np(enc: EncodedObs, dtype=np.float32) -> np.ndarray:
+    """Host-side twin of :func:`decode` (exact for uint8 passthrough)."""
+    return (np.asarray(enc.data, np.float32) * np.asarray(enc.scale)
+            + np.asarray(enc.offset)).astype(dtype)
 
 
 def storage_bytes(enc: EncodedObs) -> int:

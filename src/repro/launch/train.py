@@ -16,6 +16,8 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --mode apex-dqn --iterations 200
   PYTHONPATH=src python -m repro.launch.train --mode apex-dqn \
       --runtime async --actor-threads 2 --iterations 200
+  PYTHONPATH=src python -m repro.launch.train --mode apex-dqn \
+      --runtime async --actor-threads 0 --actor-procs 2 --iterations 200
   PYTHONPATH=src python -m repro.launch.train --mode llm --arch llama3.2-1b \
       --iterations 50 --ckpt-dir /tmp/ckpts
 """
@@ -61,12 +63,19 @@ def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
 
 def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    ckpt_dir: str | None, replay_shards: int = 1,
-                   inference_batching: bool = False):
+                   inference_batching: bool = False, actor_procs: int = 0,
+                   learn_batches: int = 1, wire_quantize_obs: bool = False):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
-    own clocks; reports generate/consume transitions-per-second separately."""
+    own clocks; reports generate/consume transitions-per-second separately.
+    ``actor_procs`` actors run as separate OS processes streaming blocks
+    through the replay gateway (single-machine proof of the multi-host
+    path); ``learn_batches`` batches are consumed per jitted learner call."""
     acfg = AsyncConfig(actor_threads=actor_threads,
+                       actor_procs=actor_procs,
                        replay_shards=replay_shards,
                        inference_batching=inference_batching,
+                       learn_batches_per_step=learn_batches,
+                       wire_quantize_obs=wire_quantize_obs,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -83,6 +92,12 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
           f"learner_starved={int(s['learner_starved'])} "
           f"replay_size={int(s['replay_size'])} "
           f"shards={int(s['replay_shards'])}")
+    if res.gateway_stats is not None:
+        g = res.gateway_stats
+        print(f"  gateway: {int(s['actor_procs'])} actor procs, "
+              f"{g.blocks_in} blocks / {g.transitions_in} transitions in, "
+              f"{g.param_sends} param snapshots out, "
+              f"{g.bytes_in / 1e6:.1f} MB ingested")
     if res.inference_stats is not None:
         i = res.inference_stats
         print(f"  inference: {i.requests} act-requests in {i.dispatches} "
@@ -154,13 +169,25 @@ def main():
     ap.add_argument("--inference-batching", action="store_true",
                     help="share one batched act dispatch across all actor "
                          "threads (--runtime async)")
+    ap.add_argument("--actor-procs", type=int, default=0,
+                    help="spawn this many actor OS processes streaming "
+                         "experience through the replay gateway socket "
+                         "(--runtime async; combine with --actor-threads 0 "
+                         "for a pure multi-process run)")
+    ap.add_argument("--learn-batches", type=int, default=1,
+                    help="prefetched batches consumed per jitted learner "
+                         "call via lax.scan (--runtime async)")
+    ap.add_argument("--wire-quantize-obs", action="store_true",
+                    help="actor processes ship observations via the replay "
+                         "codec (uint8 + affine, ~4x less wire traffic)")
     args = ap.parse_args()
 
     def run_preset(preset):
         if args.runtime == "async":
             run_apex_async(preset, args.iterations, args.actor_threads,
                            args.ckpt_dir, args.replay_shards,
-                           args.inference_batching)
+                           args.inference_batching, args.actor_procs,
+                           args.learn_batches, args.wire_quantize_obs)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

@@ -1,0 +1,31 @@
+"""Multi-host actor ingest (paper §3: distributed acting, after Gorila).
+
+* ``wire``         — versioned length-prefixed frame codec: transition
+  blocks + priorities (optionally obs-quantized via ``repro.core.codec``)
+  and ``ParamStore`` snapshots as deterministic array-trees.
+* ``gateway``      — ``ReplayGateway``: TCP server thread routing decoded
+  blocks into ``ReplayFabric.add`` (same global ``(shard, slot)`` keys and
+  backpressure as the in-process queue) and serving param snapshots.
+* ``actor_client`` — ``RemoteActorLoop``: actor *process* entry point that
+  streams jitted ``act_phase`` rollouts over the socket with a bounded
+  in-flight window; ``python -m repro.net.actor_client`` runs it against a
+  remote gateway (the multi-host path), ``launch/train.py --actor-procs N``
+  spawns local subprocesses (the single-machine proof).
+
+The wire format established here is the contract every future multi-host
+feature (remote learners, replay replication) builds on.
+"""
+
+from repro.net.actor_client import (RemoteActorLoop, RemoteActorSpec,
+                                    initial_slice, run_remote_actor)
+from repro.net.gateway import GatewayStats, ReplayGateway
+from repro.net.wire import (FrameReader, WireError, decode_block,
+                            decode_params, decode_tree, encode_block,
+                            encode_params, encode_tree)
+
+__all__ = [
+    "FrameReader", "GatewayStats", "RemoteActorLoop", "RemoteActorSpec",
+    "ReplayGateway", "WireError", "decode_block", "decode_params",
+    "decode_tree", "encode_block", "encode_params", "encode_tree",
+    "initial_slice", "run_remote_actor",
+]

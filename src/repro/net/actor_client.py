@@ -1,0 +1,280 @@
+"""Remote actor process: jitted rollouts streamed to a ``ReplayGateway``.
+
+This is the paper's actor binary (Alg. 1) as a separate OS process — the
+piece that makes "hundreds of actors on hundreds of machines" real rather
+than thread-simulated. Each process:
+
+1. connects to the gateway and handshakes (``HELLO``, protocol-versioned);
+2. pulls the initial parameter snapshot (Alg. 1 l.1);
+3. loops: jitted ``act_phase`` rollout → serialize the ``TransitionBlock``
+   (optionally quantizing float observations with the replay codec) →
+   ``ADD_BLOCK`` → every ``param_sync_period`` rollouts, ``PARAM_PULL``
+   (Alg. 1 l.2, periodic refresh);
+4. exits on ``STOP`` from the gateway (learner finished) or a closed
+   socket, reporting its client-side counters in a final ``BYE``.
+
+Backpressure mirrors the in-process path: at most ``max_inflight``
+un-acknowledged blocks may be on the wire. The gateway only ACKs a block
+*after* it lands in the fabric's bounded shard queue, so a saturated replay
+holds ACKs back and the remote actor blocks exactly where a local actor
+thread would block on ``fabric.add`` (waits counted like ``actor_blocked``).
+
+Numerics: the actor's rng/epsilon geometry is derived from ``(seed,
+actor_id)`` by the same fold-in scheme ``runtime/runner.py`` uses for actor
+threads, so a run with K threads + M processes spans one exploration ladder
+over K+M actors, and moving an actor across the process boundary does not
+change its stream.
+
+Run standalone against a remote host (the multi-host path)::
+
+    python -m repro.net.actor_client --host <gateway> --port <p> \
+        --preset apex-dqn --actor-id 3 --num-actors 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import socket
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.net import wire
+from repro.runtime import phases
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteActorSpec:
+    """Everything a remote actor process needs; must pickle (spawn)."""
+
+    cfg: Any                      # apex.ApexConfig with num_shards = total actors
+    env: Any
+    agent: Any
+    host: str
+    port: int
+    actor_id: int                 # global ladder position (threads first)
+    seed: int = 0                 # runner's AsyncConfig.seed
+    max_inflight: int = 4         # un-acked ADD_BLOCKs allowed on the wire
+    quantize_obs: bool = False    # wire-quantize float obs (replay codec)
+    param_sync_period: int | None = None  # default: cfg.param_sync_period
+    max_rollouts: int | None = None       # None: run until STOP / EOF
+    pin_cpu: int | None = None    # pin this process (and its XLA threads)
+                                  # to one core — the paper's one-actor-per-
+                                  # CPU model; unpinned actors let XLA's
+                                  # intra-op pool spread across cores
+    target_blocks_per_s: float | None = None  # pace sends to this offered
+                                  # rate (load-test mode: benchmarks drive a
+                                  # known aggregate load instead of racing
+                                  # the machine); None: run flat out
+    connect_timeout_s: float = 10.0
+    param_timeout_s: float = 120.0  # a backpressured gateway answers pulls
+                                    # late (its handler is busy holding our
+                                    # ACKs back) — that's congestion, not
+                                    # death, so this bound is generous
+    poll_s: float = 0.05          # wait granularity on a full window
+
+
+class _Stop(Exception):
+    """Gateway said STOP (or went away): drain and exit cleanly."""
+
+
+# The exact slice ``runner.run_async`` builds for actor ``actor_id`` — one
+# shared derivation, so thread and process actors are interchangeable
+# points on one ladder.
+initial_slice = phases.initial_actor_slice
+
+
+class RemoteActorLoop:
+    """One remote actor: socket client + jitted rollout loop."""
+
+    def __init__(self, spec: RemoteActorSpec):
+        self.spec = spec
+        cfg, env, agent = spec.cfg, spec.env, spec.agent
+        self._act = jax.jit(lambda p, sl, sid: phases.act_phase(
+            cfg, env, agent, p, sl, sid))
+        self._sync_period = (spec.param_sync_period
+                             if spec.param_sync_period is not None
+                             else cfg.param_sync_period)
+        self._params: Any = None
+        self._param_version = -1
+        self._pull_replies = 0    # PARAM + PARAM_UNCHANGED frames seen
+        self._in_flight = 0
+        self.stats = {"rollouts": 0, "pushed": 0, "blocked": 0,
+                      "transitions": 0, "param_pulls": 0, "bytes_out": 0,
+                      "param_version": -1}
+
+    # -- frame plumbing -----------------------------------------------------
+
+    def _handle(self, msg_type: int, payload: memoryview) -> None:
+        if msg_type == wire.ADD_ACK:
+            self._in_flight -= 1
+        elif msg_type == wire.PARAM:
+            version, params = wire.decode_params(payload)
+            # device_put once per refresh, not once per rollout dispatch
+            self._params = jax.device_put(params)
+            self._param_version = version
+            self.stats["param_version"] = version
+            self._pull_replies += 1
+        elif msg_type == wire.PARAM_UNCHANGED:
+            self._pull_replies += 1
+        elif msg_type == wire.STOP:
+            raise _Stop
+        else:
+            raise wire.WireError(f"unexpected message {msg_type} from gateway")
+
+    def _pump(self, reader: wire.FrameReader, timeout: float) -> bool:
+        """Process at most one pending frame; False on timeout."""
+        got = reader.read_frame(timeout=timeout)
+        if got is None:
+            return False
+        self._handle(*got)
+        return True
+
+    def _pull_params(self, sock: socket.socket, reader: wire.FrameReader,
+                     ) -> None:
+        """Request a snapshot newer than ours and wait for the reply
+        (ACKs interleaved on the stream are processed while waiting)."""
+        replies_before = self._pull_replies
+        self.stats["bytes_out"] += wire.send_frame(
+            sock, wire.PARAM_PULL,
+            wire.encode_json({"have": self._param_version}))
+        self.stats["param_pulls"] += 1
+        deadline = time.monotonic() + self.spec.param_timeout_s
+        while self._pull_replies == replies_before:
+            if time.monotonic() > deadline:
+                raise TimeoutError("gateway never answered PARAM_PULL")
+            self._pump(reader, timeout=self.spec.poll_s)
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self) -> dict:
+        """Act until the gateway stops us; returns client-side counters."""
+        spec = self.spec
+        sock = socket.create_connection((spec.host, spec.port),
+                                        timeout=spec.connect_timeout_s)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        reader = wire.FrameReader(sock)
+        try:
+            self.stats["bytes_out"] += wire.send_frame(
+                sock, wire.HELLO, wire.encode_json(
+                    {"actor_id": spec.actor_id,
+                     "protocol": wire.PROTOCOL_VERSION}))
+            self._pull_params(sock, reader)
+
+            sl = initial_slice(spec.cfg, spec.env, spec.seed, spec.actor_id)
+            sid = jnp.int32(spec.actor_id)
+            next_send = None  # offered-rate pacing schedule
+            while (spec.max_rollouts is None
+                   or self.stats["rollouts"] < spec.max_rollouts):
+                if (self.stats["rollouts"] > 0
+                        and self.stats["rollouts"] % self._sync_period == 0):
+                    self._pull_params(sock, reader)
+                sl, block, _metrics = self._act(self._params, sl, sid)
+                payload = wire.encode_block(block,
+                                            quantize_obs=spec.quantize_obs)
+                if spec.target_blocks_per_s:
+                    # Pace to the offered rate (no catch-up bursts: the
+                    # target is a strict upper bound), draining ACKs while
+                    # waiting out the slot. An overrun slot sends at once.
+                    period = 1.0 / spec.target_blocks_per_s
+                    now = time.monotonic()
+                    next_send = now if next_send is None else max(
+                        next_send + period, now)
+                    while True:
+                        remaining = next_send - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._pump(reader, timeout=remaining)
+                # Bounded in-flight window: wait for ACKs when full — this
+                # is where gateway/fabric backpressure reaches the actor.
+                while self._in_flight >= spec.max_inflight:
+                    if not self._pump(reader, timeout=spec.poll_s):
+                        self.stats["blocked"] += 1
+                self.stats["bytes_out"] += wire.send_frame(
+                    sock, wire.ADD_BLOCK, payload)
+                self._in_flight += 1
+                self.stats["rollouts"] += 1
+                self.stats["pushed"] += 1
+                self.stats["transitions"] += int(block.priorities.shape[0])
+                # opportunistically drain any ACKs already on the stream
+                while self._pump(reader, timeout=0.001):
+                    pass
+        except (_Stop, EOFError):
+            pass
+        finally:
+            try:
+                wire.send_frame(sock, wire.BYE, wire.encode_json(
+                    {"rollouts": self.stats["rollouts"],
+                     "blocked": self.stats["blocked"]}))
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        return self.stats
+
+
+def run_remote_actor(spec: RemoteActorSpec) -> dict:
+    """Process entry point (importable, so ``multiprocessing`` spawn and
+    ``launch/train.py --actor-procs`` can target it). A gateway that is
+    already gone — e.g. the learner finished while this process was still
+    compiling — is a clean exit, not a crash."""
+    if spec.pin_cpu is not None and hasattr(os, "sched_setaffinity"):
+        # Before the first jax op: XLA's intra-op threads spawn lazily and
+        # inherit this affinity, so the whole process stays on one core.
+        os.sched_setaffinity(0, {spec.pin_cpu % os.cpu_count()})
+    try:
+        return RemoteActorLoop(spec).run()
+    except (ConnectionError, TimeoutError, OSError) as e:
+        # Observable but non-fatal: the runtime tolerates individual actor
+        # losses (paper §3 — actors are expendable) and its gateway
+        # monitor stops the run only when no experience source remains.
+        print(f"actor {spec.actor_id} aborted: {e!r}", file=sys.stderr)
+        return {"aborted": str(e)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--preset", choices=("apex-dqn", "apex-dpg"),
+                    default="apex-dqn")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale preset geometry")
+    ap.add_argument("--actor-id", type=int, default=0,
+                    help="this actor's position on the global eps ladder")
+    ap.add_argument("--num-actors", type=int, default=1,
+                    help="total actors across all hosts (ladder width)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-inflight", type=int, default=4)
+    ap.add_argument("--quantize-obs", action="store_true",
+                    help="wire-quantize float observations (replay codec)")
+    ap.add_argument("--max-rollouts", type=int, default=None)
+    ap.add_argument("--pin-cpu", type=int, default=None,
+                    help="pin this actor process to one CPU core "
+                         "(one-actor-per-core, paper §3)")
+    args = ap.parse_args()
+
+    if args.preset == "apex-dqn":
+        from repro.configs import apex_dqn as preset_mod
+    else:
+        from repro.configs import apex_dpg as preset_mod
+    preset = preset_mod.full() if args.full else preset_mod.reduced()
+    cfg = dataclasses.replace(preset.apex, num_shards=args.num_actors)
+    spec = RemoteActorSpec(
+        cfg=cfg, env=preset.env, agent=preset.agent, host=args.host,
+        port=args.port, actor_id=args.actor_id, seed=args.seed,
+        max_inflight=args.max_inflight, quantize_obs=args.quantize_obs,
+        max_rollouts=args.max_rollouts, pin_cpu=args.pin_cpu)
+    stats = run_remote_actor(spec)
+    print(f"actor {args.actor_id} done: {stats}")
+
+
+if __name__ == "__main__":
+    main()

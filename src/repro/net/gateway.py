@@ -1,0 +1,281 @@
+"""Replay gateway: TCP ingest server in front of the replay fabric.
+
+This is the machine boundary of Fig. 1: remote actor processes (same host or
+across the network) stream ``ADD_BLOCK`` frames in, and the gateway routes
+the decoded ``TransitionBlock``s into the *same* ``ReplayFabric.add`` the
+in-process actor threads use — the learner cannot tell the two ingest paths
+apart (same round-robin shard routing, same global ``(shard, slot)`` keys,
+same backpressure semantics).
+
+Topology::
+
+    remote actor proc 0 ──TCP──┐
+    remote actor proc 1 ──TCP──┤   ReplayGateway          ReplayFabric
+           ...                 ├── (accept thread +  ───► add / round-robin
+    remote actor proc K ──TCP──┘    handler thread          shard routing
+                                    per connection)
+
+* Each connection gets its own handler thread: frame decode (a memcpy-level
+  numpy view) runs concurrently across actors, and the device transfer
+  happens on the owning shard's thread as for in-process adds.
+* **Backpressure propagates end to end.** ``fabric.add`` returning False
+  (bounded shard queue full) makes the handler retry — meanwhile no
+  ``ADD_ACK`` is sent, the client's bounded in-flight window stays open, and
+  the remote actor blocks exactly like a local actor blocks on the queue.
+  Retries are counted in ``GatewayStats.add_retries`` (the remote analogue
+  of the runner's ``actor_blocked``).
+* **Parameter serving.** ``PARAM_PULL {have: v}`` answers with the latest
+  ``ParamStore`` snapshot when its version is newer, else
+  ``PARAM_UNCHANGED`` — the client pulls every ``param_sync_period``
+  rollouts (Alg. 1 l.2), so the period is honored client-side and the
+  gateway never pushes unsolicited traffic.
+
+``stop()`` sends ``STOP`` to every live client (best effort), closes the
+listener, and joins the handlers; a handler that dies on malformed traffic
+records the error and drops that one connection, never the gateway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+import time
+from typing import Any
+
+from repro.net import wire
+from repro.runtime.params import ParamStore
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    connections: int = 0        # accepted actor connections (lifetime)
+    blocks_in: int = 0          # ADD_BLOCKs routed into the fabric
+    transitions_in: int = 0     # transitions carried by those blocks
+    add_retries: int = 0        # fabric.add backpressure retries (remote
+                                # analogue of the runner's actor_blocked)
+    param_pulls: int = 0        # PARAM_PULL requests served
+    param_sends: int = 0        # ... that shipped a fresh snapshot
+    bytes_in: int = 0
+    bytes_out: int = 0
+    client_rollouts: int = 0    # merged from BYE frames (client-side view)
+    client_blocked: int = 0     # client waits on a full in-flight window
+    wire_errors: int = 0        # connections dropped on malformed traffic
+
+
+class ReplayGateway:
+    """TCP server thread feeding ``ReplayFabric.add`` from remote actors."""
+
+    def __init__(self, fabric: Any, store: ParamStore, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 add_timeout_s: float = 0.05, poll_s: float = 0.2,
+                 drain_grace_s: float = 1.0, backlog: int = 64):
+        self._fabric = fabric
+        self._store = store
+        self._add_timeout_s = add_timeout_s
+        self._poll_s = poll_s
+        self._drain_grace_s = drain_grace_s
+        self._listener = socket.create_server((host, port), backlog=backlog)
+        self._listener.settimeout(poll_s)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._stop = threading.Event()
+        self._lock = threading.Lock()      # stats + connection registry
+        self._conns: dict[int, tuple[socket.socket, threading.Lock]] = {}
+        self._conn_blocks: dict[int, int] = {}  # routed blocks per accepted
+                                                # connection (kept after
+                                                # close, for observability)
+        self._handlers: list[threading.Thread] = []
+        # One device->host transfer + encode per published version, not one
+        # per pull per connection: K pulling actors share this payload.
+        self._param_cache: tuple[int, bytes] | None = None
+        self._param_cache_lock = threading.Lock()
+        self.stats = GatewayStats()
+        self.error: BaseException | None = None
+        self._thread = threading.Thread(target=self._accept_loop, daemon=True,
+                                        name="replay-gateway")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "ReplayGateway":
+        self._thread.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        """Send STOP to every client, close the listener, join handlers."""
+        self._stop.set()
+        with self._lock:
+            conns = list(self._conns.values())
+        for sock, send_lock in conns:
+            try:
+                with send_lock:
+                    wire.send_frame(sock, wire.STOP)
+            except OSError:
+                pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if join:
+            if self._thread.is_alive():
+                self._thread.join()
+            for th in list(self._handlers):
+                th.join()
+            with self._lock:
+                conns = list(self._conns.values())
+            for sock, _ in conns:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def snapshot(self) -> GatewayStats:
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    def connection_block_counts(self) -> list[int]:
+        """Blocks routed per accepted connection (accept order). Lets a
+        caller distinguish 'every actor is streaming' from 'one hot actor
+        carries the total' — e.g. warm-up gates in benchmarks."""
+        with self._lock:
+            return list(self._conn_blocks.values())
+
+    def _bump(self, **deltas: int) -> None:
+        with self._lock:
+            for k, d in deltas.items():
+                setattr(self.stats, k, getattr(self.stats, k) + d)
+
+    # -- accept loop --------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    sock, _addr = self._listener.accept()
+                except (socket.timeout, TimeoutError):
+                    continue
+                except OSError:
+                    break  # listener closed by stop()
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                cid = id(sock)
+                send_lock = threading.Lock()
+                with self._lock:
+                    self._conns[cid] = (sock, send_lock)
+                    self._conn_blocks[cid] = 0
+                    self.stats.connections += 1
+                th = threading.Thread(
+                    target=self._handle, args=(cid, sock, send_lock),
+                    daemon=True, name=f"gateway-conn-{self.stats.connections}")
+                self._handlers.append(th)
+                th.start()
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+
+    # -- per-connection handler ---------------------------------------------
+
+    def _handle(self, cid: int, sock: socket.socket,
+                send_lock: threading.Lock) -> None:
+        reader = wire.FrameReader(sock)
+        drain_deadline = None  # set when stop() is first observed
+        bytes_seen = 0
+        try:
+            while True:
+                if self._stop.is_set():
+                    # Grace window after STOP: clients drain their in-flight
+                    # blocks and report BYE counters before we hang up.
+                    now = time.monotonic()
+                    if drain_deadline is None:
+                        drain_deadline = now + self._drain_grace_s
+                    elif now >= drain_deadline:
+                        break
+                got = reader.read_frame(timeout=self._poll_s)
+                if reader.bytes_in != bytes_seen:  # live, not close-time
+                    self._bump(bytes_in=reader.bytes_in - bytes_seen)
+                    bytes_seen = reader.bytes_in
+                if got is None:
+                    continue
+                msg_type, payload = got
+                if msg_type == wire.ADD_BLOCK:
+                    if self._route_block(cid, payload):
+                        with send_lock:
+                            self._bump(bytes_out=wire.send_frame(
+                                sock, wire.ADD_ACK))
+                    # else: dropped during shutdown — no ACK; the client is
+                    # about to receive STOP anyway
+                elif msg_type == wire.PARAM_PULL:
+                    have = wire.decode_json(payload).get("have", -1)
+                    self._serve_params(sock, send_lock, int(have))
+                elif msg_type == wire.HELLO:
+                    hello = wire.decode_json(payload)
+                    if hello.get("protocol") != wire.PROTOCOL_VERSION:
+                        raise wire.WireError(
+                            f"client protocol {hello.get('protocol')} != "
+                            f"{wire.PROTOCOL_VERSION}")
+                elif msg_type == wire.BYE:
+                    stats = wire.decode_json(payload)
+                    self._bump(
+                        client_rollouts=int(stats.get("rollouts", 0)),
+                        client_blocked=int(stats.get("blocked", 0)))
+                    break
+                else:
+                    raise wire.WireError(f"unexpected message {msg_type}")
+        except EOFError:
+            pass  # client went away; its blocks are already routed
+        except wire.WireError:
+            self._bump(wire_errors=1)
+        except OSError:
+            pass  # socket torn down under us during stop()
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+        finally:
+            self._bump(bytes_in=reader.bytes_in - bytes_seen)
+            with self._lock:
+                self._conns.pop(cid, None)
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _route_block(self, cid: int, payload: memoryview) -> bool:
+        """Decode and push into the fabric, holding the client's ACK (and
+        therefore its in-flight window) open while the shard queue is full.
+        False only when the block was dropped because stop() interrupted
+        the retry loop."""
+        block = wire.decode_block(payload)
+        n = int(block.priorities.shape[0])
+        while not self._fabric.add(block, timeout=self._add_timeout_s):
+            self._bump(add_retries=1)
+            if self._stop.is_set():
+                return False
+        with self._lock:
+            self.stats.blocks_in += 1
+            self.stats.transitions_in += n
+            self._conn_blocks[cid] += 1
+        return True
+
+    def _encoded_params(self, snap) -> bytes:
+        with self._param_cache_lock:
+            cached = self._param_cache
+            if cached is not None and cached[0] == snap.version:
+                return cached[1]
+            payload = wire.encode_params(snap.version, snap.params)
+            self._param_cache = (snap.version, payload)
+            return payload
+
+    def _serve_params(self, sock: socket.socket, send_lock: threading.Lock,
+                      have: int) -> None:
+        snap = self._store.get()
+        if snap.version > have:
+            payload = self._encoded_params(snap)
+            with send_lock:
+                sent = wire.send_frame(sock, wire.PARAM, payload)
+            self._bump(param_pulls=1, param_sends=1, bytes_out=sent)
+        else:
+            with send_lock:
+                sent = wire.send_frame(
+                    sock, wire.PARAM_UNCHANGED,
+                    wire.encode_json({"version": snap.version}))
+            self._bump(param_pulls=1, bytes_out=sent)

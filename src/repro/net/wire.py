@@ -1,0 +1,334 @@
+"""Versioned length-prefixed wire protocol for actor → replay ingest.
+
+The paper's actors run on hundreds of CPU hosts and stream experience into a
+central replay (§3, after Gorila); the unit of that traffic is exactly the
+in-process unit — a ``TransitionBlock`` of n-step transitions plus
+actor-side initial priorities — so the wire format is a serialization of
+that block, not a new abstraction. Three design rules:
+
+* **Framed and versioned.** Every message is ``MAGIC | version | type |
+  payload_len | payload``. A peer speaking a different protocol version is
+  rejected at the first frame instead of corrupting the replay.
+* **Arrays travel as raw bytes.** Payloads carrying tensors use a
+  deterministic nested-dict codec (sorted key paths; per-leaf dtype/shape
+  headers; C-order raw data). fp32 fields round-trip bit-identically —
+  required for the remote path to be numerically indistinguishable from the
+  in-process queue.
+* **Observations may ride the replay codec.** With ``quantize_obs`` the
+  float ``obs``/``next_obs`` leaves are quantized with
+  ``repro.core.codec`` (the paper's PNG-compression analogue, §4.1) before
+  serialization — ~4x less actor→replay bandwidth, the same uint8+affine
+  representation the replay itself stores under ``compress_obs``. uint8
+  observations pass through lossless; already-encoded blocks (actors
+  running with ``compress_obs``) are dicts of uint8+fp32 leaves and are
+  shipped as-is.
+
+Message inventory (direction, payload):
+
+=================  ==============  ==========================================
+``HELLO``          actor → gw      JSON ``{actor_id, protocol}``
+``ADD_BLOCK``      actor → gw      array-tree ``{items..., priorities}``
+``ADD_ACK``        gw → actor      empty (one per routed block; the client's
+                                   bounded in-flight window closes on these)
+``PARAM_PULL``     actor → gw      JSON ``{have: version}``
+``PARAM``          gw → actor      u64 version ++ array-tree params
+``PARAM_UNCHANGED``gw → actor      JSON ``{version}``
+``STOP``           gw → actor      empty (shutdown; actor drains and exits)
+``BYE``            actor → gw      JSON client-side counters
+=================  ==============  ==========================================
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Any
+
+import numpy as np
+
+from repro.core import codec
+from repro.runtime.phases import TransitionBlock
+
+PROTOCOL_VERSION = 1
+MAGIC = b"APXW"
+
+# Frame header: magic, protocol version, message type, payload length.
+_HEADER = struct.Struct("<4sHHI")
+
+# Message types.
+HELLO = 1
+ADD_BLOCK = 2
+ADD_ACK = 3
+PARAM_PULL = 4
+PARAM = 5
+PARAM_UNCHANGED = 6
+STOP = 7
+BYE = 8
+
+# Array-tree leaf header: key_len, dtype_len, ndim  (then key, dtype.str,
+# shape as u32s, nbytes as u64, raw bytes).
+_LEAF = struct.Struct("<HBB")
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+
+# Guard against a corrupt/hostile length prefix allocating unbounded memory.
+MAX_PAYLOAD = 1 << 31
+
+# Key used to mark a wire-quantized observation subtree.
+_QUANT_KEY = "__wireq__"
+
+
+class WireError(RuntimeError):
+    """Malformed or protocol-incompatible traffic."""
+
+
+# ---------------------------------------------------------------------------
+# Array-tree codec (nested dicts of arrays <-> bytes)
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: Any, prefix: str, out: list[tuple[str, np.ndarray]]) -> None:
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            key = str(k)
+            if "/" in key:
+                raise WireError(f"tree key {key!r} may not contain '/'")
+            _flatten(tree[k], f"{prefix}{key}/", out)
+    else:
+        out.append((prefix[:-1], np.asarray(tree)))
+
+
+def encode_tree(tree: Any) -> bytes:
+    """Serialize a pytree of nested dicts with array leaves. Deterministic:
+    leaves are emitted in sorted key-path order, C-order raw bytes."""
+    leaves: list[tuple[str, np.ndarray]] = []
+    _flatten(tree, "", leaves)
+    parts = [_U32.pack(len(leaves))]
+    for key, arr in leaves:
+        arr = np.ascontiguousarray(arr)
+        kb = key.encode()
+        db = arr.dtype.str.encode()
+        parts.append(_LEAF.pack(len(kb), len(db), arr.ndim))
+        parts.append(kb)
+        parts.append(db)
+        for d in arr.shape:
+            parts.append(_U32.pack(d))
+        raw = arr.tobytes()
+        parts.append(_U64.pack(len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def decode_tree(payload: bytes | memoryview) -> dict:
+    """Inverse of :func:`encode_tree`. Leaves are zero-copy (read-only)
+    views into ``payload`` where alignment allows. Any malformed payload
+    raises :class:`WireError` (so receivers can contain it to the one
+    connection), never a raw struct/numpy/unicode error."""
+    try:
+        return _decode_tree(memoryview(payload))
+    except WireError:
+        raise
+    except Exception as e:  # struct.error, ValueError, UnicodeDecodeError...
+        raise WireError(f"malformed tree payload: {e!r}") from e
+
+
+def _decode_tree(mv: memoryview) -> dict:
+    (n,) = _U32.unpack_from(mv, 0)
+    off = _U32.size
+    tree: dict = {}
+    for _ in range(n):
+        klen, dlen, ndim = _LEAF.unpack_from(mv, off)
+        off += _LEAF.size
+        key = bytes(mv[off:off + klen]).decode()
+        off += klen
+        dtype = np.dtype(bytes(mv[off:off + dlen]).decode())
+        off += dlen
+        shape = []
+        for _ in range(ndim):
+            (d,) = _U32.unpack_from(mv, off)
+            shape.append(d)
+            off += _U32.size
+        (nbytes,) = _U64.unpack_from(mv, off)
+        off += _U64.size
+        count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if nbytes != count * dtype.itemsize:
+            raise WireError(f"leaf {key!r}: {nbytes} bytes for shape "
+                            f"{tuple(shape)} {dtype}")
+        arr = np.frombuffer(mv, dtype, count=count, offset=off).reshape(shape)
+        off += nbytes
+        node = tree
+        *path, leaf = key.split("/")
+        for p in path:
+            node = node.setdefault(p, {})
+        node[leaf] = arr
+    if off != len(mv):
+        raise WireError(f"trailing bytes in tree payload ({len(mv) - off})")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# TransitionBlock payloads
+# ---------------------------------------------------------------------------
+
+def _quantize_items(items: dict) -> dict:
+    """Swap float obs/next_obs leaves for their replay-codec encoding, marked
+    with a ``__wireq__`` subtree so the decoder knows to reverse it."""
+    out = dict(items)
+    for key in ("obs", "next_obs"):
+        leaf = out.get(key)
+        if isinstance(leaf, dict):        # compress_obs: already encoded
+            continue
+        arr = np.asarray(leaf)
+        if arr.dtype == np.uint8:
+            # already byte-sized: ship raw, skip the redundant scale/offset
+            continue
+        out[key] = {_QUANT_KEY: codec.encode_np(arr)._asdict()}
+    return out
+
+
+def _dequantize_items(items: dict) -> dict:
+    out = dict(items)
+    for key, leaf in items.items():
+        if isinstance(leaf, dict) and set(leaf) == {_QUANT_KEY}:
+            out[key] = codec.decode_np(codec.EncodedObs(**leaf[_QUANT_KEY]))
+    return out
+
+
+def encode_block(block: TransitionBlock, quantize_obs: bool = False) -> bytes:
+    """``ADD_BLOCK`` payload for one transition block. ``quantize_obs``
+    applies the replay codec to float observation leaves (uint8 + per-obs
+    affine) — the decoded block then equals the in-process block up to the
+    codec's quantization, while every other field is bit-identical."""
+    items = jax_to_np(block.items)
+    if quantize_obs:
+        items = _quantize_items(items)
+    prios = np.asarray(block.priorities)
+    return encode_tree({"items": items, "priorities": prios})
+
+
+def decode_block(payload: bytes | memoryview) -> TransitionBlock:
+    """Inverse of :func:`encode_block` (numpy leaves; the replay shard's
+    jitted add transfers them to the device on its own thread)."""
+    tree = decode_tree(payload)
+    try:
+        items, prios = tree["items"], tree["priorities"]
+        return TransitionBlock(items=_dequantize_items(items),
+                               priorities=prios)
+    except WireError:
+        raise
+    except Exception as e:  # missing keys, malformed __wireq__ subtree, ...
+        raise WireError(f"malformed ADD_BLOCK payload: {e!r}") from e
+
+
+def jax_to_np(tree: Any) -> Any:
+    """Materialize a (possibly device-resident) pytree as numpy leaves."""
+    if isinstance(tree, dict):
+        return {k: jax_to_np(v) for k, v in tree.items()}
+    return np.asarray(tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter payloads
+# ---------------------------------------------------------------------------
+
+def encode_params(version: int, params: Any) -> bytes:
+    """``PARAM`` payload: u64 store version, then the params array-tree."""
+    return _U64.pack(version) + encode_tree(jax_to_np(params))
+
+
+def decode_params(payload: bytes | memoryview) -> tuple[int, dict]:
+    mv = memoryview(payload)
+    try:
+        (version,) = _U64.unpack_from(mv, 0)
+    except Exception as e:
+        raise WireError(f"malformed PARAM payload: {e!r}") from e
+    return int(version), decode_tree(mv[_U64.size:])
+
+
+# ---------------------------------------------------------------------------
+# JSON control payloads
+# ---------------------------------------------------------------------------
+
+def encode_json(obj: dict) -> bytes:
+    return json.dumps(obj, separators=(",", ":")).encode()
+
+
+def decode_json(payload: bytes | memoryview) -> dict:
+    try:
+        return json.loads(bytes(payload).decode())
+    except (ValueError, UnicodeDecodeError) as e:
+        raise WireError(f"malformed JSON payload: {e!r}") from e
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def frame(msg_type: int, payload: bytes = b"") -> bytes:
+    """One wire frame: header + payload, ready for ``sendall``."""
+    return _HEADER.pack(MAGIC, PROTOCOL_VERSION, msg_type,
+                        len(payload)) + payload
+
+
+def send_frame(sock: socket.socket, msg_type: int, payload: bytes = b"",
+               ) -> int:
+    buf = frame(msg_type, payload)
+    sock.sendall(buf)
+    return len(buf)
+
+
+class FrameReader:
+    """Incremental frame parser over a stream socket.
+
+    ``read_frame`` tolerates socket timeouts mid-frame: partially received
+    bytes stay buffered, and the next call resumes where the stream left
+    off — which is what lets single-threaded peers interleave blocking
+    reads with periodic stop-flag checks.
+    """
+
+    def __init__(self, sock: socket.socket, chunk: int = 1 << 16):
+        self._sock = sock
+        self._chunk = chunk
+        self._buf = bytearray()
+        self.bytes_in = 0
+        self.eof = False
+
+    def _fill(self, need: int, timeout: float | None) -> bool:
+        """Grow the buffer to ``need`` bytes; False on timeout, raises
+        ``EOFError`` when the peer closed mid-stream."""
+        self._sock.settimeout(timeout)
+        while len(self._buf) < need:
+            try:
+                data = self._sock.recv(max(self._chunk, need - len(self._buf)))
+            except (socket.timeout, TimeoutError):
+                return False
+            except OSError:
+                data = b""  # peer reset / socket shut down: treat as EOF
+            if not data:
+                self.eof = True
+                if self._buf:
+                    raise EOFError("peer closed mid-frame")
+                raise EOFError("peer closed")
+            self._buf += data
+            self.bytes_in += len(data)
+        return True
+
+    def read_frame(self, timeout: float | None = None,
+                   ) -> tuple[int, memoryview] | None:
+        """Next ``(msg_type, payload)`` or None on timeout. Raises
+        ``EOFError`` on a cleanly closed peer, ``WireError`` on garbage."""
+        if not self._fill(_HEADER.size, timeout):
+            return None
+        magic, version, msg_type, length = _HEADER.unpack_from(self._buf, 0)
+        if magic != MAGIC:
+            raise WireError(f"bad magic {magic!r}")
+        if version != PROTOCOL_VERSION:
+            raise WireError(f"protocol version {version} != "
+                            f"{PROTOCOL_VERSION}")
+        if length > MAX_PAYLOAD:
+            raise WireError(f"payload length {length} exceeds cap")
+        if not self._fill(_HEADER.size + length, timeout):
+            return None
+        payload = bytes(self._buf[_HEADER.size:_HEADER.size + length])
+        del self._buf[:_HEADER.size + length]
+        return msg_type, memoryview(payload)

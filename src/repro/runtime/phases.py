@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec, nstep, priority as prio, replay as replay_lib
-from repro.envs.synthetic import batch_step
+from repro.envs.synthetic import batch_reset, batch_step
 from repro.optim import optimizers as optim
 
 
@@ -93,6 +93,21 @@ def item_example(env, obs: jax.Array, compress: bool = False) -> dict:
         "discount_n": jnp.zeros((), jnp.float32),
         "next_obs": ob,
     }
+
+
+def initial_actor_slice(cfg, env, seed: int, actor_id: int) -> ActorSlice:
+    """The canonical starting slice for global actor ``actor_id`` of a run
+    seeded with ``seed``. Every actor host derives its slice through this
+    one function — runner threads and remote actor processes alike — so the
+    exploration ladder cannot fork across the process boundary."""
+    _, e_rng = jax.random.split(jax.random.key(seed))
+    a_rng = jax.random.fold_in(e_rng, actor_id)
+    env_state, obs = batch_reset(env, a_rng, cfg.lanes_per_shard)
+    return ActorSlice(
+        env_state=env_state, obs=obs,
+        ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
+        rng=jax.random.fold_in(a_rng, 1),
+        frames=jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------

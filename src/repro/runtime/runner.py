@@ -11,6 +11,12 @@ free:
   ``inference_batching`` the per-thread dispatch is replaced by one batched
   ``vmap(act_phase)`` call shared by all actors (``runtime.inference``) —
   the paper's FPS-per-actor economics.
+* ``actor_procs`` more actors run as separate OS *processes* (the paper's
+  multi-host regime, §3): a ``ReplayGateway`` TCP thread decodes their
+  ``ADD_BLOCK`` frames and routes them into the very same ``ReplayFabric``,
+  so the learner is agnostic to whether a block crossed a queue or a
+  socket. Thread- and process-actors share one exploration ladder
+  (processes take the upper actor ids).
 * The ``ReplayFabric`` owns ``replay_shards`` independent ``ReplayShard``
   owner threads; actor blocks route round-robin and the learner batch is
   merged from per-shard sub-samples with globally-corrected IS weights
@@ -31,6 +37,7 @@ measured independently (theirs: ~12.5K vs ~9.7K, ratio ~1.29).
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
 import threading
 import time
 from typing import Any
@@ -38,7 +45,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.envs.synthetic import batch_reset
 from repro.runtime import phases
 from repro.runtime.fabric import ReplayFabric
 from repro.runtime.inference import InferenceServer, InferenceStats
@@ -51,8 +57,21 @@ class AsyncConfig:
     """Runtime geometry: thread counts, queue depths, stop conditions."""
 
     actor_threads: int = 1           # each runs cfg.lanes_per_shard lanes
+                                     # (0 allowed when actor_procs > 0)
+    actor_procs: int = 0             # remote actor *processes* feeding the
+                                     # fabric through a ReplayGateway socket
     replay_shards: int = 1           # ReplayShard owner threads in the fabric
     inference_batching: bool = False # one vmapped act dispatch for all actors
+    learn_batches_per_step: int = 1  # prefetched batches consumed per jitted
+                                     # learner call (lax.scan — amortizes
+                                     # dispatch for small batches; the run
+                                     # stops at the first multiple >=
+                                     # total_learner_steps)
+    gateway_port: int = 0            # ReplayGateway TCP port (0: ephemeral)
+    ingest_max_inflight: int = 4     # un-acked blocks per remote actor (the
+                                     # socket analogue of add_queue_depth)
+    wire_quantize_obs: bool = False  # remote actors ship obs via the replay
+                                     # codec (uint8 + affine, ~4x less wire)
     add_queue_depth: int = 4         # actor→replay backpressure bound (per shard)
     sample_queue_depth: int = 2      # replay→learner prefetch (double buffer)
     total_learner_steps: int = 200   # stop once the learner consumed this many
@@ -78,42 +97,59 @@ class RuntimeResult:
     shard_stats: list[ServiceStats]  # per-shard counters
     last_actor_metrics: dict | None  # last act_phase metrics (any actor)
     inference_stats: InferenceStats | None = None  # when inference_batching
+    gateway_stats: Any = None        # net.GatewayStats when actor_procs > 0
 
 
 def _actor_geometry(cfg, acfg: AsyncConfig):
-    """Each actor thread takes one ladder shard: thread t plays global lanes
-    [t*lanes, (t+1)*lanes), so the exploration ladder spans all threads."""
-    return dataclasses.replace(cfg, num_shards=acfg.actor_threads)
+    """Each actor (thread t in [0, actor_threads), process j at
+    actor_threads + j) takes one ladder shard: actor a plays global lanes
+    [a*lanes, (a+1)*lanes), so one exploration ladder spans threads and
+    remote processes alike."""
+    return dataclasses.replace(
+        cfg, num_shards=acfg.actor_threads + acfg.actor_procs)
 
 
 def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
               rng: jax.Array | None = None) -> RuntimeResult:
     """Run the decoupled runtime until the learner consumed
-    ``total_learner_steps`` batches (or ``max_seconds`` elapsed)."""
-    if acfg.actor_threads < 1:
-        raise ValueError("AsyncConfig.actor_threads must be >= 1, got "
-                         f"{acfg.actor_threads}")
+    ``total_learner_steps`` batches (or ``max_seconds`` elapsed). With
+    ``learn_batches_per_step = k > 1`` the learner consumes in chunks of k
+    and stops at the first multiple of k >= ``total_learner_steps``.
+
+    ``rng`` seeds parameter init only; actor slices always derive from
+    ``AsyncConfig.seed`` via ``phases.initial_actor_slice`` so that remote
+    actor processes can reproduce their slice from ``(seed, actor_id)``
+    alone."""
+    if acfg.actor_procs < 0:
+        raise ValueError("AsyncConfig.actor_procs must be >= 0, got "
+                         f"{acfg.actor_procs}")
+    if acfg.actor_threads < (0 if acfg.actor_procs else 1):
+        raise ValueError(
+            "AsyncConfig needs at least one actor: actor_threads >= 1, or "
+            "actor_threads >= 0 with actor_procs >= 1 (got "
+            f"threads={acfg.actor_threads}, procs={acfg.actor_procs})")
     if acfg.total_learner_steps < 1:
         raise ValueError("AsyncConfig.total_learner_steps must be >= 1, got "
                          f"{acfg.total_learner_steps}")
     if acfg.replay_shards < 1:
         raise ValueError("AsyncConfig.replay_shards must be >= 1, got "
                          f"{acfg.replay_shards}")
+    if acfg.learn_batches_per_step < 1:
+        raise ValueError("AsyncConfig.learn_batches_per_step must be >= 1, "
+                         f"got {acfg.learn_batches_per_step}")
+    if acfg.inference_batching and acfg.actor_threads < 1:
+        raise ValueError("inference_batching needs in-process actor threads")
     cfg = _actor_geometry(cfg, acfg)
     rng = jax.random.key(acfg.seed) if rng is None else rng
-    p_rng, e_rng = jax.random.split(rng)
+    p_rng, _ = jax.random.split(rng)
 
     # -- state ------------------------------------------------------------
-    slices, obs0 = [], None
-    for t in range(acfg.actor_threads):
-        a_rng = jax.random.fold_in(e_rng, t)
-        env_state, obs = batch_reset(env, a_rng, cfg.lanes_per_shard)
-        obs0 = obs if obs0 is None else obs0
-        slices.append(phases.ActorSlice(
-            env_state=env_state, obs=obs,
-            ep_return=jnp.zeros((cfg.lanes_per_shard,), jnp.float32),
-            rng=jax.random.fold_in(a_rng, 1),
-            frames=jnp.zeros((), jnp.int32)))
+    # With zero actor threads the first slice is still built: it seeds
+    # param init and the warm-up rollout (remote actor 0 derives the
+    # identical slice from (seed, actor_id=0) on its side).
+    slices = [phases.initial_actor_slice(cfg, env, acfg.seed, t)
+              for t in range(max(acfg.actor_threads, 1))]
+    obs0 = slices[0].obs
     params = agent.init(p_rng, obs0[:1])
     lslice = phases.LearnerSlice(
         params=params, target_params=jax.tree.map(jnp.copy, params),
@@ -130,12 +166,30 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                               max_batch=acfg.actor_threads,
                               coalesce_s=acfg.coalesce_s)
               if acfg.inference_batching else None)
+    gateway = None
+    if acfg.actor_procs > 0:
+        # Deferred import: repro.net sits on top of this module's siblings.
+        from repro.net import ReplayGateway
+        gateway = ReplayGateway(fabric, store, port=acfg.gateway_port,
+                                add_timeout_s=acfg.add_poll_s)
 
-    act_fn = (None if server is not None else
-              jax.jit(lambda p, sl, sid: phases.act_phase(
-                  cfg, env, agent, p, sl, sid)))
+    act_fn = (jax.jit(lambda p, sl, sid: phases.act_phase(
+                  cfg, env, agent, p, sl, sid))
+              if server is None and acfg.actor_threads > 0 else None)
     learn_fn = jax.jit(lambda lsl, items, w: phases.learn_phase(
         cfg, agent, optimizer, lsl, items, w, None))
+    learn_k = acfg.learn_batches_per_step
+    if learn_k > 1:
+        # Satellite of the prefetch queues: one jitted call consumes k
+        # double-buffered batches via lax.scan, amortizing dispatch overhead
+        # when per-batch compute is small.
+        def _learn_scan(lsl, items_k, w_k):
+            def body(l, xw):
+                l, prios, _ = phases.learn_phase(cfg, agent, optimizer, l,
+                                                 xw[0], xw[1], None)
+                return l, prios
+            return jax.lax.scan(body, lsl, (items_k, w_k))
+        learn_many_fn = jax.jit(_learn_scan)
 
     # Warm the caches before the clock starts: one throwaway rollout (the
     # batched server wave when inference batching is on, the per-actor fn
@@ -145,10 +199,17 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     # act_phase actually emits.
     if server is not None:
         block_transitions = server.warm(slices[0])
-    else:
+    elif act_fn is not None:
         _, block0, _ = jax.block_until_ready(
             act_fn(params, slices[0], jnp.int32(0)))
         block_transitions = int(block0.priorities.shape[0])
+    else:
+        # Pure actor-procs mode: acting never runs on this host, so don't
+        # compile a rollout just to measure it — the block size is the
+        # formula the error below spells out (remote transitions are
+        # counted from actual gateway traffic anyway).
+        block_transitions = (cfg.lanes_per_shard * cfg.window
+                             * cfg.replicate_k)
     if block_transitions > fabric.shard_capacity:
         # a block must fit inside one shard or the circular add would alias
         raise ValueError(
@@ -161,6 +222,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                             jnp.asarray(a).dtype), item)
     jax.block_until_ready(
         learn_fn(lslice, items_ex, jnp.ones((cfg.batch_size,), jnp.float32)))
+    if learn_k > 1:
+        items_k_ex = jax.tree.map(
+            lambda a: jnp.zeros((learn_k,) + a.shape, a.dtype), items_ex)
+        jax.block_until_ready(learn_many_fn(
+            lslice, items_k_ex,
+            jnp.ones((learn_k, cfg.batch_size), jnp.float32)))
     stop = threading.Event()
     counters = {"actor_transitions": 0, "actor_blocked": 0,
                 "learner_starved": 0, "rollouts": 0}
@@ -214,20 +281,58 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     def learner_loop() -> None:
         lsl = learner_box["lslice"]
         steps = starved = 0
+        pending: list = []  # gathered batches for one k-sized jitted call
         while steps < acfg.total_learner_steps and not stop.is_set():
             batch = fabric.get_batch(timeout=acfg.starve_timeout_s)
             if batch is None:
                 starved += 1  # replay below min-fill or prefetch lagging
                 continue
-            lsl, new_prios, _ = learn_fn(lsl, batch.items, batch.is_weights)
-            fabric.write_back(batch.indices, new_prios)
-            steps += 1
-            if steps % acfg.publish_every == 0:
+            if learn_k == 1:
+                lsl, new_prios, _ = learn_fn(lsl, batch.items,
+                                             batch.is_weights)
+                fabric.write_back(batch.indices, new_prios)
+                steps += 1
+            else:
+                pending.append(batch)
+                if len(pending) < learn_k:
+                    continue
+                items_k = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *[b.items for b in pending])
+                w_k = jnp.stack([b.is_weights for b in pending])
+                lsl, prios_k = learn_many_fn(lsl, items_k, w_k)
+                # One write-back per consumed batch: each application ticks
+                # the shard's eviction clock once, so k-batching leaves the
+                # paper's evict-every-N-steps pacing unchanged.
+                for i, b in enumerate(pending):
+                    fabric.write_back(b.indices, prios_k[i])
+                pending = []
+                steps += learn_k
+            if steps % acfg.publish_every < learn_k:
                 store.publish(lsl.params)
         jax.block_until_ready(lsl.params)
         learner_box["lslice"] = lsl
         learner_box["steps"] = steps
         counters["learner_starved"] = starved
+
+    # -- remote-ingest liveness -------------------------------------------
+    # In-process workers propagate death through guarded()/_check_alive;
+    # the socket path needs its own watchdog. Individual actor-process
+    # failures are tolerated (the paper's actors are expendable), but a
+    # dead gateway — or every experience source gone — must stop the
+    # runtime instead of letting the learner starve forever.
+    def gateway_monitor(procs: list) -> None:
+        while not stop.wait(timeout=0.5):
+            if gateway.error is not None:
+                thread_errors.append(gateway.error)
+                stop.set()
+                return
+            if (acfg.actor_threads == 0
+                    and all(not p.is_alive() for p in procs)):
+                thread_errors.append(RuntimeError(
+                    "every remote actor process exited before the learner "
+                    "finished; no experience source remains"))
+                stop.set()
+                return
 
     # -- progress logging (satellite of the fabric: observable while hot) --
     def progress_loop() -> None:
@@ -245,6 +350,25 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     fabric.start()
     if server is not None:
         server.start()
+    procs: list = []
+    if gateway is not None:
+        from repro.net import RemoteActorSpec
+        from repro.net.actor_client import run_remote_actor
+        gateway.start()
+        ctx = multiprocessing.get_context("spawn")  # never fork a jax parent
+        for j in range(acfg.actor_procs):
+            spec = RemoteActorSpec(
+                cfg=cfg, env=env, agent=agent,
+                host=gateway.host, port=gateway.port,
+                actor_id=acfg.actor_threads + j, seed=acfg.seed,
+                max_inflight=acfg.ingest_max_inflight,
+                quantize_obs=acfg.wire_quantize_obs)
+            p = ctx.Process(target=run_remote_actor, args=(spec,),
+                            daemon=True, name=f"actor-proc-{j}")
+            p.start()
+            procs.append(p)
+        threading.Thread(target=gateway_monitor, args=(procs,),
+                         daemon=True, name="gateway-monitor").start()
     actors = [threading.Thread(target=guarded(actor_loop), args=(t,),
                                daemon=True, name=f"actor-{t}")
               for t in range(acfg.actor_threads)]
@@ -273,6 +397,34 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         server.stop()
         if server.error is not None:
             thread_errors.append(server.error)
+    gw_snap = None
+    if gateway is not None:
+        # STOP goes out to every actor process; the drain grace lets their
+        # in-flight blocks land and their BYE counters merge, then the
+        # processes exit on their own. Stubborn ones are terminated.
+        gateway.stop()
+        for p in procs:
+            p.join(timeout=30.0)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+            elif p.exitcode not in (0, None):
+                thread_errors.append(RuntimeError(
+                    f"actor process {p.name} exited with {p.exitcode}"))
+        if gateway.error is not None:
+            thread_errors.append(gateway.error)
+        gw_snap = gateway.snapshot()
+        with counter_lock:
+            # Includes blocks that landed during the shutdown drain grace:
+            # they were generated inside the measured window and were
+            # sitting in the bounded in-flight window — the remote analogue
+            # of in-process blocks parked in shard add queues at stop,
+            # which the thread counters include the same way.
+            counters["actor_transitions"] += gw_snap.transitions_in
+            counters["actor_blocked"] += (gw_snap.add_retries
+                                          + gw_snap.client_blocked)
+            counters["rollouts"] += gw_snap.blocks_in
     fabric.stop()
     if fabric.error is not None:
         # A shard may die after the learner's last call (e.g. during the
@@ -298,7 +450,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         "param_version": float(store.version),
         "replay_size": float(agg.replay_size),
         "replay_shards": float(acfg.replay_shards),
+        "actor_procs": float(acfg.actor_procs),
     }
+    if gw_snap is not None:
+        stats["gateway_transitions"] = float(gw_snap.transitions_in)
+        stats["gateway_param_sends"] = float(gw_snap.param_sends)
+        stats["gateway_bytes_in"] = float(gw_snap.bytes_in)
     stats["generate_consume_ratio"] = (
         stats["actor_tps"] / stats["learner_tps"]
         if stats["learner_tps"] > 0 else float("inf"))
@@ -308,4 +465,5 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         service_stats=agg, shard_stats=shard_stats,
         last_actor_metrics=(
             {k: float(v) for k, v in m.items()} if m is not None else None),
-        inference_stats=server.snapshot() if server is not None else None)
+        inference_stats=server.snapshot() if server is not None else None,
+        gateway_stats=gw_snap)

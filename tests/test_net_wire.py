@@ -1,0 +1,383 @@
+"""Wire protocol: frame/array-tree round trips (fp32 bit-identical, uint8
+obs codec-equal), the host/device codec twins, gateway routing into a
+fabric, backpressure propagation, and param serving."""
+
+import socket
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _apex_helpers import item_example, make_block, tiny_preset
+from _hypothesis_fallback import given, settings, st
+
+from repro.core import codec
+from repro.net import wire
+from repro.net.gateway import ReplayGateway
+from repro.runtime import ParamStore, ReplayFabric, phases
+
+
+def assert_tree_equal(a, b):
+    ka, kb = sorted(a), sorted(b)
+    assert ka == kb
+    for k in ka:
+        if isinstance(a[k], dict):
+            assert_tree_equal(a[k], b[k])
+        else:
+            x, y = np.asarray(a[k]), np.asarray(b[k])
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(x, y)
+
+
+# --- array-tree / block round trips -----------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 64),
+       dim=st.integers(1, 32))
+def test_tree_round_trip_bit_identical(seed, n, dim):
+    """Every dtype the runtime ships must survive the wire bit-for-bit,
+    including nested dicts and scalars."""
+    rng = np.random.RandomState(seed)
+    tree = {
+        "f32": rng.randn(n, dim).astype(np.float32),
+        "u8": rng.randint(0, 256, (n, dim), np.uint8),
+        "i32": rng.randint(-5, 5, (n,), np.int32),
+        "scalar": np.float32(rng.randn()),
+        "nested": {"a": rng.randn(dim).astype(np.float32),
+                   "b": {"deep": rng.randn(1).astype(np.float64)}},
+    }
+    out = wire.decode_tree(wire.encode_tree(tree))
+    assert_tree_equal(tree, out)
+
+
+_PRESET_CACHE: dict = {}
+
+
+def _cached_preset():
+    if "p" not in _PRESET_CACHE:
+        _PRESET_CACHE["p"] = tiny_preset()
+    return _PRESET_CACHE["p"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_block_round_trip_matches_in_process_path(seed):
+    """Acceptance: a TransitionBlock encoded by wire.py and decoded on the
+    gateway side is bit-identical to the in-process block — same bytes the
+    fabric's add queue would have carried."""
+    preset = _cached_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    block = make_block(cfg, env, agent, seed=seed)
+    dec = wire.decode_block(wire.encode_block(block))
+    assert_tree_equal({"items": wire.jax_to_np(block.items),
+                       "priorities": np.asarray(block.priorities)},
+                      {"items": dec.items, "priorities": dec.priorities})
+
+
+def test_block_round_trip_quantized_uint8_passthrough():
+    """ChainWorld obs are uint8: wire quantization must be lossless and add
+    no scale/offset overhead."""
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    raw = wire.encode_block(block)
+    quant = wire.encode_block(block, quantize_obs=True)
+    assert len(quant) == len(raw)
+    dec = wire.decode_block(quant)
+    np.testing.assert_array_equal(np.asarray(block.items["obs"]),
+                                  dec.items["obs"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 32),
+       dim=st.integers(2, 24))
+def test_block_round_trip_quantized_float_codec_equal(seed, n, dim):
+    """Acceptance: float obs shipped under wire quantization decode to
+    exactly what the replay codec would store — codec-equal, and ~4x
+    smaller on the wire."""
+    rng = np.random.RandomState(seed)
+    items = {"obs": rng.randn(n, dim).astype(np.float32) * 3.0,
+             "action": rng.randint(0, 4, (n,), np.int32),
+             "returns": rng.randn(n).astype(np.float32),
+             "discount_n": rng.rand(n).astype(np.float32),
+             "next_obs": rng.randn(n, dim).astype(np.float32)}
+    block = phases.TransitionBlock(items=items,
+                                   priorities=rng.rand(n).astype(np.float32))
+    dec = wire.decode_block(wire.encode_block(block, quantize_obs=True))
+    for key in ("obs", "next_obs"):
+        want = np.asarray(codec.decode(codec.encode(jnp.asarray(items[key]))))
+        np.testing.assert_array_equal(dec.items[key], want)
+    for key in ("action", "returns", "discount_n"):  # untouched: bit-exact
+        np.testing.assert_array_equal(dec.items[key], items[key])
+    np.testing.assert_array_equal(dec.priorities, block.priorities)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 16),
+       dim=st.integers(1, 33))
+def test_codec_np_matches_device_codec(seed, n, dim):
+    """codec.encode_np/decode_np (the host-side wire path) produce the same
+    bytes as the jitted device codec — one quantization, two backends."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(n, dim) * rng.uniform(0.1, 10)).astype(np.float32)
+    enc_np, enc_dev = codec.encode_np(x), codec.encode(jnp.asarray(x))
+    np.testing.assert_array_equal(enc_np.data, np.asarray(enc_dev.data))
+    np.testing.assert_array_equal(enc_np.scale, np.asarray(enc_dev.scale))
+    np.testing.assert_array_equal(enc_np.offset, np.asarray(enc_dev.offset))
+    np.testing.assert_array_equal(codec.decode_np(enc_np),
+                                  np.asarray(codec.decode(enc_dev)))
+
+
+def test_params_round_trip():
+    preset = tiny_preset()
+    params = preset.agent.init(jax.random.key(0),
+                               item_example(preset.env)["obs"][None])
+    version, dec = wire.decode_params(wire.encode_params(41, params))
+    assert version == 41
+    assert_tree_equal(wire.jax_to_np(params), dec)
+
+
+# --- framing -----------------------------------------------------------------
+
+def _socketpair_reader():
+    a, b = socket.socketpair()
+    return a, wire.FrameReader(b), b
+
+
+def test_frame_reader_reassembles_split_frames():
+    """Frames fragmented arbitrarily by the transport must reassemble, and
+    a timeout mid-frame must resume, not corrupt."""
+    a, reader, b = _socketpair_reader()
+    payload = wire.encode_json({"actor_id": 7, "protocol": 1})
+    buf = wire.frame(wire.HELLO, payload) + wire.frame(wire.STOP)
+    try:
+        a.sendall(buf[:5])
+        assert reader.read_frame(timeout=0.02) is None  # mid-frame timeout
+        a.sendall(buf[5:])
+        msg, got = reader.read_frame(timeout=1.0)
+        assert msg == wire.HELLO
+        assert wire.decode_json(got) == {"actor_id": 7, "protocol": 1}
+        msg, got = reader.read_frame(timeout=1.0)
+        assert msg == wire.STOP and len(got) == 0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_reader_rejects_bad_magic_and_version():
+    a, reader, b = _socketpair_reader()
+    try:
+        a.sendall(b"JUNKJUNKJUNK")
+        with pytest.raises(wire.WireError, match="magic"):
+            reader.read_frame(timeout=1.0)
+    finally:
+        a.close()
+        b.close()
+    a, reader, b = _socketpair_reader()
+    try:
+        bad = bytearray(wire.frame(wire.STOP))
+        bad[4:6] = (9999).to_bytes(2, "little")  # future protocol version
+        a.sendall(bytes(bad))
+        with pytest.raises(wire.WireError, match="version"):
+            reader.read_frame(timeout=1.0)
+    finally:
+        a.close()
+        b.close()
+
+
+# --- gateway -----------------------------------------------------------------
+
+class FakeFabric:
+    """Records added blocks; optionally refuses the first N adds."""
+
+    def __init__(self, refuse_first: int = 0):
+        self.blocks = []
+        self.refusals_left = refuse_first
+        self.refused = 0
+
+    def add(self, block, timeout=None):
+        if self.refusals_left > 0:
+            self.refusals_left -= 1
+            self.refused += 1
+            time.sleep(0.001)
+            return False
+        self.blocks.append(block)
+        return True
+
+
+def _client(gw):
+    sock = socket.create_connection((gw.host, gw.port), timeout=5.0)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return sock, wire.FrameReader(sock)
+
+
+def _await(cond, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while not cond() and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert cond()
+
+
+def test_gateway_routes_blocks_and_acks():
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    fabric = FakeFabric()
+    store = ParamStore({"w": jnp.zeros((2,))})
+    gw = ReplayGateway(fabric, store).start()
+    sock, reader = _client(gw)
+    try:
+        wire.send_frame(sock, wire.HELLO, wire.encode_json(
+            {"actor_id": 0, "protocol": wire.PROTOCOL_VERSION}))
+        payload = wire.encode_block(block)
+        for _ in range(3):
+            wire.send_frame(sock, wire.ADD_BLOCK, payload)
+        acks = 0
+        while acks < 3:
+            msg, _ = reader.read_frame(timeout=5.0)
+            assert msg == wire.ADD_ACK
+            acks += 1
+        assert len(fabric.blocks) == 3
+        assert_tree_equal(fabric.blocks[0].items,
+                          wire.jax_to_np(block.items))
+        snap = gw.snapshot()
+        assert snap.blocks_in == 3
+        assert snap.transitions_in == 3 * int(block.priorities.shape[0])
+    finally:
+        sock.close()
+        gw.stop()
+    assert gw.error is None
+
+
+def test_gateway_holds_ack_under_fabric_backpressure():
+    """No ACK while the fabric refuses the block: the client's in-flight
+    window stays open, which is how backpressure crosses the socket."""
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    fabric = FakeFabric(refuse_first=5)
+    gw = ReplayGateway(fabric, ParamStore({}), add_timeout_s=0.001).start()
+    sock, reader = _client(gw)
+    try:
+        wire.send_frame(sock, wire.ADD_BLOCK, wire.encode_block(block))
+        msg, _ = reader.read_frame(timeout=10.0)
+        assert msg == wire.ADD_ACK        # arrives only after retries
+        assert fabric.refused == 5
+        assert gw.snapshot().add_retries == 5
+        assert len(fabric.blocks) == 1
+    finally:
+        sock.close()
+        gw.stop()
+    assert gw.error is None
+
+
+def test_gateway_serves_params_honoring_version():
+    params0 = {"w": jnp.arange(4, dtype=jnp.float32)}
+    store = ParamStore(params0)
+    gw = ReplayGateway(FakeFabric(), store).start()
+    sock, reader = _client(gw)
+    try:
+        # fresh client (have=-1) gets the v0 snapshot
+        wire.send_frame(sock, wire.PARAM_PULL, wire.encode_json({"have": -1}))
+        msg, payload = reader.read_frame(timeout=5.0)
+        assert msg == wire.PARAM
+        version, got = wire.decode_params(payload)
+        assert version == 0
+        np.testing.assert_array_equal(got["w"],
+                                      np.arange(4, dtype=np.float32))
+        # same version again: unchanged (no tensor bytes on the wire)
+        wire.send_frame(sock, wire.PARAM_PULL, wire.encode_json({"have": 0}))
+        msg, payload = reader.read_frame(timeout=5.0)
+        assert msg == wire.PARAM_UNCHANGED
+        assert wire.decode_json(payload) == {"version": 0}
+        # learner publishes; the next pull ships the new snapshot
+        store.publish({"w": jnp.full((4,), 9.0)})
+        wire.send_frame(sock, wire.PARAM_PULL, wire.encode_json({"have": 0}))
+        msg, payload = reader.read_frame(timeout=5.0)
+        assert msg == wire.PARAM
+        version, got = wire.decode_params(payload)
+        assert version == 1
+        np.testing.assert_array_equal(got["w"], np.full((4,), 9.0, np.float32))
+        assert gw.snapshot().param_sends == 2
+    finally:
+        sock.close()
+        gw.stop()
+    assert gw.error is None
+
+
+def test_decode_rejects_corrupt_payloads_as_wire_errors():
+    """Corrupt payloads must surface as WireError — the containment class
+    receivers catch per connection — never raw struct/numpy/json errors."""
+    for decoder in (wire.decode_tree, wire.decode_block, wire.decode_params,
+                    wire.decode_json):
+        with pytest.raises(wire.WireError):
+            decoder(b"\x01\x02")
+    # structurally valid tree missing the block fields
+    with pytest.raises(wire.WireError, match="ADD_BLOCK"):
+        wire.decode_block(wire.encode_tree({"nope": np.zeros(3)}))
+
+
+def test_gateway_drops_malformed_connection_not_gateway():
+    fabric = FakeFabric()
+    gw = ReplayGateway(fabric, ParamStore({})).start()
+    bad, _ = _client(gw)
+    try:
+        bad.sendall(b"garbage-that-is-not-a-frame!")
+        _await(lambda: gw.snapshot().wire_errors == 1)
+        # valid header, corrupt payload: same containment, not a gateway
+        # error (the live-repro case from review)
+        bad2, _ = _client(gw)
+        try:
+            bad2.sendall(wire.frame(wire.ADD_BLOCK, b"\x01\x02"))
+            _await(lambda: gw.snapshot().wire_errors == 2)
+        finally:
+            bad2.close()
+        # the gateway survives and serves the next, well-behaved client
+        preset = tiny_preset()
+        block = make_block(preset.apex, preset.env, preset.agent)
+        sock, reader = _client(gw)
+        try:
+            wire.send_frame(sock, wire.ADD_BLOCK, wire.encode_block(block))
+            msg, _ = reader.read_frame(timeout=5.0)
+            assert msg == wire.ADD_ACK
+            assert len(fabric.blocks) == 1
+        finally:
+            sock.close()
+    finally:
+        bad.close()
+        gw.stop()
+    assert gw.error is None
+
+
+def test_gateway_block_lands_in_real_fabric_identically():
+    """End to end through a real ReplayFabric: the same block added
+    in-process and via the gateway produces identical shard replay states
+    (storage + sum-tree bytes)."""
+    preset = tiny_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    item = item_example(env)
+    block = make_block(cfg, env, agent)
+
+    direct = ReplayFabric(cfg, item, num_shards=2).start()
+    via_gw = ReplayFabric(cfg, item, num_shards=2, fns=direct.fns).start()
+    gw = ReplayGateway(via_gw, ParamStore({})).start()
+    sock, reader = _client(gw)
+    try:
+        payload = wire.encode_block(block)
+        for _ in range(4):
+            assert direct.add(block, timeout=1.0)
+            wire.send_frame(sock, wire.ADD_BLOCK, payload)
+        acks = 0
+        while acks < 4:
+            msg, _ = reader.read_frame(timeout=10.0)
+            acks += msg == wire.ADD_ACK
+    finally:
+        sock.close()
+        gw.stop()
+        direct.stop()
+        via_gw.stop()
+    assert gw.error is None and direct.error is None and via_gw.error is None
+    for s_direct, s_gw in zip(direct.replay_states(), via_gw.replay_states()):
+        np.testing.assert_array_equal(np.asarray(s_direct.tree),
+                                      np.asarray(s_gw.tree))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s_direct.storage, s_gw.storage)
+        assert int(s_direct.size) == int(s_gw.size)
