@@ -84,6 +84,9 @@ def async_rates(preset, acfg: AsyncConfig) -> dict:
             "learner_starved": s["learner_starved"],
             "transitions_added": svc.transitions_added,
             "batches_sampled": svc.batches_sampled,
+            # per-op applied-latency EMAs from the shard owner loops
+            "add_us": svc.add_us, "sample_us": svc.sample_us,
+            "writeback_us": svc.writeback_us,
             "seconds": s["seconds"]}
 
 
@@ -133,6 +136,9 @@ def main() -> int:
          f"{asy['learner_starved']:.0f}")
     emit("async_throughput/async_transitions_added", aus,
          f"{asy['transitions_added']:.0f}")
+    emit("async_throughput/async_op_latency_ema", aus,
+         f"add={asy['add_us']:.0f}us sample={asy['sample_us']:.0f}us "
+         f"wb={asy['writeback_us']:.0f}us")
     speedup = asy["combined_tps"] / max(sync["combined_tps"], 1e-9)
     emit("async_throughput/async_vs_sync_combined", aus, f"{speedup:.2f}")
 

@@ -1,23 +1,32 @@
 """Kernel microbenchmarks (§Contention / Appendix F): the replay's batched
-sampling op and the n-step builder, XLA path vs Pallas-interpret oracle-check
-timing. Wall numbers are CPU artifacts; the row exists to track relative
-regressions."""
+sampling descent and incremental tree update — XLA paths vs the Pallas
+kernels (interpret mode off-TPU) — plus the n-step builder. Wall numbers are
+CPU artifacts; the rows exist to track relative regressions, and the full
+result set lands in ``BENCH_kernels.json`` (committed repo-root twin) so the
+kernel numbers join the perf trajectory."""
 
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import emit
-from repro.core import sumtree
-from repro.core.nstep import from_trajectory
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.common import emit, write_artifact  # noqa: E402
+from repro.core import sumtree  # noqa: E402
+from repro.core.nstep import from_trajectory  # noqa: E402
+from repro.kernels.sumtree_sample.ops import (  # noqa: E402
+    sumtree_sample_with_mass)
+from repro.kernels.sumtree_update.ops import sumtree_update  # noqa: E402
 
 
 def timeit(fn, *args, iters=20):
-    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
-        else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -25,28 +34,73 @@ def timeit(fn, *args, iters=20):
     return 1e6 * (time.perf_counter() - t0) / iters
 
 
-def main():
-    cap, batch = 1 << 15, 512
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cap", type=int, default=1 << 15)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--json", default=None,
+                    help="stable artifact path for the JSON result set")
+    args = ap.parse_args()
+    cap, batch = args.cap, args.batch
+
+    # Pallas compiles natively on TPU; elsewhere the kernels run under the
+    # interpreter — orders of magnitude slower, but the row proves the
+    # kernel path stays runnable and tracks its own trend.
+    pallas_mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    interpret = pallas_mode == "interpret"
+
     leaves = jax.random.uniform(jax.random.key(0), (cap,))
     tree = sumtree.rebuild(leaves)
     u = jax.random.uniform(jax.random.key(1), (batch,)) * sumtree.total(tree)
+    idx = jax.random.randint(jax.random.key(2), (batch,), 0, cap)
+    vals = jax.random.uniform(jax.random.key(3), (batch,))
 
-    sample = jax.jit(sumtree.sample)
-    us = timeit(sample, tree, u)
-    emit(f"replay/sumtree_sample_xla/cap={cap}/b={batch}", us,
-         f"{batch / us:.1f}samples_per_us")
+    rows = {}
 
-    wr = jax.jit(sumtree.write)
-    idx = jnp.arange(batch, dtype=jnp.int32)
-    us = timeit(wr, tree, idx, u)
-    emit(f"replay/sumtree_write/cap={cap}/b={batch}", us, "rebuild")
+    def row(name, us, derived):
+        emit(f"replay/{name}/cap={cap}/b={batch}", us, derived)
+        rows[name] = {"us": us, "derived": str(derived)}
 
-    r = jax.random.normal(jax.random.key(2), (256, 64))
+    sample_xla = jax.jit(sumtree.sample_with_mass)
+    us = timeit(sample_xla, tree, u, iters=args.iters)
+    row("sumtree_sample_xla", us, f"{batch / us:.1f}samples_per_us")
+    us = timeit(lambda t, v: sumtree_sample_with_mass(t, v,
+                                                      interpret=interpret),
+                tree, u, iters=max(2, args.iters // (10 if interpret else 1)))
+    row(f"sumtree_sample_pallas_{pallas_mode}", us,
+        f"{batch / us:.2f}samples_per_us")
+
+    wr_rebuild = jax.jit(sumtree.write_rebuild)
+    us = timeit(wr_rebuild, tree, idx, vals, iters=args.iters)
+    row("sumtree_write_rebuild_xla", us, "full_rebuild")
+    wr_incr = jax.jit(sumtree.update)
+    us_incr = timeit(wr_incr, tree, idx, vals, iters=args.iters)
+    row("sumtree_update_incremental_xla", us_incr, "o_b_logc")
+    us = timeit(lambda t, i, v: sumtree_update(t, i, v, interpret=interpret),
+                tree, idx, vals,
+                iters=max(2, args.iters // (10 if interpret else 1)))
+    row(f"sumtree_update_pallas_{pallas_mode}", us, "o_b_logc")
+
+    r = jax.random.normal(jax.random.key(4), (256, 64))
     g = jnp.full((256, 64), 0.99)
     ns = jax.jit(lambda r, g: from_trajectory(r, g, 3))
-    us = timeit(ns, r, g)
+    us = timeit(ns, r, g, iters=args.iters)
     emit("replay/nstep_from_trajectory/lanes=256/T=64", us, "n=3")
+    rows["nstep_from_trajectory"] = {"us": us, "derived": "n=3"}
+
+    write_artifact("kernels", {
+        "bench": "kernels",
+        "unix_time": time.time(),
+        "cpu_count": os.cpu_count(),
+        "backend": jax.default_backend(),
+        "pallas_mode": pallas_mode,
+        "cap": cap,
+        "batch": batch,
+        "rows": rows,
+    }, args.json)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

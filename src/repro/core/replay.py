@@ -137,6 +137,20 @@ def add_fifo(
     )
 
 
+def free_slot_idx(live: jax.Array, batch: int) -> jax.Array:
+    """First ``batch`` free slots via masked-cumsum compaction: rank each
+    free slot among the free slots (in index order, like the argsort this
+    replaced, but O(C) instead of O(C log C)) and scatter them into the
+    result. Lanes beyond the free-slot count keep an *out-of-range* fill
+    value, so their downstream leaf/storage scatters drop instead of
+    aliasing a real slot."""
+    (cap,) = live.shape
+    rank = jnp.cumsum(~live) - 1
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    target = jnp.where(~live & (rank < batch), rank, batch).astype(jnp.int32)
+    return jnp.full((batch,), cap, jnp.int32).at[target].set(slot, mode="drop")
+
+
 def add_alloc(
     cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
     valid: jax.Array | None = None,
@@ -162,8 +176,7 @@ def add_alloc(
     valid = valid[order]
 
     live = sumtree.leaves(state.tree) > 0
-    free_first = jnp.argsort(live, stable=True)  # free slots first, by index
-    idx = free_first[:batch]
+    idx = free_slot_idx(live, batch)
     num_free = (~live).sum().astype(jnp.int32)
     offs = jnp.arange(batch, dtype=jnp.int32)
     # Lanes past the free-slot count would land on live slots: mask them out.
@@ -188,9 +201,12 @@ def add_alloc(
 
 
 def sample(cfg: ReplayConfig, state: ReplayState, rng: jax.Array, batch: int) -> SampleBatch:
-    """Stratified proportional sampling + IS weights (Alg. 2 l.4; Appendix F)."""
-    idx = sumtree.sample_stratified(state.tree, rng, batch)
-    leaf = sumtree.leaves(state.tree)[idx]
+    """Stratified proportional sampling + IS weights (Alg. 2 l.4; Appendix F).
+
+    The descent emits each sampled slot's leaf mass alongside its index
+    (fused in the Pallas backend), so no second tree gather is needed."""
+    u = sumtree.stratified_uniforms(rng, batch, sumtree.total(state.tree))
+    idx, leaf = sumtree.sample_with_mass(state.tree, u)
     items = jax.tree.map(lambda buf: buf[idx], state.storage)
     w = prio.importance_weights(leaf, sumtree.total(state.tree), state.size, cfg.beta)
     return SampleBatch(idx, items, w, leaf, sumtree.total(state.tree), state.size)
@@ -214,15 +230,22 @@ def set_priorities(
 
 
 def evict_fifo(cfg: ReplayConfig, state: ReplayState) -> ReplayState:
-    """Remove the excess above the soft capacity en masse, oldest first (§4.1)."""
+    """Remove the excess above the soft capacity en masse, oldest first (§4.1).
+
+    A slot dies iff its FIFO age ``(slot - oldest) mod C`` is below the
+    excess, so the kill mask is computed directly on the slot axis and the
+    tree rebuilt from the masked leaves — no permuted index vector to
+    materialize, no O(C) gather/scatter through it (and no O(C)-lane batch
+    pushed through the incremental ``sumtree.write`` path, which is tuned
+    for small batches)."""
     excess = jnp.maximum(state.size - cfg.soft_cap, 0)
     oldest = (state.write_pos - state.size) % cfg.capacity
-    offs = jnp.arange(cfg.capacity, dtype=jnp.int32)
-    idx = (oldest + offs) % cfg.capacity
-    kill = offs < excess
-    old = sumtree.leaves(state.tree)[idx]
-    tree = sumtree.write(state.tree, idx, jnp.where(kill, 0.0, old))
-    return state._replace(tree=tree, size=state.size - excess)
+    slot = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    age = (slot - oldest) % cfg.capacity
+    kill = age < excess
+    new_leaves = jnp.where(kill, 0.0, sumtree.leaves(state.tree))
+    return state._replace(tree=sumtree.rebuild(new_leaves),
+                          size=state.size - excess)
 
 
 def evict_prioritized(

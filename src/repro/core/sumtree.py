@@ -8,14 +8,28 @@ Layout: for ``capacity`` C (power of two) the tree is a flat ``(2*C,)`` array.
 Node 1 is the root, node ``i`` has children ``2i`` and ``2i+1``; leaf ``k``
 lives at index ``C + k``. Index 0 is unused.
 
-All operations are pure and batched; writes rebuild the internal levels with
-log2(C) reshape-sums, which is exact under duplicate indices and vectorizes
-cleanly on TPU (the sampling descent — the hot op on the replay server — has a
-Pallas kernel in ``repro.kernels.sumtree_sample``; the implementation here is
-its oracle and the XLA fallback).
+All operations are pure and batched. The two hot ops on the replay server both
+have Pallas TPU kernels with the implementations here as their oracles / XLA
+fallbacks:
+
+* the sampling descent (``repro.kernels.sumtree_sample``) — inverse-CDF walk,
+  optionally fused with the per-sample leaf-mass read;
+* the batched write (``repro.kernels.sumtree_update``) — O(B * log C)
+  incremental propagation, replacing the original O(C) full level-rebuild.
+
+``write`` dispatches between them via a process-wide backend switch
+(:func:`set_backend`): ``pallas`` on TPU, ``xla`` elsewhere, ``interpret``
+to run the Pallas kernels under the interpreter (CPU CI). The incremental
+XLA path (:func:`update`) is bit-identical to scatter + :func:`rebuild` by
+construction: leaves are resolved with the same ``.at[idx].set`` scatter
+(last writer wins under duplicates) and every touched parent is recomputed
+as ``left + right`` — the identical fp32 operation ``rebuild``'s pairwise
+level-sum performs — rather than patched with an (inexact) delta.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +41,63 @@ __all__ = [
     "total",
     "leaves",
     "write",
+    "write_rebuild",
+    "update",
     "rebuild",
     "sample",
+    "sample_with_mass",
     "stratified_uniforms",
     "sample_stratified",
+    "backend",
+    "set_backend",
 ]
+
+# Process-wide backend for the hot ops (write / sample_with_mass):
+#   "pallas"    — Pallas TPU kernels (compiled)
+#   "interpret" — same kernels under the Pallas interpreter (CPU CI)
+#   "xla"       — pure-jnp incremental paths (oracle / CPU fallback)
+#   None        — auto: "pallas" on TPU, "xla" elsewhere
+_BACKENDS = ("pallas", "interpret", "xla")
+_backend: str | None = os.environ.get("REPRO_SUMTREE_BACKEND") or None
+
+# The one-hot kernels hold (block_b, 2C)-shaped masks in VMEM, which is only
+# viable for the small per-shard trees the replay fabric produces (the
+# paper's 2M-transition / 256-shard geometry is a 16Ki-entry tree, ~64 KiB).
+# The *auto* backend therefore only picks Pallas up to this leaf capacity
+# and falls back to XLA above it; an explicit ``set_backend("pallas")`` (or
+# env override) is honored unconditionally.
+_PALLAS_AUTO_MAX_CAPACITY = 1 << 15
+
+
+def backend() -> str:
+    """The effective backend for the kernelized ops."""
+    if _backend is not None:
+        return _backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def set_backend(name: str | None) -> None:
+    """Select the hot-op backend (``None`` restores auto-detection).
+
+    The dispatch happens at trace time, so the switch only affects
+    functions traced *afterwards* — already-jitted consumers (e.g. a live
+    ``ReplayShard``'s ``ShardFns``) keep the backend that was active when
+    they first compiled. Set the backend (or ``REPRO_SUMTREE_BACKEND``)
+    before building shards/fabrics.
+    """
+    global _backend
+    if name is not None and name not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS} or None, got {name!r}")
+    _backend = name
+
+
+def _hot_backend(cap: int) -> str:
+    """Backend for one hot-op call: the auto-selected Pallas path is gated
+    on the tree being VMEM-small; explicit choices pass through."""
+    bk = backend()
+    if _backend is None and bk == "pallas" and cap > _PALLAS_AUTO_MAX_CAPACITY:
+        return "xla"
+    return bk
 
 
 def _check_capacity(cap: int) -> None:
@@ -76,15 +142,62 @@ def rebuild(leaf_values: jax.Array) -> jax.Array:
     return jnp.concatenate([jnp.zeros((1,), leaf_values.dtype), flat])
 
 
+def write_rebuild(tree: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
+    """Set ``leaves[idx] = values`` via a full O(C) level-rebuild.
+
+    The original ``write`` implementation, kept as the oracle for the
+    incremental paths: duplicate indices resolve scatter-style (last writer
+    wins) before the exact rebuild, so internal sums are always consistent
+    with leaves.
+    """
+    new_leaves = leaves(tree).at[idx].set(values.astype(tree.dtype), mode="drop")
+    return rebuild(new_leaves)
+
+
+def update(tree: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
+    """Incremental batched write: O(B * log C) instead of ``rebuild``'s O(C).
+
+    Leaves are set with the same ``.at[idx].set(mode="drop")`` scatter as
+    :func:`write_rebuild` (so duplicate resolution is identical), then each
+    level of ancestors is *recomputed* as ``tree[2p] + tree[2p + 1]`` — the
+    same pairwise fp32 sum ``rebuild`` performs — and scattered back. Lanes
+    sharing an ancestor all compute the identical value, so duplicate
+    scatters at internal levels are benign, and writing ``left + right`` is
+    always invariant-restoring even for lanes whose leaf write was dropped.
+    Bit-identical to :func:`write_rebuild` on any tree whose internal nodes
+    already satisfy the sum invariant.
+    """
+    cap = capacity(tree)
+    # match the scatter's numpy-style index handling exactly: negatives in
+    # [-C, -1] wrap, anything else out of [0, C) is dropped
+    norm = jnp.where(idx < 0, idx + cap, idx).astype(jnp.int32)
+    safe = jnp.clip(norm, 0, cap - 1)
+    in_range = (norm >= 0) & (norm < cap)
+    target = jnp.where(in_range, safe + cap, 2 * cap)  # OOB lanes: dropped
+    tree = tree.at[target].set(values.astype(tree.dtype), mode="drop")
+
+    # depth is static, so the walk unrolls: log2(C) tiny gather+scatter pairs
+    # fuse into one XLA computation with no loop-carry overhead.
+    node = safe + cap
+    for _ in range(depth(tree)):
+        node = node >> 1
+        tree = tree.at[node].set(tree[2 * node] + tree[2 * node + 1])
+    return tree
+
+
 def write(tree: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
     """Set ``leaves[idx] = values`` and restore the sum invariant.
 
-    Duplicate indices are resolved scatter-style (one writer wins) before the
-    exact level-rebuild, so internal sums are always consistent with leaves.
+    Duplicate indices are resolved scatter-style (last writer wins); the
+    propagation is incremental — O(B * log C) — on every backend (Pallas
+    kernel on TPU, :func:`update` under XLA). Use :func:`write_rebuild` when
+    the batch covers most of the tree (e.g. full-capacity rewrites).
     """
-    cap = capacity(tree)
-    new_leaves = leaves(tree).at[idx].set(values.astype(tree.dtype), mode="drop")
-    return rebuild(new_leaves)
+    bk = _hot_backend(capacity(tree))
+    if bk in ("pallas", "interpret"):
+        from repro.kernels.sumtree_update.ops import sumtree_update
+        return sumtree_update(tree, idx, values, interpret=(bk == "interpret"))
+    return update(tree, idx, values)
 
 
 def sample(tree: jax.Array, u: jax.Array) -> jax.Array:
@@ -110,6 +223,21 @@ def sample(tree: jax.Array, u: jax.Array) -> jax.Array:
 
     node, _ = jax.lax.fori_loop(0, d, body, (node, u))
     return jnp.clip(node - cap, 0, cap - 1)
+
+
+def sample_with_mass(tree: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused descent: leaf ids *and* their masses ``p^alpha`` in one pass.
+
+    ``replay.sample`` needs both; fusing saves the second leaf gather (on the
+    Pallas backend the mass falls out of the final descent level). The mass
+    is bitwise ``leaves(tree)[idx]`` on every backend.
+    """
+    bk = _hot_backend(capacity(tree))
+    if bk in ("pallas", "interpret"):
+        from repro.kernels.sumtree_sample.ops import sumtree_sample_with_mass
+        return sumtree_sample_with_mass(tree, u, interpret=(bk == "interpret"))
+    idx = sample(tree, u)
+    return idx, leaves(tree)[idx]
 
 
 def stratified_uniforms(rng: jax.Array, batch: int, total_mass: jax.Array) -> jax.Array:

@@ -10,6 +10,11 @@ with a masked row-sum — an all-lanes operation instead of a serial gather.
 A replay shard's tree is small (2 * capacity f32; 64 KiB at the paper's
 2M/256-shard geometry), so the whole tree is a single VMEM block and only the
 offset batch is tiled by the grid.
+
+The kernel also emits each sampled leaf's mass ``p^alpha`` (one more one-hot
+select at the final node), so ``replay.sample`` gets index and mass from one
+fused pass instead of a descent plus a second leaf gather. The mass is
+bitwise ``leaves(tree)[idx]``.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(tree_ref, u_ref, idx_ref, *, depth: int, capacity: int,
+def _kernel(tree_ref, u_ref, idx_ref, mass_ref, *, depth: int, capacity: int,
             block_b: int):
     tree = tree_ref[...]                                    # (2C,) in VMEM
     u = u_ref[...].astype(jnp.float32)                      # (block_b,)
@@ -42,11 +47,16 @@ def _kernel(tree_ref, u_ref, idx_ref, *, depth: int, capacity: int,
 
     node, _ = jax.lax.fori_loop(0, depth, level, (node, u))
     idx_ref[...] = jnp.clip(node - capacity, 0, capacity - 1)
+    # fused leaf-mass read: one more one-hot select at the final node
+    sel = (lane == (idx_ref[...] + capacity)[:, None]).astype(jnp.float32)
+    mass_ref[...] = jnp.sum(sel * tree[None, :], axis=1)
 
 
 def sumtree_sample_pallas(tree: jax.Array, u: jax.Array, *, block_b: int = 256,
-                          interpret: bool = False) -> jax.Array:
-    """tree (2C,) f32 sum-tree, u (B,) mass offsets -> (B,) int32 leaf ids."""
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """tree (2C,) f32 sum-tree, u (B,) mass offsets -> ((B,) int32 leaf ids,
+    (B,) f32 leaf masses)."""
     (two_c,) = tree.shape
     capacity = two_c // 2
     depth = capacity.bit_length() - 1
@@ -59,15 +69,21 @@ def sumtree_sample_pallas(tree: jax.Array, u: jax.Array, *, block_b: int = 256,
 
     kernel = functools.partial(_kernel, depth=depth, capacity=capacity,
                                block_b=block_b)
-    idx = pl.pallas_call(
+    idx, mass = pl.pallas_call(
         kernel,
         grid=(blocks,),
         in_specs=[
             pl.BlockSpec((two_c,), lambda i: (0,)),         # whole tree in VMEM
             pl.BlockSpec((block_b,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((blocks * block_b,), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks * block_b,), jnp.int32),
+            jax.ShapeDtypeStruct((blocks * block_b,), jnp.float32),
+        ],
         interpret=interpret,
     )(tree, u)
-    return idx[:B]
+    return idx[:B], mass[:B]

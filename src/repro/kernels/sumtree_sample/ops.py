@@ -1,4 +1,4 @@
-"""Jit'd wrapper for the sum-tree sampling kernel."""
+"""Jit'd wrappers for the sum-tree sampling kernel."""
 
 from __future__ import annotations
 
@@ -10,6 +10,15 @@ from repro.kernels.sumtree_sample.kernel import sumtree_sample_pallas
 
 
 @partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sumtree_sample_with_mass(tree, u, *, block_b: int = 256,
+                             interpret: bool = False):
+    """tree (2C,), u (B,) in [0, total) -> ((B,) int32 leaf indices,
+    (B,) f32 leaf masses) from one fused descent."""
+    return sumtree_sample_pallas(tree, u, block_b=block_b, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
 def sumtree_sample(tree, u, *, block_b: int = 256, interpret: bool = False):
     """tree (2C,), u (B,) in [0, total) -> (B,) int32 leaf indices."""
-    return sumtree_sample_pallas(tree, u, block_b=block_b, interpret=interpret)
+    return sumtree_sample_pallas(tree, u, block_b=block_b,
+                                 interpret=interpret)[0]

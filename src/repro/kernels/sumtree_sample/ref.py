@@ -1,3 +1,7 @@
-"""Pure-jnp oracle: the gather-based descent from repro.core.sumtree."""
+"""Pure-jnp oracles: the gather-based descent (and its fused-mass variant)
+from repro.core.sumtree."""
 
-from repro.core.sumtree import sample as sumtree_sample_ref  # noqa: F401
+from repro.core.sumtree import (  # noqa: F401
+    sample as sumtree_sample_ref,
+    sample_with_mass as sumtree_sample_with_mass_ref,
+)

@@ -1,0 +1,1 @@
+from repro.kernels.sumtree_update import ops, ref  # noqa: F401

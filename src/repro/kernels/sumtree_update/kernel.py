@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: batched incremental sum-tree update (priority writes).
+
+The replay server's mutation hot path: given B leaf indices and new values,
+set the leaves and restore the sum invariant along all log2(C) ancestor
+levels in one fused pass — O(B * log C) work instead of the O(C) full
+level-rebuild the XLA path originally paid per write.
+
+Like the descent kernel (``sumtree_sample``), random gathers/scatters don't
+vectorize on the TPU VPU, so both directions are re-cast as one-hot
+all-lanes ops against the VMEM-resident tree:
+
+* *scatter-set* — a ``(B, 2C)`` equality mask against a lane iota selects
+  each written node's column; ``jnp.where(any(mask), masked_sum, tree)``
+  commits the batch in one shot. Duplicate writers are resolved to the
+  *last* lane per node before the mask is built (matching ``.at[idx].set``
+  scatter semantics), so each column has at most one writer.
+* *gather* — child masses are read back with the same masked row-sum trick
+  the descent kernel uses.
+
+Each ancestor is recomputed as ``left + right`` (the exact op ``rebuild``'s
+pairwise level-sum performs) rather than patched with a delta, which keeps
+the kernel bit-identical to the XLA oracle ``repro.core.sumtree.update`` —
+and transitively to scatter + ``rebuild``.
+
+A replay shard's tree is small (2 * capacity f32; 64 KiB at the paper's
+2M/256-shard geometry), so the whole tree lives in VMEM. The batch is tiled
+by the grid; TPU grids run sequentially, so later blocks see earlier blocks'
+writes (the output block is revisited), preserving cross-block
+last-writer-wins order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _last_writer(node: jax.Array, eligible: jax.Array, block_b: int) -> jax.Array:
+    """Mask of lanes that are the highest-numbered eligible writer of their
+    node value — the scatter's winner under duplicate indices."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_b, block_b), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_b, block_b), 1)
+    shadowed = (node[None, :] == node[:, None]) & (col > row) & eligible[None, :]
+    return eligible & ~jnp.any(shadowed, axis=1)
+
+
+def _kernel(tree_ref, idx_ref, val_ref, out_ref, *, depth: int, capacity: int,
+            block_b: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = tree_ref[...]
+
+    tree = out_ref[...]                                     # (2C,) in VMEM
+    idx = idx_ref[...]                                      # (block_b,)
+    val = val_ref[...].astype(jnp.float32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (block_b, 2 * capacity), 1)
+
+    # numpy-style index handling, matching `.at[idx].set(mode="drop")`:
+    # negatives in [-C, -1] wrap, anything else out of [0, C) is dropped
+    idx = jnp.where(idx < 0, idx + capacity, idx)
+    in_range = (idx >= 0) & (idx < capacity)
+    node = jnp.clip(idx, 0, capacity - 1) + capacity
+
+    # Leaf level: last in-range writer per leaf sets its value.
+    wins = _last_writer(node, in_range, block_b)
+    sel = (lane == node[:, None]) & wins[:, None]
+    tree = jnp.where(jnp.any(sel, axis=0),
+                     jnp.sum(jnp.where(sel, val[:, None], 0.0), axis=0),
+                     tree)
+
+    # Ancestor levels: recompute each touched parent as left + right. All
+    # lanes sharing a parent compute the identical value, and even a lane
+    # whose leaf write was dropped writes an invariant-restoring value — but
+    # the one-hot sum needs exactly one writer per column, so a single
+    # representative lane is elected per node.
+    all_lanes = jnp.ones((block_b,), bool)
+
+    def level(_, carry):
+        tree, node = carry
+        node = node >> 1
+        lsel = (lane == (2 * node)[:, None]).astype(jnp.float32)
+        rsel = (lane == (2 * node + 1)[:, None]).astype(jnp.float32)
+        pval = (jnp.sum(lsel * tree[None, :], axis=1)
+                + jnp.sum(rsel * tree[None, :], axis=1))
+        rep = _last_writer(node, all_lanes, block_b)
+        sel = (lane == node[:, None]) & rep[:, None]
+        tree = jnp.where(jnp.any(sel, axis=0),
+                         jnp.sum(jnp.where(sel, pval[:, None], 0.0), axis=0),
+                         tree)
+        return tree, node
+
+    tree, _ = jax.lax.fori_loop(0, depth, level, (tree, node))
+    out_ref[...] = tree
+
+
+def sumtree_update_pallas(tree: jax.Array, idx: jax.Array, values: jax.Array,
+                          *, block_b: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """tree (2C,) f32, idx (B,) int32 leaf ids, values (B,) -> updated tree.
+
+    Index handling matches ``.at[idx].set(mode="drop")``: negatives in
+    [-C, -1] wrap numpy-style, anything else out of [0, C) is dropped;
+    duplicate indices resolve last-writer-wins.
+    """
+    (two_c,) = tree.shape
+    capacity = two_c // 2
+    depth = capacity.bit_length() - 1
+    (B,) = idx.shape
+    block_b = max(1, min(block_b, B)) if B else 1
+    pad = (-B) % block_b if B else block_b
+    if pad:
+        # padding lanes carry an always-dropped index (>= C; negative
+        # sentinels would wrap numpy-style and hit a real leaf)
+        idx = jnp.pad(idx, (0, pad), constant_values=capacity)
+        values = jnp.pad(values, (0, pad))
+    blocks = idx.shape[0] // block_b
+
+    kernel = functools.partial(_kernel, depth=depth, capacity=capacity,
+                               block_b=block_b)
+    out = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((two_c,), lambda i: (0,)),         # whole tree in VMEM
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((two_c,), lambda i: (0,)),   # revisited per block
+        out_shape=jax.ShapeDtypeStruct((two_c,), tree.dtype),
+        interpret=interpret,
+    )(tree, idx.astype(jnp.int32), values.astype(tree.dtype))
+    return out

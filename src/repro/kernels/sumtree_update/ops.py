@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the incremental sum-tree update kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sumtree_update.kernel import sumtree_update_pallas
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sumtree_update(tree, idx, values, *, block_b: int = 128,
+                   interpret: bool = False):
+    """tree (2C,), idx (B,) leaf ids, values (B,) -> updated (2C,) tree."""
+    return sumtree_update_pallas(tree, idx, values, block_b=block_b,
+                                 interpret=interpret)

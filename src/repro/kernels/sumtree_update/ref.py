@@ -1,0 +1,7 @@
+"""Pure-jnp oracles: the incremental update and the full scatter + rebuild
+from repro.core.sumtree (both produce bit-identical trees)."""
+
+from repro.core.sumtree import (  # noqa: F401
+    update as sumtree_update_ref,
+    write_rebuild as sumtree_write_rebuild_ref,
+)

@@ -81,6 +81,24 @@ def shard_replay_config(rcfg: replay_lib.ReplayConfig,
 
 
 @functools.lru_cache(maxsize=None)
+def _partition_fn(num_shards: int, shard_capacity: int):
+    """Jitted write-back partition for one fabric geometry: stable-sort the
+    global keys by owning shard and count the per-shard segment lengths, all
+    on device. The host then transfers only the tiny count vector and hands
+    each shard a lazy slice of the sorted device arrays — one device→host
+    sync per write-back instead of materializing the whole index batch with
+    ``np.asarray`` every learner step."""
+    @jax.jit
+    def part(indices, priorities):
+        sids = indices // shard_capacity
+        order = jnp.argsort(sids, stable=True)
+        counts = jnp.sum(sids[:, None] == jnp.arange(num_shards)[None, :],
+                         axis=0)
+        return (indices - sids * shard_capacity)[order], priorities[order], counts
+    return part
+
+
+@functools.lru_cache(maxsize=None)
 def _merge_fn(beta: float, shard_capacity: int):
     """Jitted sub-sample merge for one (beta, per-shard-capacity) geometry,
     cached so same-geometry fabric instances share one compilation (the
@@ -144,6 +162,7 @@ class ReplayFabric:
         # Shared across same-geometry fabric instances (like ShardFns): the
         # merge only depends on beta and the per-shard capacity.
         self._merge = _merge_fn(rcfg.beta, rcfg.capacity)
+        self._part = _partition_fn(num_shards, rcfg.capacity)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -175,12 +194,18 @@ class ReplayFabric:
     def snapshot(self) -> ServiceStats:
         """Aggregated counters across shards, safe while running. Counters
         sum per-shard values (note ``updates_applied`` counts per-shard
-        write-back applications: one learner step touches every shard)."""
+        write-back applications: one learner step touches every shard);
+        the per-op latency EMAs (``*_us``) average over the shards that
+        have a measurement."""
+        snaps = self.shard_snapshots()
         agg = ServiceStats()
-        for snap in self.shard_snapshots():
-            for f in dataclasses.fields(ServiceStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(snap, f.name))
+        for f in dataclasses.fields(ServiceStats):
+            vals = [getattr(s, f.name) for s in snaps]
+            if f.name.endswith("_us"):
+                nz = [v for v in vals if v > 0.0]
+                setattr(agg, f.name, sum(nz) / len(nz) if nz else 0.0)
+            else:
+                setattr(agg, f.name, sum(vals))
         return agg
 
     def shard_snapshots(self) -> list[ServiceStats]:
@@ -234,18 +259,23 @@ class ReplayFabric:
 
         The keys are self-describing (``shard = key // shard_capacity``), so
         any subset/ordering of keys from batches this fabric assembled is
-        valid — callers may filter or reorder before writing back. Reading
-        the key values only syncs on the (already-materialized) merge
-        output, never on the in-flight ``priorities`` computation.
+        valid — callers may filter or reorder before writing back.
+
+        The partition (stable sort by owning shard + segment counts) runs as
+        jitted device ops; the host transfers only the per-shard counts and
+        passes each shard a lazy slice of the sorted device arrays, so the
+        indices never round-trip through ``np.asarray``. An unfiltered
+        merged batch always splits into equal ``batch/num_shards`` segments
+        (the merge layout guarantees it), so the shards' jitted write-backs
+        see stable shapes and compile once.
         """
         if self.num_shards == 1:
             self.shards[0].write_back(indices, priorities)
             return
-        idx = np.asarray(indices)
-        sids = idx // self.shard_capacity
-        for k, sh in enumerate(self.shards):
-            pos = np.nonzero(sids == k)[0]
-            if pos.size == 0:
-                continue
-            sh.write_back(jnp.asarray(idx[pos] - k * self.shard_capacity),
-                          priorities[jnp.asarray(pos)])
+        slots, prios, counts = self._part(indices, priorities)
+        off = 0
+        for k, n in enumerate(np.asarray(counts).tolist()):
+            if n:
+                self.shards[k].write_back(slots[off:off + n],
+                                          prios[off:off + n])
+            off += n

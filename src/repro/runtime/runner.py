@@ -344,6 +344,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                   f"sampled_batches={snap.batches_sampled} "
                   f"writebacks={snap.updates_applied} "
                   f"replay_size~{snap.replay_size} "
+                  f"lat_us(add/sample/wb)={snap.add_us:.0f}/"
+                  f"{snap.sample_us:.0f}/{snap.writeback_us:.0f} "
                   f"params_v{store.version}")
 
     # -- drive ------------------------------------------------------------

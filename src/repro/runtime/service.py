@@ -33,9 +33,11 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Any, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import replay as replay_lib
 from repro.runtime import phases
@@ -43,6 +45,14 @@ from repro.runtime import phases
 # Owner-loop ops between refreshes of the host-visible ``replay_size`` (each
 # refresh is a device sync; counters stay exact, size is near-real-time).
 _SIZE_REFRESH_OPS = 32
+
+# Per-op latency is *sampled*: every Nth op of each kind is synced
+# (block_until_ready) and timed, and the measurement folded into an EMA.
+# Sampling keeps the owner loop's async dispatch pipeline intact between
+# measurements; the sync makes the sampled number an honest applied latency
+# (it absorbs any backlog the op queued behind).
+_LATENCY_SAMPLE_EVERY = 8
+_LATENCY_EMA_WEIGHT = 0.2
 
 
 @dataclasses.dataclass
@@ -58,12 +68,19 @@ class ServiceStats:
                                    # one learner step touches every shard)
     replay_size: int = 0           # live items (refreshed periodically while
                                    # running; exact after stop())
+    add_us: float = 0.0            # EMA applied-latency per op kind, in
+    sample_us: float = 0.0         # microseconds (0.0 until first sample;
+    writeback_us: float = 0.0      # fabric aggregation averages, not sums)
 
 
 class ShardFns(NamedTuple):
     """Jitted phase functions for one shard geometry. Built once per fabric
     (or per standalone shard) and shared, so N identical shards trace and
-    compile each op exactly once."""
+    compile each op exactly once. The mutating ops (``add``/``writeback``)
+    donate the incoming ``ReplayState``, so the storage pytree and sum-tree
+    update in place instead of being copied every call — each shard's owner
+    thread is the state's only holder, so the donated buffers are never
+    observed again."""
     add: Any
     sample: Any
     writeback: Any
@@ -74,12 +91,14 @@ class ShardFns(NamedTuple):
 def make_shard_fns(cfg, batch_size: int) -> ShardFns:
     rcfg = cfg.replay
     return ShardFns(
-        add=jax.jit(lambda st, block: phases.replay_add(cfg, st, block)),
+        add=jax.jit(lambda st, block: phases.replay_add(cfg, st, block),
+                    donate_argnums=(0,)),
         sample=jax.jit(
             lambda st, rng: replay_lib.sample(rcfg, st, rng, batch_size)),
         writeback=jax.jit(
             lambda st, idx, prios, step, rng: phases.priority_writeback(
-                cfg, st, idx, prios, step, rng)),
+                cfg, st, idx, prios, step, rng),
+            donate_argnums=(0,)),
         can_sample=jax.jit(lambda st: replay_lib.can_sample(rcfg, st)),
         split=jax.jit(lambda k: jax.random.split(k)),
     )
@@ -94,7 +113,11 @@ class ReplayShard:
                  shard_id: int = 0, fns: ShardFns | None = None,
                  poll_s: float = 0.05):
         self._cfg = cfg
-        self._state = replay_state
+        # Private copy: add/writeback *donate* the state into jit, deleting
+        # its buffers. Copying here keeps the caller's reference readable
+        # (and lets one template state seed several shards) at a one-time
+        # pytree-copy cost.
+        self._state = jax.tree.map(jnp.array, replay_state)
         self._rng = jax.random.key(seed)
         self._fns = fns or make_shard_fns(cfg, batch_size or cfg.batch_size)
         self._poll_s = poll_s
@@ -109,6 +132,7 @@ class ReplayShard:
                                         name=f"replay-shard-{shard_id}")
         self._stats_lock = threading.Lock()
         self._ops_since_size = 0
+        self._op_seq = {"add": 0, "sample": 0, "writeback": 0}
         self.stats = ServiceStats()
         self.error: BaseException | None = None
 
@@ -198,8 +222,26 @@ class ReplayShard:
             with self._stats_lock:
                 self.stats.replay_size = size
 
+    def _timed(self, kind: str, fn, *args):
+        """Dispatch an op; every ``_LATENCY_SAMPLE_EVERY``th call of each
+        kind is synced and timed into the ``<kind>_us`` EMA (hot-path
+        regressions surface in runner progress logs and bench counters)."""
+        self._op_seq[kind] += 1
+        if self._op_seq[kind] % _LATENCY_SAMPLE_EVERY:
+            return fn(*args)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        us = 1e6 * (time.perf_counter() - t0)
+        field = f"{kind}_us"
+        with self._stats_lock:
+            prev = getattr(self.stats, field)
+            setattr(self.stats, field,
+                    us if prev == 0.0
+                    else prev + _LATENCY_EMA_WEIGHT * (us - prev))
+        return out
+
     def _apply_add(self, block: phases.TransitionBlock) -> None:
-        self._state = self._fns.add(self._state, block)
+        self._state = self._timed("add", self._fns.add, self._state, block)
         self._bump(blocks_added=1,
                    transitions_added=int(block.priorities.shape[0]))
 
@@ -241,7 +283,8 @@ class ReplayShard:
                 except queue.Empty:
                     break
                 step = self.stats.updates_applied + 1
-                self._state = self._fns.writeback(
+                self._state = self._timed(
+                    "writeback", self._fns.writeback,
                     self._state, idx, prios, step, self._next_rng())
                 self._bump(updates_applied=1)
                 progressed = True
@@ -251,7 +294,8 @@ class ReplayShard:
             # protects, and a starved learner wastes more than a briefly
             # staler sampling distribution costs.
             while not self._sample_q.full() and self._can_sample():
-                batch = self._fns.sample(self._state, self._next_rng())
+                batch = self._timed("sample", self._fns.sample,
+                                    self._state, self._next_rng())
                 try:
                     self._sample_q.put_nowait(batch)
                 except queue.Full:
@@ -259,8 +303,14 @@ class ReplayShard:
                 self._bump(batches_sampled=1)
                 progressed = True
 
-            # 3. Drain actor blocks (Alg. 1 l.10-11).
-            while True:
+            # 3. Drain actor blocks (Alg. 1 l.10-11) — boundedly: under
+            # sustained actor pressure an open-ended drain would never
+            # yield back to steps 1-2 and the learner would starve behind
+            # a permanently non-empty add queue. One queue's worth per
+            # iteration keeps ingest at full rate while the prefetch/
+            # write-back steps stay scheduled (an unbounded queue —
+            # maxsize 0 — gets a fixed chunk instead).
+            for _ in range(self._add_q.maxsize or _SIZE_REFRESH_OPS):
                 try:
                     block = self._add_q.get_nowait()
                 except queue.Empty:

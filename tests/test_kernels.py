@@ -11,7 +11,9 @@ from repro.core.nstep import from_trajectory
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.nstep_return.ops import nstep_return
-from repro.kernels.sumtree_sample.ops import sumtree_sample
+from repro.kernels.sumtree_sample.ops import (sumtree_sample,
+                                              sumtree_sample_with_mass)
+from repro.kernels.sumtree_update.ops import sumtree_update
 
 
 FLASH_CASES = [
@@ -54,6 +56,56 @@ def test_sumtree_sample_matches_ref(cap, B, block):
     ref = sumtree.sample(tree, u)
     got = sumtree_sample(tree, u, block_b=block, interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # fused variant: identical indices plus bitwise leaf masses
+    got_idx, got_mass = sumtree_sample_with_mass(tree, u, block_b=block,
+                                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(got_mass),
+                                  np.asarray(sumtree.leaves(tree)[ref]))
+
+
+@pytest.mark.parametrize("cap,B,block", [(64, 32, 32), (256, 100, 64),
+                                         (1024, 512, 128), (32, 7, 8),
+                                         (64, 64, 16)])
+def test_sumtree_update_matches_ref(cap, B, block):
+    """Incremental Pallas update == XLA incremental == scatter + rebuild,
+    bit-for-bit, with duplicate writers resolved last-writer-wins."""
+    rng = np.random.RandomState(cap + B)
+    leaves = jnp.asarray(rng.uniform(0, 10, cap).astype(np.float32))
+    tree = sumtree.rebuild(leaves)
+    idx = jnp.asarray(rng.randint(0, cap, B).astype(np.int32))
+    if B >= 4:  # force duplicate writers with different values
+        idx = idx.at[1].set(idx[0]).at[3].set(idx[0])
+    vals = jnp.asarray(rng.uniform(0, 5, B).astype(np.float32))
+    ref = sumtree.write_rebuild(tree, idx, vals)
+    np.testing.assert_array_equal(
+        np.asarray(sumtree.update(tree, idx, vals)), np.asarray(ref))
+    got = sumtree_update(tree, idx, vals, block_b=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_sumtree_update_kernel_index_handling():
+    """Scatter-faithful index handling (and the block padding path): -1
+    wraps to C-1, >= C (and < -C) drops — bitwise equal to the oracle."""
+    tree = sumtree.rebuild(jnp.array([1.0, 2.0, 3.0, 4.0]))
+    idx = jnp.array([-1, 4, 2], jnp.int32)   # block_b=2: exercises padding
+    vals = jnp.array([9.0, 8.0, 7.0])
+    got = sumtree_update(tree, idx, vals, block_b=2, interpret=True)
+    ref = sumtree.write_rebuild(tree, idx, vals)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert float(sumtree.leaves(got)[3]) == 9.0  # -1 wrapped, 4 dropped
+
+
+def test_sumtree_update_kernel_cross_block_last_writer_wins():
+    """Duplicate writers split across grid blocks: the later block's lane
+    must win, matching the XLA scatter's in-order resolution."""
+    tree = sumtree.rebuild(jnp.ones((8,), jnp.float32))
+    idx = jnp.array([5, 1, 5, 5], jnp.int32)   # block_b=2: dup spans blocks
+    vals = jnp.array([2.0, 3.0, 4.0, 6.0], jnp.float32)
+    got = sumtree_update(tree, idx, vals, block_b=2, interpret=True)
+    ref = sumtree.write_rebuild(tree, idx, vals)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert float(sumtree.leaves(got)[5]) == 6.0
 
 
 @pytest.mark.parametrize("lanes,T,n,block", [(8, 20, 3, 8), (100, 16, 5, 32),

@@ -346,3 +346,93 @@ def test_run_async_inference_batching_end_to_end():
     assert res.inference_stats is not None
     assert res.inference_stats.requests >= res.inference_stats.dispatches
     assert res.inference_stats.dispatches > 0
+
+
+# --- hot-path satellites (PR 4) ---------------------------------------------
+
+def test_write_back_filtered_reordered_subset():
+    """The device-side partition must honor the documented contract: any
+    subset/ordering of keys from batches this fabric assembled scatters to
+    the owning shard (uneven per-shard counts, including an empty one)."""
+    preset = tiny_preset(min_fill=48, batch_size=16)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    fabric = ReplayFabric(cfg, item_example(env), num_shards=2).start()
+    try:
+        fill_fabric(fabric, cfg, env, agent, n_blocks=6)
+        batch = None
+        deadline = time.monotonic() + 5.0
+        while batch is None and time.monotonic() < deadline:
+            batch = fabric.get_batch(timeout=0.1)
+        assert batch is not None
+        cap = fabric.shard_capacity
+        idx = np.asarray(batch.indices)
+        # keep only shard 0's keys (first half of the merged layout),
+        # reversed — shard 1's update queue must stay untouched
+        keep = jnp.asarray(idx[:8][::-1].copy())
+        fabric.write_back(keep, jnp.full((8,), 4.0, jnp.float32))
+    finally:
+        fabric.stop()
+    assert fabric.error is None
+    assert fabric.shards[0].snapshot().updates_applied == 1
+    assert fabric.shards[1].snapshot().updates_applied == 0
+    leaves0 = np.asarray(sumtree.leaves(fabric.replay_states()[0].tree))
+    np.testing.assert_allclose(
+        leaves0[idx[:8]], float(prio.to_leaf(jnp.asarray(4.0))), rtol=1e-6)
+
+
+def test_latency_emas_populate():
+    """After enough owner-loop ops the sampled per-op latency EMAs must be
+    nonzero and aggregate as averages (not sums) across shards."""
+    preset = tiny_preset(min_fill=8)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    fabric = ReplayFabric(cfg, item_example(env), num_shards=2).start()
+    try:
+        # push >= 8 blocks per shard, tolerating backpressure retries (the
+        # shards start prefetching mid-fill, which stalls their add queues
+        # while `sample` compiles)
+        block = make_block(cfg, env, agent)
+        pushed = 0
+        deadline = time.monotonic() + 60.0
+        while pushed < 20 and time.monotonic() < deadline:
+            if fabric.add(block, timeout=0.2):
+                pushed += 1
+        assert pushed == 20, "fabric never absorbed the fill blocks"
+        deadline = time.monotonic() + 10.0
+        while (fabric.snapshot().add_us == 0.0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+    finally:
+        fabric.stop()
+    assert fabric.error is None
+    agg = fabric.snapshot()
+    per_shard = [s.add_us for s in fabric.shard_snapshots() if s.add_us > 0]
+    assert agg.add_us > 0.0
+    assert agg.add_us <= max(per_shard) + 1e-9  # an average, not a sum
+
+
+def test_caller_state_survives_donated_ops():
+    """The shard copies the incoming ReplayState before donating it into
+    jit, so the caller's reference (and a state template reused across
+    shards) stays readable after ops ran."""
+    preset = tiny_preset(min_fill=8)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    template = replay_lib.init(cfg.replay, item_example(env))
+    shards = [ReplayShard(cfg, template, shard_id=k).start()
+              for k in range(2)]
+    block = make_block(cfg, env, agent)
+    try:
+        for sh in shards:
+            assert sh.add(block, timeout=5.0)
+        deadline = time.monotonic() + 10.0
+        while (any(sh.snapshot().blocks_added < 1 for sh in shards)
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+    finally:
+        for sh in shards:
+            sh.stop()
+    assert all(sh.error is None for sh in shards)
+    # the template was never donated: still fully readable, still empty
+    assert float(sumtree.total(template.tree)) == 0.0
+    assert int(template.size) == 0
+    for sh in shards:
+        assert int(sh.replay_state.size) > 0

@@ -76,6 +76,102 @@ def test_sampling_frequency_tracks_priority(seed, hot):
     assert 0.35 <= frac <= 0.65
 
 
+@settings(max_examples=50, deadline=None)
+@given(
+    cap_pow=st.integers(2, 7),
+    n_writes=st.integers(0, 24),
+    seed=st.integers(0, 2**31 - 1),
+    dup=st.booleans(),
+)
+def test_incremental_update_bit_identical_to_rebuild(cap_pow, n_writes, seed, dup):
+    """The O(B log C) incremental update must round-trip bit-identically with
+    the scatter + full-rebuild oracle — including duplicate indices (last
+    writer wins), zero-size write batches, and zero-valued writes."""
+    cap = 1 << cap_pow
+    rng = np.random.RandomState(seed)
+    leaves = jnp.asarray(rng.uniform(0.0, 10.0, cap).astype(np.float32))
+    tree = sumtree.rebuild(leaves)
+    idx = jnp.asarray(rng.randint(0, cap, n_writes).astype(np.int32))
+    if dup and n_writes >= 3:
+        idx = idx.at[1].set(idx[0]).at[2].set(idx[0])  # forced duplicates
+    vals = jnp.asarray(rng.uniform(0.0, 5.0, n_writes).astype(np.float32))
+    if dup:
+        vals = vals.at[: n_writes // 2].set(0.0)  # zero writes kill leaves
+    oracle = sumtree.write_rebuild(tree, idx, vals)
+    np.testing.assert_array_equal(np.asarray(sumtree.update(tree, idx, vals)),
+                                  np.asarray(oracle))
+    # chained updates preserve the invariant bit-exactly too
+    tree2 = sumtree.update(sumtree.update(tree, idx, vals), idx, vals * 0.5)
+    oracle2 = sumtree.write_rebuild(oracle, idx, vals * 0.5)
+    np.testing.assert_array_equal(np.asarray(tree2), np.asarray(oracle2))
+
+
+def test_incremental_update_full_capacity_write():
+    """A batch covering every leaf (B == C) still matches the rebuild."""
+    cap = 32
+    rng = np.random.RandomState(0)
+    tree = sumtree.rebuild(jnp.asarray(rng.uniform(0, 1, cap), jnp.float32))
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    vals = jnp.asarray(rng.uniform(0, 9, cap), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sumtree.update(tree, idx, vals)),
+        np.asarray(sumtree.write_rebuild(tree, idx, vals)))
+
+
+def test_update_matches_scatter_index_handling():
+    """Negatives in [-C, -1] wrap numpy-style (like ``.at[idx].set``),
+    anything else out of [0, C) drops — bitwise equal to the oracle."""
+    tree = sumtree.rebuild(jnp.array([1.0, 2.0, 3.0, 4.0]))
+    idx = jnp.array([-1, 4, -5, 1])
+    vals = jnp.array([9.0, 8.0, 6.0, 7.0])
+    out = sumtree.update(tree, idx, vals)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(sumtree.write_rebuild(tree, idx, vals)))
+    leaves = np.asarray(sumtree.leaves(out))
+    assert leaves[3] == 9.0   # -1 wrapped to C-1
+    assert leaves[1] == 7.0
+    np.testing.assert_array_equal(leaves[[0, 2]], [1.0, 3.0])  # 4/-5 dropped
+
+
+def test_sample_with_mass_matches_two_gather():
+    """Fused descent+mass must be bitwise the descent plus a leaf gather."""
+    leaves = jax.random.uniform(jax.random.key(5), (64,))
+    tree = sumtree.rebuild(leaves)
+    u = jax.random.uniform(jax.random.key(6), (33,)) * sumtree.total(tree)
+    idx, mass = sumtree.sample_with_mass(tree, u)
+    ref_idx = sumtree.sample(tree, u)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+    np.testing.assert_array_equal(np.asarray(mass),
+                                  np.asarray(sumtree.leaves(tree)[ref_idx]))
+
+
+def test_backend_switch_interpret_matches_xla():
+    """set_backend("interpret") routes write/sample through the Pallas
+    kernels (interpreter on CPU) and must be bit-identical to the XLA path."""
+    leaves = jax.random.uniform(jax.random.key(7), (128,))
+    tree = sumtree.rebuild(leaves)
+    idx = jnp.array([3, 100, 3, 77], jnp.int32)
+    vals = jnp.array([0.5, 2.0, 1.5, 0.0], jnp.float32)
+    u = jax.random.uniform(jax.random.key(8), (17,)) * sumtree.total(tree)
+    assert sumtree.backend() == "xla"  # auto-detect off-TPU
+    xla_write = sumtree.write(tree, idx, vals)
+    xla_sample = sumtree.sample_with_mass(tree, u)
+    sumtree.set_backend("interpret")
+    try:
+        assert sumtree.backend() == "interpret"
+        np.testing.assert_array_equal(
+            np.asarray(sumtree.write(tree, idx, vals)), np.asarray(xla_write))
+        got_idx, got_mass = sumtree.sample_with_mass(tree, u)
+        np.testing.assert_array_equal(np.asarray(got_idx),
+                                      np.asarray(xla_sample[0]))
+        np.testing.assert_array_equal(np.asarray(got_mass),
+                                      np.asarray(xla_sample[1]))
+    finally:
+        sumtree.set_backend(None)
+    with pytest.raises(ValueError):
+        sumtree.set_backend("cuda")
+
+
 @settings(max_examples=25, deadline=None)
 @given(data=st.data())
 def test_sample_matches_manual_cdf(data):
