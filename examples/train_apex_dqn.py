@@ -57,7 +57,8 @@ def main_async(args):
     res = run_apex_async(preset, args.iterations, args.actor_threads,
                          args.ckpt_dir, args.replay_shards,
                          args.inference_batching, args.actor_procs,
-                         args.learn_batches)
+                         args.learn_batches,
+                         sample_staging=args.sample_staging)
     final = evaluate_greedy(preset, res.learner.params, episodes=16)
     print(f"\nfinal greedy evaluation over 16 episodes: {final:.3f}")
 
@@ -75,6 +76,9 @@ def main():
     ap.add_argument("--inference-batching", action="store_true")
     ap.add_argument("--learn-batches", type=int, default=1,
                     help="batches per jitted learner call (lax.scan)")
+    ap.add_argument("--sample-staging", action="store_true",
+                    help="double-buffer the learner's sample path through "
+                         "async device puts (see repro.runtime.sources)")
     args = ap.parse_args()
 
     if args.runtime == "async":

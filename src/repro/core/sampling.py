@@ -25,8 +25,27 @@ single-shard case) delegates here too.
 
 from __future__ import annotations
 
+from typing import Any, NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+
+class LearnerBatch(NamedTuple):
+    """The learner-plane sample contract: everything a learner consumes.
+
+    This is the *whole* surface the learner sees of the replay system —
+    shard-internal fields (leaf masses, per-shard totals) stay behind the
+    replay/fabric boundary, which is what lets the same learner loop run
+    against an in-process fabric, a staged device pipeline, or a remote
+    fabric over the wire (``repro.runtime.sources``). ``indices`` are global
+    ``(shard, slot)`` keys, so a priority write-back of any subset/order of
+    them routes to the owning shards unchanged regardless of transport.
+    """
+
+    indices: jax.Array     # (B,) global (shard, slot) keys
+    items: Any             # pytree of (B, ...) arrays
+    is_weights: jax.Array  # (B,) globally max-normalized IS weights
 
 
 def raw_weights(leaf_mass: jax.Array, scaled_total: jax.Array,

@@ -64,18 +64,31 @@ def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
 def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    ckpt_dir: str | None, replay_shards: int = 1,
                    inference_batching: bool = False, actor_procs: int = 0,
-                   learn_batches: int = 1, wire_quantize_obs: bool = False):
+                   learn_batches: int = 1, wire_quantize_obs: bool = False,
+                   sample_staging: bool = False,
+                   learner_remote: str | None = None,
+                   serve_sampling: bool = False, gateway_port: int = 0,
+                   gateway_host: str = "127.0.0.1"):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
     through the replay gateway (single-machine proof of the multi-host
-    path); ``learn_batches`` batches are consumed per jitted learner call."""
+    path); ``learn_batches`` batches are consumed per jitted learner call.
+    ``learner_remote`` turns this process into a pure learner sampling a
+    remote fabric; ``serve_sampling`` turns it into the serving side
+    (actors + fabric + gateway, no local learner); ``sample_staging``
+    double-buffers the learner's sample path through async device puts."""
     acfg = AsyncConfig(actor_threads=actor_threads,
                        actor_procs=actor_procs,
                        replay_shards=replay_shards,
                        inference_batching=inference_batching,
                        learn_batches_per_step=learn_batches,
                        wire_quantize_obs=wire_quantize_obs,
+                       sample_staging=sample_staging,
+                       learner_remote=learner_remote,
+                       serve_sampling=serve_sampling,
+                       gateway_port=gateway_port,
+                       gateway_host=gateway_host,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -98,6 +111,15 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
               f"{g.blocks_in} blocks / {g.transitions_in} transitions in, "
               f"{g.param_sends} param snapshots out, "
               f"{g.bytes_in / 1e6:.1f} MB ingested")
+        if g.sample_requests:
+            print(f"  sample plane: {g.sample_sends} batches served "
+                  f"({g.sample_starved} starved polls), "
+                  f"{g.priority_updates} priority write-backs in, "
+                  f"{g.param_pushes} param pushes in")
+    if res.source_stats is not None and res.source_stats.staged:
+        ss = res.source_stats
+        print(f"  staging: {ss.staged} batches staged ahead "
+              f"({ss.stage_idle} idle polls)")
     if res.inference_stats is not None:
         i = res.inference_stats
         print(f"  inference: {i.requests} act-requests in {i.dispatches} "
@@ -105,7 +127,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
     if res.last_actor_metrics:
         print(f"  last mean_ep_return="
               f"{res.last_actor_metrics['mean_ep_return']:.3f}")
-    if ckpt_dir:
+    if ckpt_dir and not serve_sampling:
+        # In serve mode the trained params live on the remote learner host;
+        # res.learner here is the untouched init state.
         ckpt_lib.save(f"{ckpt_dir}/ckpt_async_final.npz",
                       {"params": res.learner.params,
                        "opt_state": res.learner.opt_state,
@@ -146,7 +170,7 @@ def run_llm(arch: str, iterations: int, log_every: int, ckpt_dir: str | None,
     return state
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("apex-dqn", "apex-dpg", "llm"),
                     default="apex-dqn")
@@ -160,8 +184,10 @@ def main():
                     help="sync: lockstep act/learn alternation; async: "
                          "decoupled actor threads + replay service + learner "
                          "(apex modes only)")
-    ap.add_argument("--actor-threads", type=int, default=1,
-                    help="actor threads for --runtime async")
+    ap.add_argument("--actor-threads", type=int, default=None,
+                    help="actor threads for --runtime async (default 1; "
+                         "0 is implied by --learner-remote and allowed with "
+                         "--actor-procs)")
     ap.add_argument("--replay-shards", type=int, default=1,
                     help="replay fabric shards for --runtime async (actor "
                          "blocks route round-robin; learner batches merge "
@@ -180,14 +206,153 @@ def main():
     ap.add_argument("--wire-quantize-obs", action="store_true",
                     help="actor processes ship observations via the replay "
                          "codec (uint8 + affine, ~4x less wire traffic)")
-    args = ap.parse_args()
+    ap.add_argument("--sample-staging", action="store_true",
+                    help="double-buffer the learner's sample path: a stager "
+                         "thread device-puts batch k+1 while the learner "
+                         "computes on batch k (--runtime async)")
+    ap.add_argument("--learner-remote", metavar="HOST:PORT", default=None,
+                    help="run ONLY the learner here, sampling the replay "
+                         "fabric served by a --serve-sampling run at "
+                         "HOST:PORT (--runtime async)")
+    ap.add_argument("--serve-sampling", action="store_true",
+                    help="run actors + replay fabric + gateway and no local "
+                         "learner; a --learner-remote process drives the "
+                         "run through the gateway (--runtime async)")
+    ap.add_argument("--gateway-port", type=int, default=0,
+                    help="replay gateway TCP port (0: ephemeral; set a "
+                         "fixed port for --serve-sampling so the learner "
+                         "host knows where to connect)")
+    ap.add_argument("--gateway-host", default="127.0.0.1",
+                    help="replay gateway bind address; the loopback "
+                         "default only reaches same-machine peers — pass "
+                         "0.0.0.0 to serve actors/learners on other hosts")
+    return ap
+
+
+def validate_args(ap: argparse.ArgumentParser,
+                  args: argparse.Namespace) -> argparse.Namespace:
+    """Reject incoherent flag combinations up front with actionable
+    messages, instead of letting them fail deep inside the runtime (or
+    silently do something other than what was asked). Resolves the
+    ``--actor-threads`` default (1, or 0 when ``--learner-remote`` implies a
+    learner-only process). Returns the resolved namespace."""
+    is_async = args.runtime == "async"
+    async_only = [("--actor-procs", args.actor_procs != 0),
+                  ("--replay-shards", args.replay_shards != 1),
+                  ("--inference-batching", args.inference_batching),
+                  ("--learn-batches", args.learn_batches != 1),
+                  ("--wire-quantize-obs", args.wire_quantize_obs),
+                  ("--sample-staging", args.sample_staging),
+                  ("--learner-remote", args.learner_remote is not None),
+                  ("--serve-sampling", args.serve_sampling),
+                  ("--gateway-port", args.gateway_port != 0),
+                  ("--gateway-host", args.gateway_host != "127.0.0.1"),
+                  ("--actor-threads", args.actor_threads is not None)]
+    if not is_async:
+        used = [name for name, on in async_only if on]
+        if used:
+            ap.error(f"{', '.join(used)} require(s) --runtime async "
+                     "(the sync lockstep driver has no actor/replay/learner "
+                     "threads to configure)")
+    if args.mode == "llm":
+        if not args.arch:
+            ap.error("--mode llm requires --arch")
+        if is_async:
+            ap.error("--runtime async applies to the apex modes only; "
+                     "--mode llm always runs the sequence-replay round loop")
+    if args.iterations < 1:
+        ap.error(f"--iterations must be >= 1, got {args.iterations}")
+    if args.learn_batches < 1:
+        ap.error(f"--learn-batches must be >= 1, got {args.learn_batches}")
+    if args.actor_procs < 0:
+        ap.error(f"--actor-procs must be >= 0, got {args.actor_procs}")
+    if args.replay_shards < 1:
+        ap.error(f"--replay-shards must be >= 1, got {args.replay_shards}")
+
+    if args.learner_remote is not None:
+        from repro.net.learner_client import parse_hostport
+        try:
+            parse_hostport(args.learner_remote)
+        except ValueError as e:
+            ap.error(f"--learner-remote: {e}")
+        if args.serve_sampling:
+            ap.error("--learner-remote and --serve-sampling are the two "
+                     "sides of one topology: this process either samples a "
+                     "remote fabric or serves its own, not both")
+        conflicts = [("--actor-threads", args.actor_threads not in (None, 0)),
+                     ("--actor-procs", args.actor_procs != 0),
+                     ("--replay-shards", args.replay_shards != 1),
+                     ("--inference-batching", args.inference_batching),
+                     ("--wire-quantize-obs", args.wire_quantize_obs),
+                     ("--gateway-port", args.gateway_port != 0),
+                     ("--gateway-host", args.gateway_host != "127.0.0.1")]
+        used = [name for name, on in conflicts if on]
+        if used:
+            ap.error(f"--learner-remote runs a learner-only process; "
+                     f"{', '.join(used)} configure(s) the acting/replay "
+                     "side, which lives on the --serve-sampling host — "
+                     "drop the flag(s) here and pass them there")
+        args.actor_threads = 0
+    elif args.actor_threads is None:
+        args.actor_threads = 1
+
+    if args.serve_sampling:
+        serve_conflicts = [("--sample-staging", args.sample_staging),
+                           ("--learn-batches", args.learn_batches != 1)]
+        used = [name for name, on in serve_conflicts if on]
+        if used:
+            ap.error(f"--serve-sampling runs no local learner; "
+                     f"{', '.join(used)} configure(s) the learner's "
+                     "consume path — pass them to the --learner-remote "
+                     "process instead")
+
+    if not 0 <= args.gateway_port <= 65535:
+        ap.error(f"--gateway-port must be in [0, 65535] (0 = ephemeral), "
+                 f"got {args.gateway_port}")
+    gateway_flags = [("--gateway-port", args.gateway_port != 0),
+                     ("--gateway-host", args.gateway_host != "127.0.0.1")]
+    used = [name for name, on in gateway_flags if on]
+    if used and not (args.serve_sampling or args.actor_procs > 0):
+        ap.error(f"{', '.join(used)} configure(s) the replay gateway, but "
+                 "no gateway will run — add --serve-sampling (serve a "
+                 "remote learner) or --actor-procs N (serve actor "
+                 "processes)")
+
+    if args.actor_threads < 0:
+        ap.error(f"--actor-threads must be >= 0, got {args.actor_threads}")
+    if (is_async and args.actor_threads == 0 and args.actor_procs == 0
+            and args.learner_remote is None):
+        ap.error("--actor-threads 0 leaves the run with no experience "
+                 "source: add --actor-procs N (actors as OS processes) or "
+                 "run actor threads (the learner would starve forever)")
+    if args.inference_batching and args.actor_threads == 0:
+        ap.error("--inference-batching batches *in-process* actor threads; "
+                 "with --actor-threads 0 there is nothing to batch (actor "
+                 "processes run their own jitted rollouts)")
+    if args.serve_sampling and args.gateway_port == 0:
+        print("note: --serve-sampling with an ephemeral --gateway-port; "
+              "the learner host needs the port printed at startup "
+              "(pass --gateway-port to fix it)")
+    return args
+
+
+def main():
+    ap = build_parser()
+    args = validate_args(ap, ap.parse_args())
 
     def run_preset(preset):
         if args.runtime == "async":
+            if preset.apex.batch_size % args.replay_shards:
+                ap.error(f"--replay-shards {args.replay_shards} must divide "
+                         f"the preset batch size {preset.apex.batch_size} "
+                         "(equal per-shard sample quotas)")
             run_apex_async(preset, args.iterations, args.actor_threads,
                            args.ckpt_dir, args.replay_shards,
                            args.inference_batching, args.actor_procs,
-                           args.learn_batches, args.wire_quantize_obs)
+                           args.learn_batches, args.wire_quantize_obs,
+                           args.sample_staging, args.learner_remote,
+                           args.serve_sampling, args.gateway_port,
+                           args.gateway_host)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 
@@ -200,8 +365,6 @@ def main():
         preset = apex_dpg.full() if args.full else apex_dpg.reduced()
         run_preset(preset)
     else:
-        if not args.arch:
-            ap.error("--mode llm requires --arch")
         run_llm(args.arch, args.iterations, args.log_every, args.ckpt_dir)
 
 

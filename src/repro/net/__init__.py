@@ -11,21 +11,29 @@
   in-flight window; ``python -m repro.net.actor_client`` runs it against a
   remote gateway (the multi-host path), ``launch/train.py --actor-procs N``
   spawns local subprocesses (the single-machine proof).
-
-The wire format established here is the contract every future multi-host
-feature (remote learners, replay replication) builds on.
+* ``learner_client`` — ``RemoteFabricSource``: the *sample plane* — a
+  ``repro.runtime.sources.SampleSource`` speaking ``SAMPLE_REQUEST`` /
+  ``SAMPLE_BATCH`` / ``PRIORITY_UPDATE`` / ``PARAM_PUSH`` against the same
+  gateway/fabric the actors feed, so a learner on another host samples,
+  learns, and writes priorities back through the global (shard, slot) keys
+  unchanged (``launch/train.py --learner-remote HOST:PORT``).
 """
 
 from repro.net.actor_client import (RemoteActorLoop, RemoteActorSpec,
                                     initial_slice, run_remote_actor)
 from repro.net.gateway import GatewayStats, ReplayGateway
+from repro.net.learner_client import RemoteFabricSource, parse_hostport
 from repro.net.wire import (FrameReader, WireError, decode_block,
-                            decode_params, decode_tree, encode_block,
-                            encode_params, encode_tree)
+                            decode_params, decode_priority_update,
+                            decode_sample_batch, decode_tree, encode_block,
+                            encode_params, encode_priority_update,
+                            encode_sample_batch, encode_tree)
 
 __all__ = [
     "FrameReader", "GatewayStats", "RemoteActorLoop", "RemoteActorSpec",
-    "ReplayGateway", "WireError", "decode_block", "decode_params",
-    "decode_tree", "encode_block", "encode_params", "encode_tree",
-    "initial_slice", "run_remote_actor",
+    "RemoteFabricSource", "ReplayGateway", "WireError", "decode_block",
+    "decode_params", "decode_priority_update", "decode_sample_batch",
+    "decode_tree", "encode_block", "encode_params",
+    "encode_priority_update", "encode_sample_batch", "encode_tree",
+    "initial_slice", "parse_hostport", "run_remote_actor",
 ]

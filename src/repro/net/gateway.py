@@ -29,6 +29,17 @@ Topology::
   ``PARAM_UNCHANGED`` — the client pulls every ``param_sync_period``
   rollouts (Alg. 1 l.2), so the period is honored client-side and the
   gateway never pushes unsolicited traffic.
+* **Sample plane (remote learners).** The same fabric's *learner* side is
+  served over the same socket discipline: ``SAMPLE_REQUEST`` pops one
+  prioritized batch (empty ``SAMPLE_BATCH`` reply while starved — the
+  remote analogue of ``get_batch`` returning None), ``PRIORITY_UPDATE``
+  scatters write-backs by the global (shard, slot) keys the batch carried,
+  and ``PARAM_PUSH`` publishes the remote learner's fresh params into this
+  host's ``ParamStore`` so the actors feeding the fabric keep pulling
+  learning-current snapshots. ``fabric.get_batch`` is single-consumer, so
+  sample pops are serialized under a lock; exactly one remote learner
+  should be attached at a time (a second one would consume from the same
+  logical replay — replay replication, not an error, but not a fan-out).
 
 ``stop()`` sends ``STOP`` to every live client (best effort), closes the
 listener, and joins the handlers; a handler that dies on malformed traffic
@@ -42,6 +53,8 @@ import socket
 import threading
 import time
 from typing import Any
+
+import jax
 
 from repro.net import wire
 from repro.runtime.params import ParamStore
@@ -61,6 +74,13 @@ class GatewayStats:
     client_rollouts: int = 0    # merged from BYE frames (client-side view)
     client_blocked: int = 0     # client waits on a full in-flight window
     wire_errors: int = 0        # connections dropped on malformed traffic
+    sample_requests: int = 0    # SAMPLE_REQUESTs served (incl. starved)
+    sample_sends: int = 0       # ... that shipped an actual batch
+    sample_starved: int = 0     # ... answered empty (fabric below min-fill
+                                # or prefetch lagging)
+    priority_updates: int = 0   # PRIORITY_UPDATE write-backs routed into
+                                # the fabric (the serve-side learner clock)
+    param_pushes: int = 0       # PARAM_PUSH snapshots published locally
 
 
 class ReplayGateway:
@@ -68,11 +88,17 @@ class ReplayGateway:
 
     def __init__(self, fabric: Any, store: ParamStore, *,
                  host: str = "127.0.0.1", port: int = 0,
-                 add_timeout_s: float = 0.05, poll_s: float = 0.2,
-                 drain_grace_s: float = 1.0, backlog: int = 64):
+                 add_timeout_s: float = 0.05, sample_timeout_s: float = 0.05,
+                 poll_s: float = 0.2, drain_grace_s: float = 1.0,
+                 backlog: int = 64):
         self._fabric = fabric
         self._store = store
         self._add_timeout_s = add_timeout_s
+        self._sample_timeout_s = sample_timeout_s
+        # fabric.get_batch is single-consumer (parked sub-batches); serialize
+        # sample pops across handler threads so the contract holds even if
+        # several learner connections appear.
+        self._sample_lock = threading.Lock()
         self._poll_s = poll_s
         self._drain_grace_s = drain_grace_s
         self._listener = socket.create_server((host, port), backlog=backlog)
@@ -205,6 +231,21 @@ class ReplayGateway:
                                 sock, wire.ADD_ACK))
                     # else: dropped during shutdown — no ACK; the client is
                     # about to receive STOP anyway
+                elif msg_type == wire.SAMPLE_REQUEST:
+                    self._serve_sample(sock, send_lock)
+                elif msg_type == wire.PRIORITY_UPDATE:
+                    idx, prios = wire.decode_priority_update(payload)
+                    # Same asynchronous write-back path as the in-process
+                    # learner; the global keys route to the owning shards.
+                    self._fabric.write_back(idx, prios)
+                    self._bump(priority_updates=1)
+                elif msg_type == wire.PARAM_PUSH:
+                    _version, params = wire.decode_params(payload)
+                    # Publish on-device so the K actors pulling this
+                    # snapshot don't each re-transfer host leaves. The
+                    # store numbers versions itself (single local writer).
+                    self._store.publish(jax.device_put(params))
+                    self._bump(param_pushes=1)
                 elif msg_type == wire.PARAM_PULL:
                     have = wire.decode_json(payload).get("have", -1)
                     self._serve_params(sock, send_lock, int(have))
@@ -255,6 +296,20 @@ class ReplayGateway:
             self.stats.transitions_in += n
             self._conn_blocks[cid] += 1
         return True
+
+    def _serve_sample(self, sock: socket.socket,
+                      send_lock: threading.Lock) -> None:
+        """Pop one prioritized batch and ship it; an empty payload tells the
+        learner the fabric is starved (poll again) — backpressure in the
+        sampling direction, mirroring the ADD_ACK window on ingest."""
+        with self._sample_lock:
+            batch = self._fabric.get_batch(timeout=self._sample_timeout_s)
+        payload = b"" if batch is None else wire.encode_sample_batch(batch)
+        with send_lock:
+            sent = wire.send_frame(sock, wire.SAMPLE_BATCH, payload)
+        self._bump(sample_requests=1, bytes_out=sent,
+                   sample_sends=int(batch is not None),
+                   sample_starved=int(batch is None))
 
     def _encoded_params(self, snap) -> bytes:
         with self._param_cache_lock:

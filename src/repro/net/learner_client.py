@@ -1,0 +1,184 @@
+"""Remote learner client: sample a replay fabric on another host.
+
+The Gorila lineage ("Massively Parallel Methods for Deep RL") separates
+learners from the replay memory across machines; in-network experience
+sampling work pushes the same boundary into the transport. This module is
+that boundary for our runtime: :class:`RemoteFabricSource` implements the
+``repro.runtime.sources.SampleSource`` protocol over the ``repro.net`` wire
+format, so the learner loop in ``runtime/runner.py`` runs unchanged against
+a fabric it cannot touch in-process.
+
+Per batch, the exchange is strict request/reply::
+
+    learner ── SAMPLE_REQUEST ──────────────► gateway
+    learner ◄───────── SAMPLE_BATCH ───────── gateway   (empty = starved)
+    learner ── PRIORITY_UPDATE (async) ─────► gateway
+    learner ── PARAM_PUSH (on publish) ─────► gateway
+
+Deliberately *serial and simple*: the client holds at most one outstanding
+request and does no overlap of its own. Hiding the round trip + decode +
+host→device copy behind learner compute is the job of the ``StagedSource``
+decorator — wrap this source in one (``AsyncConfig.sample_staging``) and the
+stager thread runs this client's request/decode while the learner computes
+on the previous batch. That keeps the overlap policy in one place instead of
+re-implemented per transport.
+
+Thread contract: ``get_batch`` (and therefore the socket *reader*) belongs
+to one consumer thread (the learner, or the stager when wrapped);
+``write_back``/``publish_params`` only send and may be called from the
+learner thread concurrently with a stager's ``get_batch`` — sends are
+serialized by an internal lock.
+
+Numerics: batches carry final globally-corrected IS weights and global
+(shard, slot) keys; fp32/int32 leaves travel bit-identically, so a remote
+learner consumes byte-for-byte what a local learner would.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Any
+
+from repro.core.sampling import LearnerBatch
+from repro.net import wire
+from repro.runtime.service import ServiceStats
+from repro.runtime.sources import SampleSource, SourceClosed, SourceStats
+
+
+class RemoteFabricSource(SampleSource):
+    """Sample/write-back against a ``ReplayGateway`` over TCP."""
+
+    def __init__(self, host: str, port: int, *,
+                 connect_timeout_s: float = 10.0, poll_s: float = 0.05):
+        self._addr = (host, int(port))
+        self._connect_timeout_s = connect_timeout_s
+        self._poll_s = poll_s
+        self._sock: socket.socket | None = None
+        self._reader: wire.FrameReader | None = None
+        self._send_lock = threading.Lock()
+        self._requested = False   # one SAMPLE_REQUEST may be outstanding
+        self._closed = False
+        self.stats = SourceStats()
+        self.bytes_out = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "RemoteFabricSource":
+        """Connect and handshake. Connection attempts retry until the
+        timeout — the serving runtime may still be binding its gateway when
+        the learner host comes up."""
+        deadline = time.monotonic() + self._connect_timeout_s
+        while True:
+            try:
+                self._sock = socket.create_connection(
+                    self._addr, timeout=self._connect_timeout_s)
+                break
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.1)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._reader = wire.FrameReader(self._sock)
+        self._send(wire.HELLO, wire.encode_json(
+            {"actor_id": -1, "role": "learner",
+             "protocol": wire.PROTOCOL_VERSION}))
+        return self
+
+    def stop(self) -> None:
+        if self._sock is None:
+            return
+        try:
+            self._send(wire.BYE, wire.encode_json(
+                {"rollouts": 0, "blocked": self.stats.starved_polls}))
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._closed = True
+
+    def _send(self, msg_type: int, payload: bytes = b"") -> None:
+        with self._send_lock:
+            self.bytes_out += wire.send_frame(self._sock, msg_type, payload)
+
+    # -- SampleSource -------------------------------------------------------
+
+    def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
+        """Request/await one batch. None on reply timeout or a starved
+        (empty) reply; the outstanding request survives a timeout, so the
+        next call resumes waiting instead of double-requesting."""
+        if self._closed:
+            raise SourceClosed("remote fabric connection is closed")
+        if not self._requested:
+            self._send(wire.SAMPLE_REQUEST)
+            self._requested = True
+        try:
+            got = self._reader.read_frame(
+                timeout=self._poll_s if timeout is None else timeout)
+        except EOFError as e:
+            self._closed = True
+            raise SourceClosed(
+                "replay gateway went away while the learner was sampling"
+            ) from e
+        if got is None:
+            self.stats.starved_polls += 1
+            return None
+        msg_type, payload = got
+        self._requested = False
+        if msg_type == wire.STOP:
+            self._closed = True
+            raise SourceClosed(
+                "replay gateway sent STOP while the learner was sampling")
+        if msg_type != wire.SAMPLE_BATCH:
+            raise wire.WireError(
+                f"unexpected message {msg_type} from gateway")
+        if len(payload) == 0:   # fabric starved: poll again
+            self.stats.starved_polls += 1
+            return None
+        batch = wire.decode_sample_batch(payload)
+        self.stats.batches += 1
+        return batch
+
+    def write_back(self, indices: Any, priorities: Any) -> None:
+        self._send(wire.PRIORITY_UPDATE,
+                   wire.encode_priority_update(indices, priorities))
+        self.stats.writebacks += 1
+
+    def publish_params(self, version: int, params: Any) -> None:
+        """Ship fresh learner params to the gateway, which publishes them
+        into *its* ParamStore — the one the fabric-side actors pull from —
+        closing the acting↔learning loop across the machine boundary."""
+        self._send(wire.PARAM_PUSH, wire.encode_params(version, params))
+        self.stats.param_pushes += 1
+
+    def snapshot(self) -> ServiceStats:
+        """Client-side view: what this learner consumed/wrote back. The
+        authoritative replay counters live in the serving host's fabric and
+        gateway snapshots."""
+        return ServiceStats(batches_sampled=self.stats.batches,
+                            updates_applied=self.stats.writebacks)
+
+    @property
+    def bytes_in(self) -> int:
+        return self._reader.bytes_in if self._reader is not None else 0
+
+
+def parse_hostport(spec: str, default_host: str = "127.0.0.1",
+                   ) -> tuple[str, int]:
+    """``"host:port"`` (or bare ``"port"``) → ``(host, port)``, with an
+    actionable error for anything else — including out-of-range ports,
+    which would otherwise surface as an OverflowError (or a futile retry
+    loop, for port 0) deep inside the connect path."""
+    host, _, port = spec.rpartition(":")
+    try:
+        port_num = int(port)
+    except ValueError:
+        raise ValueError(
+            f"expected HOST:PORT (or just PORT), got {spec!r}") from None
+    if not 1 <= port_num <= 65535:
+        raise ValueError(f"port must be in [1, 65535], got {port_num} "
+                         f"(from {spec!r})")
+    return (host or default_host, port_num)

@@ -35,7 +35,24 @@ Message inventory (direction, payload):
 ``PARAM_UNCHANGED``gw → actor      JSON ``{version}``
 ``STOP``           gw → actor      empty (shutdown; actor drains and exits)
 ``BYE``            actor → gw      JSON client-side counters
+``SAMPLE_REQUEST`` learner → gw    empty (one prioritized batch, please)
+``SAMPLE_BATCH``   gw → learner    array-tree ``{indices, items,
+                                   is_weights}``; *empty* payload = fabric
+                                   starved (below min-fill / prefetch
+                                   lagging), poll again
+``PRIORITY_UPDATE``learner → gw    array-tree ``{indices, priorities}``
+                                   (global (shard, slot) keys; fire-and-
+                                   forget, like the in-process update queue)
+``PARAM_PUSH``     learner → gw    u64 version ++ array-tree params (remote
+                                   learner publishes into the gateway-side
+                                   ParamStore its actors pull from)
 =================  ==============  ==========================================
+
+The last four frames are the *sample plane* (remote learners): a gateway
+serves its replay fabric's learner side over the same connection discipline
+as ingest, and because batches carry global keys and final IS weights, a
+remote learner is numerically indistinguishable from a local one — fp32
+leaves travel bit-identically.
 """
 
 from __future__ import annotations
@@ -48,6 +65,7 @@ from typing import Any
 import numpy as np
 
 from repro.core import codec
+from repro.core.sampling import LearnerBatch
 from repro.runtime.phases import TransitionBlock
 
 PROTOCOL_VERSION = 1
@@ -65,6 +83,10 @@ PARAM = 5
 PARAM_UNCHANGED = 6
 STOP = 7
 BYE = 8
+SAMPLE_REQUEST = 9
+SAMPLE_BATCH = 10
+PRIORITY_UPDATE = 11
+PARAM_PUSH = 12
 
 # Array-tree leaf header: key_len, dtype_len, ndim  (then key, dtype.str,
 # shape as u32s, nbytes as u64, raw bytes).
@@ -73,7 +95,13 @@ _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
 
 # Guard against a corrupt/hostile length prefix allocating unbounded memory.
-MAX_PAYLOAD = 1 << 31
+# 256 MiB comfortably covers every legitimate payload (transition blocks are
+# ~100 KB-class, param snapshots MB-class, sample batches well under that);
+# a corrupt 4-byte prefix used to pass anything up to 2 GiB straight into
+# the receive buffer's allocation. Peers that agree on genuinely larger
+# payloads raise the bound on both ends: ``max_payload`` on the receiving
+# ``FrameReader`` and on the sending ``frame``/``send_frame``.
+MAX_PAYLOAD = 1 << 28
 
 # Key used to mark a wire-quantized observation subtree.
 _QUANT_KEY = "__wireq__"
@@ -228,6 +256,56 @@ def jax_to_np(tree: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Sample-plane payloads (remote learners)
+# ---------------------------------------------------------------------------
+
+def encode_sample_batch(batch: Any) -> bytes:
+    """``SAMPLE_BATCH`` payload for one learner batch. Accepts anything with
+    ``indices``/``items``/``is_weights`` fields (a merged ``LearnerBatch`` or
+    a single-shard ``SampleBatch`` — shard-internal fields are *not* shipped:
+    the wire carries exactly the learner-plane contract). fp32/int32 leaves
+    round-trip bit-identically, so a remote learner's batch equals the local
+    learner's bit for bit."""
+    return encode_tree({
+        "indices": np.asarray(batch.indices),
+        "is_weights": np.asarray(batch.is_weights),
+        "items": jax_to_np(batch.items),
+    })
+
+
+def decode_sample_batch(payload: bytes | memoryview) -> LearnerBatch:
+    """Inverse of :func:`encode_sample_batch` (numpy leaves; the learner's
+    jitted update — or a ``StagedSource`` wrapper — moves them on-device)."""
+    tree = decode_tree(payload)
+    try:
+        return LearnerBatch(indices=tree["indices"], items=tree["items"],
+                            is_weights=tree["is_weights"])
+    except WireError:
+        raise
+    except Exception as e:  # missing keys
+        raise WireError(f"malformed SAMPLE_BATCH payload: {e!r}") from e
+
+
+def encode_priority_update(indices: Any, priorities: Any) -> bytes:
+    """``PRIORITY_UPDATE`` payload: the write-back half of the sample plane.
+    ``indices`` are the global (shard, slot) keys of a previously shipped
+    batch (any subset/ordering — the keys are self-describing)."""
+    return encode_tree({"indices": np.asarray(indices),
+                        "priorities": np.asarray(priorities)})
+
+
+def decode_priority_update(payload: bytes | memoryview,
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    tree = decode_tree(payload)
+    try:
+        return tree["indices"], tree["priorities"]
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireError(f"malformed PRIORITY_UPDATE payload: {e!r}") from e
+
+
+# ---------------------------------------------------------------------------
 # Parameter payloads
 # ---------------------------------------------------------------------------
 
@@ -264,15 +342,24 @@ def decode_json(payload: bytes | memoryview) -> dict:
 # Framing
 # ---------------------------------------------------------------------------
 
-def frame(msg_type: int, payload: bytes = b"") -> bytes:
-    """One wire frame: header + payload, ready for ``sendall``."""
+def frame(msg_type: int, payload: bytes = b"",
+          max_payload: int | None = None) -> bytes:
+    """One wire frame: header + payload, ready for ``sendall``. Oversized
+    payloads fail *here*, on the sender, with a clear error — the receiver
+    would otherwise drop the whole connection on the length prefix.
+    ``max_payload`` mirrors the ``FrameReader`` override: peers that agree
+    on a larger bound raise it on both ends (sender here, receiver at the
+    reader); the default is the module cap."""
+    cap = MAX_PAYLOAD if max_payload is None else max_payload
+    if len(payload) > cap:
+        raise WireError(f"payload length {len(payload)} exceeds cap {cap}")
     return _HEADER.pack(MAGIC, PROTOCOL_VERSION, msg_type,
                         len(payload)) + payload
 
 
 def send_frame(sock: socket.socket, msg_type: int, payload: bytes = b"",
-               ) -> int:
-    buf = frame(msg_type, payload)
+               max_payload: int | None = None) -> int:
+    buf = frame(msg_type, payload, max_payload)
     sock.sendall(buf)
     return len(buf)
 
@@ -286,9 +373,11 @@ class FrameReader:
     reads with periodic stop-flag checks.
     """
 
-    def __init__(self, sock: socket.socket, chunk: int = 1 << 16):
+    def __init__(self, sock: socket.socket, chunk: int = 1 << 16,
+                 max_payload: int = MAX_PAYLOAD):
         self._sock = sock
         self._chunk = chunk
+        self._max_payload = max_payload
         self._buf = bytearray()
         self.bytes_in = 0
         self.eof = False
@@ -325,8 +414,11 @@ class FrameReader:
         if version != PROTOCOL_VERSION:
             raise WireError(f"protocol version {version} != "
                             f"{PROTOCOL_VERSION}")
-        if length > MAX_PAYLOAD:
-            raise WireError(f"payload length {length} exceeds cap")
+        if length > self._max_payload:
+            # Reject before any payload-sized allocation: a corrupt/hostile
+            # 4-byte prefix must not size the receive buffer.
+            raise WireError(f"payload length {length} exceeds cap "
+                            f"{self._max_payload}")
         if not self._fill(_HEADER.size + length, timeout):
             return None
         payload = bytes(self._buf[_HEADER.size:_HEADER.size + length])

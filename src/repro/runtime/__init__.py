@@ -14,6 +14,13 @@ Layering:
 * ``inference`` — ``InferenceServer``: coalesces actor act-requests into
   one jitted ``vmap(act_phase)`` device dispatch shared by all actor
   threads (the paper's 1/139 FPS-per-actor economics).
+* ``sources``   — the *sample plane*: the learner consumes a
+  ``SampleSource`` (sample → consume → priority write-back + stats) and
+  never touches fabric internals. ``LocalFabricSource`` wraps the
+  in-process fabric, ``repro.net.learner_client.RemoteFabricSource``
+  speaks the wire format to a fabric on another host, and
+  ``StagedSource`` decorates either with device-staged double buffering
+  (async ``device_put`` of batch k+1 overlapping the learn step on k).
 * ``runner``    — thread wiring + throughput accounting (``run_async``).
 
 Fabric topology and the (shard, slot) key scheme
@@ -49,12 +56,15 @@ from repro.runtime.phases import (ActorSlice, LearnerSlice, TransitionBlock,
 from repro.runtime.runner import AsyncConfig, RuntimeResult, run_async
 from repro.runtime.service import (ReplayService, ReplayShard, ServiceStats,
                                    ShardFns, make_shard_fns)
+from repro.runtime.sources import (LocalFabricSource, SampleSource,
+                                   SourceClosed, SourceStats, StagedSource)
 
 __all__ = [
     "ActorSlice", "AsyncConfig", "FabricBatch", "InferenceServer",
-    "InferenceStats", "LearnerSlice", "ParamSnapshot", "ParamStore",
-    "ReplayFabric", "ReplayService", "ReplayShard", "RuntimeResult",
-    "ServiceStats", "ShardFns", "TransitionBlock", "act_phase",
+    "InferenceStats", "LearnerSlice", "LocalFabricSource", "ParamSnapshot",
+    "ParamStore", "ReplayFabric", "ReplayService", "ReplayShard",
+    "RuntimeResult", "SampleSource", "ServiceStats", "ShardFns", "SourceClosed",
+    "SourceStats", "StagedSource", "TransitionBlock", "act_phase",
     "lane_epsilons", "learn_phase", "make_shard_fns", "priority_writeback",
     "replay_add", "run_async", "shard_replay_config",
 ]

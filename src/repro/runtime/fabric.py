@@ -34,7 +34,7 @@ import dataclasses
 import functools
 import math
 import threading
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -46,11 +46,10 @@ from repro.runtime.service import (ReplayShard, ServiceStats, ShardFns,
                                    make_shard_fns)
 
 
-class FabricBatch(NamedTuple):
-    """A learner batch merged from per-shard sub-samples."""
-    indices: jax.Array     # (B,) global (shard, slot) keys
-    items: Any             # pytree of (B, ...) arrays
-    is_weights: jax.Array  # (B,) globally max-normalized IS weights
+# A merged learner batch is exactly the learner-plane contract: global
+# (shard, slot) keys, items, globally-corrected IS weights. The historical
+# fabric-local name is kept as an alias.
+FabricBatch = sampling.LearnerBatch
 
 
 def shard_replay_config(rcfg: replay_lib.ReplayConfig,
@@ -197,16 +196,7 @@ class ReplayFabric:
         write-back applications: one learner step touches every shard);
         the per-op latency EMAs (``*_us``) average over the shards that
         have a measurement."""
-        snaps = self.shard_snapshots()
-        agg = ServiceStats()
-        for f in dataclasses.fields(ServiceStats):
-            vals = [getattr(s, f.name) for s in snaps]
-            if f.name.endswith("_us"):
-                nz = [v for v in vals if v > 0.0]
-                setattr(agg, f.name, sum(nz) / len(nz) if nz else 0.0)
-            else:
-                setattr(agg, f.name, sum(vals))
-        return agg
+        return ServiceStats.aggregate(self.shard_snapshots())
 
     def shard_snapshots(self) -> list[ServiceStats]:
         return [sh.snapshot() for sh in self.shards]

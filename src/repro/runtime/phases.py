@@ -186,6 +186,17 @@ def act_phase(cfg, env, agent, actor_params: Any, aslice: ActorSlice,
     return aslice, TransitionBlock(items, priorities), metrics
 
 
+def learner_batch_example(cfg, item: Any) -> tuple[Any, jax.Array]:
+    """Storage-shaped garbage ``(items, is_weights)`` at the learner batch
+    size — the canonical input for warming ``learn_phase`` jit caches before
+    a clock starts (the runner and the sample-plane benches share it so the
+    warm-up cannot drift from the real batch layout)."""
+    items = jax.tree.map(
+        lambda a: jnp.zeros((cfg.batch_size,) + jnp.shape(a),
+                            jnp.asarray(a).dtype), item)
+    return items, jnp.ones((cfg.batch_size,), jnp.float32)
+
+
 def replay_add(cfg, replay_state: replay_lib.ReplayState,
                block: TransitionBlock) -> replay_lib.ReplayState:
     """Insert a transition block into a replay shard (the replay side of

@@ -21,9 +21,19 @@ free:
   owner threads; actor blocks route round-robin and the learner batch is
   merged from per-shard sub-samples with globally-corrected IS weights
   (``repro.core.sampling``).
-* The learner thread loops: pop a merged prioritized batch → jitted
-  ``learn_phase`` → scatter the priority write-back to the owning shards →
-  publish fresh params through the versioned lock-free ``ParamStore``.
+* The learner thread loops: pop a prioritized batch from its
+  ``SampleSource`` → jitted ``learn_phase`` → write the fresh priorities
+  back through the source → publish params through the versioned lock-free
+  ``ParamStore``. The learner never touches fabric internals: the source is
+  ``LocalFabricSource`` over the in-process fabric by default,
+  ``RemoteFabricSource`` against another host's gateway with
+  ``learner_remote`` (this process then runs *only* the learner), and
+  either wrapped in ``StagedSource`` with ``sample_staging`` (device-staged
+  double buffering: the H2D put of batch k+1 overlaps the learn step on k).
+* With ``serve_sampling`` the roles flip: this process runs actors + fabric
+  + gateway and *no* local learner — a remote learner attaches through the
+  gateway's sample plane, and the run's learner clock is the stream of
+  ``PRIORITY_UPDATE`` write-backs it sends back.
 
 Threads overlap because XLA releases the GIL while kernels execute, so actor
 rollouts, learner updates, and replay maintenance genuinely run concurrently
@@ -50,6 +60,8 @@ from repro.runtime.fabric import ReplayFabric
 from repro.runtime.inference import InferenceServer, InferenceStats
 from repro.runtime.params import ParamStore
 from repro.runtime.service import ServiceStats
+from repro.runtime.sources import (LocalFabricSource, SampleSource,
+                                   SourceStats, StagedSource)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,10 +80,31 @@ class AsyncConfig:
                                      # stops at the first multiple >=
                                      # total_learner_steps)
     gateway_port: int = 0            # ReplayGateway TCP port (0: ephemeral)
+    gateway_host: str = "127.0.0.1"  # ReplayGateway bind address; the
+                                     # loopback default only reaches same-
+                                     # machine peers — bind "0.0.0.0" to
+                                     # serve actors/learners on other hosts
     ingest_max_inflight: int = 4     # un-acked blocks per remote actor (the
                                      # socket analogue of add_queue_depth)
     wire_quantize_obs: bool = False  # remote actors ship obs via the replay
                                      # codec (uint8 + affine, ~4x less wire)
+    sample_staging: bool = False     # wrap the learner's SampleSource in a
+                                     # StagedSource: a stager thread device-
+                                     # puts batch k+1 (pinned-host staging +
+                                     # async DMA on TPU) while the learner
+                                     # computes on batch k
+    learner_remote: str | None = None  # "host:port" of a serving gateway:
+                                     # run ONLY the learner here, sampling a
+                                     # remote fabric (requires
+                                     # actor_threads=0, actor_procs=0,
+                                     # replay_shards=1 — the fabric lives on
+                                     # the serving host)
+    serve_sampling: bool = False     # run actors + fabric + gateway and NO
+                                     # local learner; a remote learner
+                                     # drives the run through the gateway's
+                                     # sample plane (stops after
+                                     # total_learner_steps observed
+                                     # PRIORITY_UPDATEs)
     add_queue_depth: int = 4         # actor→replay backpressure bound (per shard)
     sample_queue_depth: int = 2      # replay→learner prefetch (double buffer)
     total_learner_steps: int = 200   # stop once the learner consumed this many
@@ -97,16 +130,20 @@ class RuntimeResult:
     shard_stats: list[ServiceStats]  # per-shard counters
     last_actor_metrics: dict | None  # last act_phase metrics (any actor)
     inference_stats: InferenceStats | None = None  # when inference_batching
-    gateway_stats: Any = None        # net.GatewayStats when actor_procs > 0
+    gateway_stats: Any = None        # net.GatewayStats when a gateway ran
+    source_stats: SourceStats | None = None  # learner-plane SampleSource
+                                     # counters (None in serve mode)
 
 
 def _actor_geometry(cfg, acfg: AsyncConfig):
     """Each actor (thread t in [0, actor_threads), process j at
     actor_threads + j) takes one ladder shard: actor a plays global lanes
     [a*lanes, (a+1)*lanes), so one exploration ladder spans threads and
-    remote processes alike."""
+    remote processes alike. A remote-learner process runs zero actors; its
+    ladder width is pinned to 1 (the acting geometry lives on the serving
+    host)."""
     return dataclasses.replace(
-        cfg, num_shards=acfg.actor_threads + acfg.actor_procs)
+        cfg, num_shards=max(acfg.actor_threads + acfg.actor_procs, 1))
 
 
 def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
@@ -120,10 +157,34 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     ``AsyncConfig.seed`` via ``phases.initial_actor_slice`` so that remote
     actor processes can reproduce their slice from ``(seed, actor_id)``
     alone."""
+    remote = acfg.learner_remote is not None
+    serving = acfg.serve_sampling
+    if remote and serving:
+        raise ValueError(
+            "AsyncConfig.learner_remote and serve_sampling are the two "
+            "sides of one topology: a process either samples a remote "
+            "fabric or serves its own — not both")
     if acfg.actor_procs < 0:
         raise ValueError("AsyncConfig.actor_procs must be >= 0, got "
                          f"{acfg.actor_procs}")
-    if acfg.actor_threads < (0 if acfg.actor_procs else 1):
+    if remote and (acfg.actor_threads or acfg.actor_procs
+                   or acfg.inference_batching or acfg.replay_shards != 1):
+        raise ValueError(
+            "AsyncConfig.learner_remote runs a learner-only process: the "
+            "actors, replay shards, and inference server live on the "
+            "serving host — set actor_threads=0, actor_procs=0, "
+            "replay_shards=1, inference_batching=False (got "
+            f"threads={acfg.actor_threads}, procs={acfg.actor_procs}, "
+            f"shards={acfg.replay_shards}, "
+            f"inference_batching={acfg.inference_batching})")
+    if serving and (acfg.sample_staging or acfg.learn_batches_per_step != 1):
+        raise ValueError(
+            "serve_sampling runs no local learner: sample_staging and "
+            "learn_batches_per_step configure the learner's consume path "
+            "and belong on the learner_remote host (got "
+            f"sample_staging={acfg.sample_staging}, "
+            f"learn_batches_per_step={acfg.learn_batches_per_step})")
+    if not remote and acfg.actor_threads < (0 if acfg.actor_procs else 1):
         raise ValueError(
             "AsyncConfig needs at least one actor: actor_threads >= 1, or "
             "actor_threads >= 0 with actor_procs >= 1 (got "
@@ -158,7 +219,7 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     item = phases.item_example(env, obs0, cfg.compress_obs)
 
     store = ParamStore(params)
-    fabric = ReplayFabric(
+    fabric = None if remote else ReplayFabric(
         cfg, item, num_shards=acfg.replay_shards,
         add_queue_depth=acfg.add_queue_depth,
         sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1)
@@ -167,29 +228,47 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                               coalesce_s=acfg.coalesce_s)
               if acfg.inference_batching else None)
     gateway = None
-    if acfg.actor_procs > 0:
+    if acfg.actor_procs > 0 or serving:
         # Deferred import: repro.net sits on top of this module's siblings.
         from repro.net import ReplayGateway
-        gateway = ReplayGateway(fabric, store, port=acfg.gateway_port,
+        gateway = ReplayGateway(fabric, store, host=acfg.gateway_host,
+                                port=acfg.gateway_port,
                                 add_timeout_s=acfg.add_poll_s)
+
+    # -- sample plane ------------------------------------------------------
+    # The learner consumes a SampleSource and never reaches into fabric
+    # internals; every topology is one source construction here.
+    source: SampleSource | None = None
+    if not serving:
+        if remote:
+            from repro.net.learner_client import (RemoteFabricSource,
+                                                  parse_hostport)
+            host, port = parse_hostport(acfg.learner_remote)
+            source = RemoteFabricSource(host, port,
+                                        poll_s=acfg.starve_timeout_s)
+        else:
+            source = LocalFabricSource(fabric)
+        if acfg.sample_staging:
+            source = StagedSource(source, poll_s=acfg.starve_timeout_s)
 
     act_fn = (jax.jit(lambda p, sl, sid: phases.act_phase(
                   cfg, env, agent, p, sl, sid))
               if server is None and acfg.actor_threads > 0 else None)
-    learn_fn = jax.jit(lambda lsl, items, w: phases.learn_phase(
-        cfg, agent, optimizer, lsl, items, w, None))
     learn_k = acfg.learn_batches_per_step
-    if learn_k > 1:
-        # Satellite of the prefetch queues: one jitted call consumes k
-        # double-buffered batches via lax.scan, amortizing dispatch overhead
-        # when per-batch compute is small.
-        def _learn_scan(lsl, items_k, w_k):
-            def body(l, xw):
-                l, prios, _ = phases.learn_phase(cfg, agent, optimizer, l,
-                                                 xw[0], xw[1], None)
-                return l, prios
-            return jax.lax.scan(body, lsl, (items_k, w_k))
-        learn_many_fn = jax.jit(_learn_scan)
+    if not serving:
+        learn_fn = jax.jit(lambda lsl, items, w: phases.learn_phase(
+            cfg, agent, optimizer, lsl, items, w, None))
+        if learn_k > 1:
+            # Satellite of the prefetch queues: one jitted call consumes k
+            # double-buffered batches via lax.scan, amortizing dispatch
+            # overhead when per-batch compute is small.
+            def _learn_scan(lsl, items_k, w_k):
+                def body(l, xw):
+                    l, prios, _ = phases.learn_phase(cfg, agent, optimizer,
+                                                     l, xw[0], xw[1], None)
+                    return l, prios
+                return jax.lax.scan(body, lsl, (items_k, w_k))
+            learn_many_fn = jax.jit(_learn_scan)
 
     # Warm the caches before the clock starts: one throwaway rollout (the
     # batched server wave when inference batching is on, the per-actor fn
@@ -204,30 +283,28 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             act_fn(params, slices[0], jnp.int32(0)))
         block_transitions = int(block0.priorities.shape[0])
     else:
-        # Pure actor-procs mode: acting never runs on this host, so don't
-        # compile a rollout just to measure it — the block size is the
-        # formula the error below spells out (remote transitions are
-        # counted from actual gateway traffic anyway).
+        # No acting on this host (pure actor-procs mode, or a remote-learner
+        # process): don't compile a rollout just to measure it — the block
+        # size is the formula the error below spells out (remote transitions
+        # are counted from actual gateway traffic anyway).
         block_transitions = (cfg.lanes_per_shard * cfg.window
                              * cfg.replicate_k)
-    if block_transitions > fabric.shard_capacity:
+    if fabric is not None and block_transitions > fabric.shard_capacity:
         # a block must fit inside one shard or the circular add would alias
         raise ValueError(
             f"transition block ({block_transitions}) larger than per-shard "
             f"replay capacity ({fabric.shard_capacity}): lower "
             f"AsyncConfig.replay_shards (= {acfg.replay_shards}) or shrink "
             f"lanes_per_shard * (rollout_len - n_step + 1) * replicate_k")
-    items_ex = jax.tree.map(
-        lambda a: jnp.zeros((cfg.batch_size,) + jnp.shape(a),
-                            jnp.asarray(a).dtype), item)
-    jax.block_until_ready(
-        learn_fn(lslice, items_ex, jnp.ones((cfg.batch_size,), jnp.float32)))
-    if learn_k > 1:
-        items_k_ex = jax.tree.map(
-            lambda a: jnp.zeros((learn_k,) + a.shape, a.dtype), items_ex)
-        jax.block_until_ready(learn_many_fn(
-            lslice, items_k_ex,
-            jnp.ones((learn_k, cfg.batch_size), jnp.float32)))
+    if not serving:
+        items_ex, w_ex = phases.learner_batch_example(cfg, item)
+        jax.block_until_ready(learn_fn(lslice, items_ex, w_ex))
+        if learn_k > 1:
+            items_k_ex = jax.tree.map(
+                lambda a: jnp.zeros((learn_k,) + a.shape, a.dtype), items_ex)
+            jax.block_until_ready(learn_many_fn(
+                lslice, items_k_ex,
+                jnp.ones((learn_k, cfg.batch_size), jnp.float32)))
     stop = threading.Event()
     counters = {"actor_transitions": 0, "actor_blocked": 0,
                 "learner_starved": 0, "rollouts": 0}
@@ -283,14 +360,14 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         steps = starved = 0
         pending: list = []  # gathered batches for one k-sized jitted call
         while steps < acfg.total_learner_steps and not stop.is_set():
-            batch = fabric.get_batch(timeout=acfg.starve_timeout_s)
+            batch = source.get_batch(timeout=acfg.starve_timeout_s)
             if batch is None:
                 starved += 1  # replay below min-fill or prefetch lagging
                 continue
             if learn_k == 1:
                 lsl, new_prios, _ = learn_fn(lsl, batch.items,
                                              batch.is_weights)
-                fabric.write_back(batch.indices, new_prios)
+                source.write_back(batch.indices, new_prios)
                 steps += 1
             else:
                 pending.append(batch)
@@ -304,15 +381,29 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 # the shard's eviction clock once, so k-batching leaves the
                 # paper's evict-every-N-steps pacing unchanged.
                 for i, b in enumerate(pending):
-                    fabric.write_back(b.indices, prios_k[i])
+                    source.write_back(b.indices, prios_k[i])
                 pending = []
                 steps += learn_k
             if steps % acfg.publish_every < learn_k:
-                store.publish(lsl.params)
+                version = store.publish(lsl.params)
+                # Remote transports also ship the snapshot upstream, so the
+                # actors feeding the (remote) fabric keep pulling
+                # learning-current params; local sources no-op.
+                source.publish_params(version, lsl.params)
         jax.block_until_ready(lsl.params)
         learner_box["lslice"] = lsl
         learner_box["steps"] = steps
         counters["learner_starved"] = starved
+
+    def serve_loop() -> None:
+        """Serve-sampling mode: no local learner. The learner clock is the
+        remote learner's PRIORITY_UPDATE stream observed at the gateway;
+        the run ends when it reaches ``total_learner_steps`` (or
+        ``max_seconds``/a worker death stops it first)."""
+        while not stop.wait(timeout=0.1):
+            if gateway.snapshot().priority_updates >= acfg.total_learner_steps:
+                break
+        learner_box["steps"] = gateway.snapshot().priority_updates
 
     # -- remote-ingest liveness -------------------------------------------
     # In-process workers propagate death through guarded()/_check_alive;
@@ -338,7 +429,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     def progress_loop() -> None:
         t_start = time.perf_counter()
         while not stop.wait(timeout=acfg.progress_every_s):
-            snap = fabric.snapshot()
+            snap = (fabric.snapshot() if fabric is not None
+                    else source.snapshot())
             dt = time.perf_counter() - t_start
             print(f"[async +{dt:6.1f}s] generated={snap.transitions_added} "
                   f"sampled_batches={snap.batches_sampled} "
@@ -349,7 +441,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                   f"params_v{store.version}")
 
     # -- drive ------------------------------------------------------------
-    fabric.start()
+    if fabric is not None:
+        fabric.start()
     if server is not None:
         server.start()
     procs: list = []
@@ -357,11 +450,20 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         from repro.net import RemoteActorSpec
         from repro.net.actor_client import run_remote_actor
         gateway.start()
+        if serving:
+            # The learner host needs this address to attach; ephemeral
+            # ports are only discoverable here.
+            print(f"[serve-sampling] replay gateway listening on "
+                  f"{gateway.host}:{gateway.port}")
         ctx = multiprocessing.get_context("spawn")  # never fork a jax parent
+        # A wildcard bind serves remote peers; local subprocesses dial
+        # loopback rather than the unroutable 0.0.0.0.
+        dial_host = ("127.0.0.1" if gateway.host in ("0.0.0.0", "::")
+                     else gateway.host)
         for j in range(acfg.actor_procs):
             spec = RemoteActorSpec(
                 cfg=cfg, env=env, agent=agent,
-                host=gateway.host, port=gateway.port,
+                host=dial_host, port=gateway.port,
                 actor_id=acfg.actor_threads + j, seed=acfg.seed,
                 max_inflight=acfg.ingest_max_inflight,
                 quantize_obs=acfg.wire_quantize_obs)
@@ -371,11 +473,16 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             procs.append(p)
         threading.Thread(target=gateway_monitor, args=(procs,),
                          daemon=True, name="gateway-monitor").start()
+    if source is not None:
+        # Connect/spin up the sample plane before the clock starts (the
+        # remote transport retries while the serving host finishes binding).
+        source.start()
     actors = [threading.Thread(target=guarded(actor_loop), args=(t,),
                                daemon=True, name=f"actor-{t}")
               for t in range(acfg.actor_threads)]
-    learner = threading.Thread(target=guarded(learner_loop), daemon=True,
-                               name="learner")
+    learner = threading.Thread(
+        target=guarded(serve_loop if serving else learner_loop),
+        daemon=True, name="serve-wait" if serving else "learner")
     progress = (threading.Thread(target=progress_loop, daemon=True,
                                  name="progress")
                 if acfg.progress_every_s else None)
@@ -427,18 +534,26 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             counters["actor_blocked"] += (gw_snap.add_retries
                                           + gw_snap.client_blocked)
             counters["rollouts"] += gw_snap.blocks_in
-    fabric.stop()
-    if fabric.error is not None:
-        # A shard may die after the learner's last call (e.g. during the
-        # final drain) — no later add/get_batch would surface it.
-        thread_errors.append(fabric.error)
+    if source is not None:
+        # Stop the sample plane before the fabric: a staged source's stager
+        # thread is still pulling prefetched batches, and the remote client
+        # wants to BYE before its socket dies under it.
+        source.stop()
+        if source.error is not None:
+            thread_errors.append(source.error)
+    if fabric is not None:
+        fabric.stop()
+        if fabric.error is not None:
+            # A shard may die after the learner's last call (e.g. during the
+            # final drain) — no later add/get_batch would surface it.
+            thread_errors.append(fabric.error)
     if thread_errors:
         raise RuntimeError(
             f"async runtime worker died after {dt:.1f}s") from thread_errors[0]
 
     steps = learner_box["steps"]
-    shard_stats = fabric.shard_snapshots()
-    agg = fabric.snapshot()
+    shard_stats = fabric.shard_snapshots() if fabric is not None else []
+    agg = fabric.snapshot() if fabric is not None else source.snapshot()
     stats = {
         "seconds": dt,
         "actor_transitions": float(counters["actor_transitions"]),
@@ -468,4 +583,5 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         last_actor_metrics=(
             {k: float(v) for k, v in m.items()} if m is not None else None),
         inference_stats=server.snapshot() if server is not None else None,
-        gateway_stats=gw_snap)
+        gateway_stats=gw_snap,
+        source_stats=source.stats if source is not None else None)

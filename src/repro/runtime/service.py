@@ -72,6 +72,23 @@ class ServiceStats:
     sample_us: float = 0.0         # microseconds (0.0 until first sample;
     writeback_us: float = 0.0      # fabric aggregation averages, not sums)
 
+    @classmethod
+    def aggregate(cls, snaps: "list[ServiceStats]") -> "ServiceStats":
+        """Combine per-shard snapshots into one view: counters sum, the
+        per-op latency EMAs (``*_us``) average over the shards that have a
+        measurement. Lives with the dataclass so every holder of shard
+        snapshots (the fabric, sample sources, benches) folds them the same
+        way."""
+        agg = cls()
+        for f in dataclasses.fields(cls):
+            vals = [getattr(s, f.name) for s in snaps]
+            if f.name.endswith("_us"):
+                nz = [v for v in vals if v > 0.0]
+                setattr(agg, f.name, sum(nz) / len(nz) if nz else 0.0)
+            else:
+                setattr(agg, f.name, sum(vals))
+        return agg
+
 
 class ShardFns(NamedTuple):
     """Jitted phase functions for one shard geometry. Built once per fabric

@@ -1,0 +1,287 @@
+"""Transport-agnostic learner sampling: the sample plane behind one protocol.
+
+The paper's architecture cuts acting from learning at the replay memory; the
+Gorila lineage cuts the learner↔replay link too (learners on different hosts
+than the replay shards). This module is that cut expressed as one interface:
+the learner loop consumes a :class:`SampleSource` — sample, consume, write
+priorities back, snapshot stats — and never touches fabric internals, so the
+same loop runs against
+
+* :class:`LocalFabricSource` — the in-process ``ReplayFabric`` (PR 1-4's
+  learner path, extracted from ``runtime/runner.py``);
+* ``repro.net.learner_client.RemoteFabricSource`` — a fabric on another
+  host, over the ``repro.net`` wire format (lives in ``repro.net`` because
+  the socket client sits above this layer);
+* :class:`StagedSource` — a decorator adding device-staged double
+  buffering to *any* of the above: a stager thread prefetches batch k+1
+  and starts its async host→device put while the learner computes on
+  batch k, so transport latency (socket round trip, frame decode, H2D
+  copy) is hidden behind learner compute. This is the replay
+  double-buffering item done once at the interface instead of per
+  call-site: on TPU ``jax.device_put`` of host (numpy) leaves stages
+  through pinned host memory with an async DMA; on CPU it degrades to a
+  (possibly zero-copy) alias, keeping numerics bit-identical everywhere.
+
+All sources yield ``repro.core.sampling.LearnerBatch`` — global
+``(shard, slot)`` keys, items, globally-corrected IS weights — and accept
+write-backs of any subset/order of those keys, which is what makes the
+implementations interchangeable (and property-testable against each other
+bit for bit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any
+
+import jax
+
+from repro.core.sampling import LearnerBatch
+from repro.runtime.fabric import ReplayFabric
+from repro.runtime.service import ServiceStats
+
+
+class SourceClosed(RuntimeError):
+    """The upstream end of a sample source went away (e.g. the serving
+    gateway sent STOP or closed the socket). Raised from ``get_batch`` so a
+    learner that still *needs* batches fails fast; a learner that already
+    finished simply never observes it — which is what makes the orderly
+    two-host shutdown race-free (either side may win the teardown race)."""
+
+
+@dataclasses.dataclass
+class SourceStats:
+    """Client-side (learner-plane) counters, one instance per source."""
+
+    batches: int = 0          # batches handed to the learner
+    writebacks: int = 0       # priority write-backs accepted
+    starved_polls: int = 0    # get_batch calls that returned None
+    param_pushes: int = 0     # params shipped upstream (remote transports)
+    staged: int = 0           # batches staged ahead (StagedSource)
+    stage_idle: int = 0       # stager polls that found the inner source dry
+
+
+class SampleSource:
+    """Where learner batches come from and where priorities go back.
+
+    The contract mirrors the fabric's learner side:
+
+    * ``get_batch(timeout)`` — next :class:`LearnerBatch`, or None while the
+      source is starved (replay below min-fill, prefetch lagging, transport
+      idle). Single-consumer: one learner thread.
+    * ``write_back(indices, priorities)`` — asynchronous priority write-back
+      for previously sampled keys; any subset/ordering is valid.
+    * ``publish_params(version, params)`` — hook for transports that must
+      ship fresh learner params upstream (a remote fabric's actors pull from
+      *its* param store); in-process sources no-op.
+    * ``snapshot()`` — ``ServiceStats`` view of the replay behind the
+      source; ``stats`` — this source's own ``SourceStats``.
+    * ``error`` — a worker/transport failure the consumer must surface.
+    """
+
+    stats: SourceStats
+
+    def start(self) -> "SampleSource":
+        return self
+
+    def stop(self) -> None:
+        pass
+
+    def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
+        raise NotImplementedError
+
+    def write_back(self, indices: Any, priorities: Any) -> None:
+        raise NotImplementedError
+
+    def publish_params(self, version: int, params: Any) -> None:
+        pass
+
+    def snapshot(self) -> ServiceStats:
+        raise NotImplementedError
+
+    @property
+    def error(self) -> BaseException | None:
+        return None
+
+
+class LocalFabricSource(SampleSource):
+    """The in-process fabric as a sample source.
+
+    This is the learner-thread code that used to live inline in
+    ``runtime/runner.py``, inverted: the runner no longer reaches into the
+    fabric; it holds a source, and the fabric is one implementation detail
+    behind it. Normalizes the single-shard fast path (a raw ``SampleBatch``
+    with shard-internal fields) to the ``LearnerBatch`` contract.
+
+    ``own=True`` makes ``start``/``stop`` manage the fabric lifecycle too —
+    for callers (tests, benches) where nothing else feeds the fabric; the
+    runner keeps ownership because its actors share the same fabric.
+    """
+
+    def __init__(self, fabric: ReplayFabric, *, own: bool = False):
+        self._fabric = fabric
+        self._own = own
+        self.stats = SourceStats()
+
+    def start(self) -> "LocalFabricSource":
+        if self._own:
+            self._fabric.start()
+        return self
+
+    def stop(self) -> None:
+        if self._own:
+            self._fabric.stop()
+
+    def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
+        b = self._fabric.get_batch(timeout=timeout)
+        if b is None:
+            self.stats.starved_polls += 1
+            return None
+        self.stats.batches += 1
+        return LearnerBatch(b.indices, b.items, b.is_weights)
+
+    def write_back(self, indices: Any, priorities: Any) -> None:
+        self._fabric.write_back(indices, priorities)
+        self.stats.writebacks += 1
+
+    def snapshot(self) -> ServiceStats:
+        return self._fabric.snapshot()
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._fabric.error
+
+
+class StagedSource(SampleSource):
+    """Device-staged double buffering for any inner :class:`SampleSource`.
+
+    A stager thread pulls batches from the inner source and immediately
+    issues an asynchronous ``jax.device_put`` toward the learner's device,
+    parking the in-flight batch in a bounded queue (depth 1 = classic double
+    buffering: one batch being consumed, one being staged). By the time the
+    learner pops batch k+1, its host→device copy has been overlapping the
+    learn step on batch k — and for remote sources the socket wait and frame
+    decode of k+1 overlapped too, since they happen on the stager thread.
+
+    ``device_put`` is value-preserving, so a staged source is bit-identical
+    to its inner source; ordering is preserved (single stager thread, FIFO
+    queue). Write-backs and param pushes pass straight through.
+    """
+
+    def __init__(self, inner: SampleSource, *, device: Any = None,
+                 depth: int = 1, poll_s: float = 0.02):
+        self._inner = inner
+        self._device = device if device is not None else jax.devices()[0]
+        # On a CPU "device" host and device memory are one address space and
+        # PJRT runs transfers on the same stream as compute — a device_put
+        # would not overlap anything, it would serialize a redundant copy
+        # behind the in-flight learn step (measured: milliseconds per batch
+        # of pure queueing). Staging then degrades to what it can genuinely
+        # overlap there: the inner source's fetch/decode. Real accelerators
+        # have a separate DMA stream, so the put is asynchronous and the
+        # H2D copy of batch k+1 truly overlaps the learn step on batch k.
+        self._passthrough = getattr(self._device, "platform", None) == "cpu"
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._poll_s = poll_s
+        self._stop_evt = threading.Event()
+        self._thread = threading.Thread(target=self._run_guarded, daemon=True,
+                                        name="sample-stager")
+        self._error: BaseException | None = None
+        self._peer_closed = False
+        self.stats = SourceStats()
+
+    def start(self) -> "StagedSource":
+        self._inner.start()
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        if self._thread.is_alive():
+            self._thread.join()
+        self._inner.stop()
+
+    def _run_guarded(self) -> None:
+        try:
+            self._run()
+        except SourceClosed:
+            # Upstream hung up: stop staging quietly. If the consumer still
+            # wants batches it hits the re-raise in get_batch once the
+            # queue drains; a consumer that already finished never notices
+            # — so the serving host may win the teardown race harmlessly.
+            self._peer_closed = True
+        except BaseException as e:  # noqa: BLE001
+            # A transport torn down *after* stop was requested is a normal
+            # part of shutdown, not a worker death — only failures during
+            # live operation surface.
+            if not self._stop_evt.is_set():
+                self._error = e
+
+    def _run(self) -> None:
+        while not self._stop_evt.is_set():
+            b = self._inner.get_batch(timeout=self._poll_s)
+            if b is None:
+                self.stats.stage_idle += 1
+                continue
+            staged = self._stage(b)
+            self.stats.staged += 1
+            while not self._stop_evt.is_set():
+                try:
+                    self._q.put(staged, timeout=self._poll_s)
+                    break
+                except queue.Full:
+                    continue
+
+    def _stage(self, b: LearnerBatch) -> LearnerBatch:
+        """Start the async device transfer for every host-resident leaf.
+
+        On TPU ``device_put`` of a numpy leaf stages through pinned host
+        memory with an async DMA — the H2D copy of batch k+1 then overlaps
+        the learn step on batch k; the learner's jit call joins the
+        transfer. Leaves already living on the target device (e.g. a local
+        fabric's prefetched batches) pass through untouched: re-putting
+        them is a redundant copy *and* a redundant dispatch thread touching
+        the device queue, which costs real throughput on small hosts.
+        """
+        if self._passthrough:
+            return b
+        def put(x: Any) -> Any:
+            if isinstance(x, jax.Array) and x.devices() == {self._device}:
+                return x
+            return jax.device_put(x, self._device)
+        return jax.tree.map(put, b)
+
+    def _check_alive(self) -> None:
+        if self.error is not None:
+            raise RuntimeError("sample stager died") from self.error
+
+    def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
+        self._check_alive()
+        try:
+            b = self._q.get(timeout=self._poll_s if timeout is None
+                            else timeout)
+        except queue.Empty:
+            if self._peer_closed:
+                raise SourceClosed(
+                    "upstream sample source closed and the staging queue "
+                    "is drained") from None
+            self.stats.starved_polls += 1
+            return None
+        self.stats.batches += 1
+        return b
+
+    def write_back(self, indices: Any, priorities: Any) -> None:
+        self._inner.write_back(indices, priorities)
+        self.stats.writebacks += 1
+
+    def publish_params(self, version: int, params: Any) -> None:
+        self._inner.publish_params(version, params)
+
+    def snapshot(self) -> ServiceStats:
+        return self._inner.snapshot()
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._error if self._error is not None else self._inner.error

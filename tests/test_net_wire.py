@@ -381,3 +381,197 @@ def test_gateway_block_lands_in_real_fabric_identically():
         jax.tree.map(lambda a, b: np.testing.assert_array_equal(
             np.asarray(a), np.asarray(b)), s_direct.storage, s_gw.storage)
         assert int(s_direct.size) == int(s_gw.size)
+
+
+# --- sample plane ------------------------------------------------------------
+
+def test_sample_batch_and_priority_update_round_trip():
+    """The sample-plane payloads ship the learner contract bit-identically:
+    int32 keys, fp32 weights/items, nested item dicts."""
+    rng = np.random.default_rng(3)
+    batch = {
+        "indices": rng.integers(0, 1 << 20, size=16).astype(np.int32),
+        "is_weights": rng.random(16).astype(np.float32),
+        "items": {"obs": rng.integers(0, 255, (16, 8)).astype(np.uint8),
+                  "nested": {"returns": rng.random(16).astype(np.float32)}},
+    }
+    from repro.core.sampling import LearnerBatch
+    lb = LearnerBatch(batch["indices"], batch["items"], batch["is_weights"])
+    out = wire.decode_sample_batch(wire.encode_sample_batch(lb))
+    np.testing.assert_array_equal(out.indices, batch["indices"])
+    assert out.indices.dtype == np.int32
+    np.testing.assert_array_equal(out.is_weights, batch["is_weights"])
+    assert out.is_weights.dtype == np.float32
+    assert_tree_equal(out.items, batch["items"])
+
+    idx2, prios2 = wire.decode_priority_update(
+        wire.encode_priority_update(batch["indices"],
+                                    batch["is_weights"] * 2.0))
+    np.testing.assert_array_equal(idx2, batch["indices"])
+    np.testing.assert_array_equal(prios2, batch["is_weights"] * 2.0)
+
+    with pytest.raises(wire.WireError, match="SAMPLE_BATCH"):
+        wire.decode_sample_batch(wire.encode_tree({"nope": np.zeros(3)}))
+    with pytest.raises(wire.WireError, match="PRIORITY_UPDATE"):
+        wire.decode_priority_update(wire.encode_tree({"nope": np.zeros(3)}))
+
+
+def test_gateway_serves_sample_plane_against_real_fabric():
+    """SAMPLE_REQUEST pops a real prioritized batch (empty reply while the
+    fabric is below min-fill), PRIORITY_UPDATE routes the write-back."""
+    preset = tiny_preset(min_fill=24, batch_size=8)
+    block = make_block(preset.apex, preset.env, preset.agent)
+    fabric = ReplayFabric(preset.apex, item_example(preset.env)).start()
+    gw = ReplayGateway(fabric, ParamStore({}), sample_timeout_s=0.05).start()
+    sock, reader = _client(gw)
+    try:
+        # below min-fill: starved (empty) reply
+        wire.send_frame(sock, wire.SAMPLE_REQUEST)
+        msg, payload = reader.read_frame(timeout=5.0)
+        assert msg == wire.SAMPLE_BATCH and len(payload) == 0
+        assert gw.snapshot().sample_starved == 1
+
+        assert fabric.add(block, timeout=5.0)
+        deadline = time.monotonic() + 10.0
+        batch = None
+        while batch is None:
+            assert time.monotonic() < deadline
+            wire.send_frame(sock, wire.SAMPLE_REQUEST)
+            msg, payload = reader.read_frame(timeout=5.0)
+            assert msg == wire.SAMPLE_BATCH
+            if len(payload):
+                batch = wire.decode_sample_batch(payload)
+        assert batch.indices.shape == (8,)
+        assert batch.is_weights.dtype == np.float32
+
+        wire.send_frame(sock, wire.PRIORITY_UPDATE, wire.encode_priority_update(
+            batch.indices, np.full((8,), 0.5, np.float32)))
+        _await(lambda: gw.snapshot().priority_updates == 1)
+        _await(lambda: fabric.snapshot().updates_applied == 1)
+    finally:
+        sock.close()
+        gw.stop()
+        fabric.stop()
+    assert gw.error is None and fabric.error is None
+
+
+# --- satellite: payload cap + version mismatch + param cache -----------------
+
+def test_frame_reader_rejects_oversized_length_prefix():
+    """A corrupt/hostile 4-byte length must be rejected before any
+    payload-sized allocation happens."""
+    a, b = socket.socketpair()
+    try:
+        reader = wire.FrameReader(b, max_payload=1024)
+        a.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION,
+                                    wire.ADD_BLOCK, 1 << 30))
+        with pytest.raises(wire.WireError, match="exceeds cap"):
+            reader.read_frame(timeout=1.0)
+        # and the sender-side guard fails fast with the same class
+        with pytest.raises(wire.WireError, match="exceeds cap"):
+            wire.frame(wire.ADD_BLOCK, b"x" * (wire.MAX_PAYLOAD + 1))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_version_mismatch_rejected_in_both_directions():
+    """A client speaking a newer protocol than the server is dropped by the
+    gateway (connection-contained); a server speaking a newer protocol than
+    the client raises at the client's reader. Either way the first frame is
+    where it dies."""
+    # client newer than server: gateway drops that one connection
+    gw = ReplayGateway(FakeFabric(), ParamStore({})).start()
+    newer, _ = _client(gw)
+    try:
+        newer.sendall(wire._HEADER.pack(wire.MAGIC,
+                                        wire.PROTOCOL_VERSION + 1,
+                                        wire.HELLO, 0))
+        _await(lambda: gw.snapshot().wire_errors == 1)
+        # gateway survives for well-versioned peers
+        ok, reader = _client(gw)
+        try:
+            preset = tiny_preset()
+            block = make_block(preset.apex, preset.env, preset.agent)
+            wire.send_frame(ok, wire.ADD_BLOCK, wire.encode_block(block))
+            msg, _ = reader.read_frame(timeout=5.0)
+            assert msg == wire.ADD_ACK
+        finally:
+            ok.close()
+    finally:
+        newer.close()
+        gw.stop()
+    assert gw.error is None
+
+    # server newer than client: the client's reader refuses the frame
+    srv, cli = socket.socketpair()
+    try:
+        reader = wire.FrameReader(cli)
+        srv.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION + 1,
+                                      wire.PARAM, 0))
+        with pytest.raises(wire.WireError, match="version"):
+            reader.read_frame(timeout=1.0)
+        # ... and an *older* server is equally rejected (no silent downgrade)
+        reader2 = wire.FrameReader(cli)
+        srv.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION - 1,
+                                      wire.PARAM, 0))
+        with pytest.raises(wire.WireError, match="version"):
+            reader2.read_frame(timeout=1.0)
+    finally:
+        srv.close()
+        cli.close()
+
+
+def test_gateway_param_cache_under_version_churn(monkeypatch):
+    """The per-version encoded-params cache must serve every version exactly
+    once per publication (K pulling actors share one encode) and never serve
+    stale bytes after a publish."""
+    calls = {"n": 0}
+    real = wire.encode_params
+
+    def counting(version, params):
+        calls["n"] += 1
+        return real(version, params)
+
+    monkeypatch.setattr(wire, "encode_params", counting)
+    store = ParamStore({"w": jnp.zeros((4,))})
+    gw = ReplayGateway(FakeFabric(), store).start()
+    sock_a, reader_a = _client(gw)
+    sock_b, reader_b = _client(gw)
+    try:
+        def pull(sock, reader, have):
+            wire.send_frame(sock, wire.PARAM_PULL,
+                            wire.encode_json({"have": have}))
+            msg, payload = reader.read_frame(timeout=5.0)
+            assert msg == wire.PARAM
+            return wire.decode_params(payload)
+
+        # two clients pull v0: one encode, identical bytes
+        v_a, got_a = pull(sock_a, reader_a, -1)
+        v_b, got_b = pull(sock_b, reader_b, -1)
+        assert (v_a, v_b) == (0, 0)
+        assert calls["n"] == 1
+
+        # churn: publish 3 versions back to back, then both clients pull —
+        # each gets the *latest*, which is encoded exactly once
+        for i in range(1, 4):
+            store.publish({"w": jnp.full((4,), float(i))})
+        v_a, got_a = pull(sock_a, reader_a, 0)
+        v_b, got_b = pull(sock_b, reader_b, 0)
+        assert (v_a, v_b) == (3, 3)
+        np.testing.assert_array_equal(got_a["w"],
+                                      np.full((4,), 3.0, np.float32))
+        assert calls["n"] == 2
+
+        # a client already at the tip gets PARAM_UNCHANGED (no encode)
+        wire.send_frame(sock_a, wire.PARAM_PULL,
+                        wire.encode_json({"have": 3}))
+        msg, payload = reader_a.read_frame(timeout=5.0)
+        assert msg == wire.PARAM_UNCHANGED
+        assert wire.decode_json(payload) == {"version": 3}
+        assert calls["n"] == 2
+    finally:
+        sock_a.close()
+        sock_b.close()
+        gw.stop()
+    assert gw.error is None

@@ -1,0 +1,98 @@
+"""Launcher flag validation: incoherent combinations fail up front with
+actionable messages, not deep inside the runtime."""
+
+import pytest
+
+from repro.launch import train
+
+
+def validate(argv):
+    ap = train.build_parser()
+    return train.validate_args(ap, ap.parse_args(argv))
+
+
+def assert_rejected(argv, needle, capsys):
+    with pytest.raises(SystemExit):
+        validate(argv)
+    err = capsys.readouterr().err
+    assert needle in err, err
+
+
+def test_defaults_resolve():
+    args = validate([])
+    assert args.actor_threads == 1  # default resolved
+
+
+def test_learner_remote_implies_learner_only_process():
+    args = validate(["--runtime", "async",
+                     "--learner-remote", "hostA:7777"])
+    assert args.actor_threads == 0
+
+
+def test_async_only_flags_rejected_under_sync(capsys):
+    assert_rejected(["--actor-procs", "2"], "--runtime async", capsys)
+    assert_rejected(["--sample-staging"], "--runtime async", capsys)
+    assert_rejected(["--learner-remote", "h:1"], "--runtime async", capsys)
+    assert_rejected(["--replay-shards", "2"], "--runtime async", capsys)
+
+
+def test_serve_sampling_conflicts(capsys):
+    assert_rejected(["--runtime", "async", "--serve-sampling",
+                     "--sample-staging"], "no local learner", capsys)
+    assert_rejected(["--runtime", "async", "--serve-sampling",
+                     "--learn-batches", "4"], "no local learner", capsys)
+    assert_rejected(["--gateway-port", "7777"], "--runtime async", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--gateway-port", "7777"], "learner-only", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:99999"],
+                    "65535", capsys)
+    args = validate(["--runtime", "async", "--serve-sampling",
+                     "--gateway-host", "0.0.0.0", "--gateway-port", "7777"])
+    assert args.gateway_host == "0.0.0.0"
+    # gateway flags with nothing that would run a gateway
+    assert_rejected(["--runtime", "async", "--gateway-port", "7777"],
+                    "no gateway will run", capsys)
+    assert_rejected(["--runtime", "async", "--gateway-host", "0.0.0.0"],
+                    "no gateway will run", capsys)
+    assert_rejected(["--runtime", "async", "--serve-sampling",
+                     "--gateway-port", "70000"], "[0, 65535]", capsys)
+
+
+def test_learner_remote_conflicts(capsys):
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--replay-shards", "2"], "learner-only", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--actor-threads", "2"], "learner-only", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--serve-sampling"], "two sides", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "nonsense"],
+                    "HOST:PORT", capsys)
+
+
+def test_no_experience_source_rejected(capsys):
+    assert_rejected(["--runtime", "async", "--actor-threads", "0"],
+                    "no experience source", capsys)
+
+
+def test_actor_procs_with_zero_threads_allowed():
+    args = validate(["--runtime", "async", "--actor-threads", "0",
+                     "--actor-procs", "2"])
+    assert args.actor_threads == 0 and args.actor_procs == 2
+
+
+def test_inference_batching_needs_threads(capsys):
+    assert_rejected(["--runtime", "async", "--actor-threads", "0",
+                     "--actor-procs", "1", "--inference-batching"],
+                    "nothing to batch", capsys)
+
+
+def test_llm_mode_conflicts(capsys):
+    assert_rejected(["--mode", "llm"], "--arch", capsys)
+    assert_rejected(["--mode", "llm", "--arch", "llama3.2-1b",
+                     "--runtime", "async"], "apex modes only", capsys)
+
+
+def test_scalar_bounds(capsys):
+    assert_rejected(["--iterations", "0"], "--iterations", capsys)
+    assert_rejected(["--runtime", "async", "--learn-batches", "0"],
+                    "--learn-batches", capsys)
