@@ -7,10 +7,12 @@ CPUs; the piece that must not become the new bottleneck is the actor→replay
 ingest path (cf. Furukawa & Matsutani, In-Network Experience Sampling).
 This bench measures that path end to end: N real actor processes (each
 CPU-pinned, one-actor-per-core) run jitted ``act_phase`` rollouts and
-stream ``ADD_BLOCK`` frames over TCP into a ``ReplayGateway`` →
-``ReplayFabric`` (2 shards), with sampling gated off (min-fill unreachable)
-so the measured quantity is pure ingest — serialize + socket + decode +
-shard-apply.
+stream ``ADD_BLOCK`` frames into a ``ReplayGateway`` → ``ReplayFabric``
+(2 shards), with sampling gated off (min-fill unreachable) so the measured
+quantity is pure ingest — serialize + transport + decode + shard-apply.
+The proc sweep runs over TCP (``--transport``); a separate single-proc leg
+repeats the measurement over the same-host shm ring transport and gates
+that the ring path sustains the same offered load (>= 0.95x tcp 1-proc).
 
 Methodology: *offered load*, not a machine race. Each actor paces itself
 to a fixed block rate (``--actor-rate``, chosen well below one core's act
@@ -33,6 +35,7 @@ Emitted rows (benchmarks/common.py CSV convention):
   remote_ingest/tps_procs{N}
   remote_ingest/speedup_2proc_vs_1proc
   remote_ingest/wire_mbps_procs{N}
+  remote_ingest/tps_procs1_shm
 
 JSON result set: ``benchmarks/artifacts/BENCH_remote_ingest.json`` plus the
 committed repo-root twin ``BENCH_remote_ingest.json`` (perf trajectory).
@@ -86,7 +89,8 @@ def bench_preset(lanes: int = 64, rollout: int = 32,
 def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
                 shards: int = 2, quantize_obs: bool = False,
                 warm_timeout: float = 300.0, windows: int = 3,
-                gap_s: float = 0.5, actor_rate: float = 5.0) -> dict:
+                gap_s: float = 0.5, actor_rate: float = 5.0,
+                transport: str = "tcp") -> dict:
     """One measurement: spawn ``procs`` actor processes, wait until each
     has landed ``warm_blocks`` blocks (compile + connect excluded from the
     clock), then read applied transitions/s from fabric snapshots over
@@ -116,7 +120,7 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
             spec = RemoteActorSpec(
                 cfg=cfg, env=preset.env, agent=preset.agent,
                 host=gateway.host, port=gateway.port, actor_id=j, seed=7,
-                quantize_obs=quantize_obs,
+                quantize_obs=quantize_obs, transport=transport,
                 # one actor = one CPU core (paper §3): unpinned, a single
                 # actor's XLA intra-op pool can swallow every core and the
                 # 1-proc baseline measures the machine, not an actor
@@ -172,6 +176,8 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
     if fabric.error is not None:
         raise RuntimeError("fabric died mid-bench") from fabric.error
     return {"mode": "ingest", "procs": procs, "actor_rate": actor_rate,
+            "transport": transport,
+            "shm_connections": gateway.snapshot().shm_connections,
             "seconds": seconds * len(window_tps),
             "window_tps": window_tps, "window_mbps": window_mbps,
             "tps": statistics.median(window_tps),
@@ -199,6 +205,13 @@ def main() -> int:
                          "lanes * (rollout - n_step + 1) transitions)")
     ap.add_argument("--quantize-obs", action="store_true",
                     help="actors ship obs via the replay codec")
+    ap.add_argument("--transport", choices=("tcp", "shm", "auto"),
+                    default="tcp",
+                    help="transport for the proc-sweep rows (tcp keeps the "
+                         "sweep measuring the socket path; the shm leg is "
+                         "measured separately)")
+    ap.add_argument("--skip-shm-leg", action="store_true",
+                    help="skip the single-proc shm comparison row")
     ap.add_argument("--json", default=None,
                     help="override the artifact path")
     args = ap.parse_args()
@@ -220,12 +233,30 @@ def main() -> int:
             row = ingest_rate(preset, n, seconds, shards=args.shards,
                               quantize_obs=args.quantize_obs,
                               windows=args.windows,
-                              actor_rate=args.actor_rate)
+                              actor_rate=args.actor_rate,
+                              transport=args.transport)
             rows.append(row)
             all_tps[n].extend(row["window_tps"])
             all_mbps[n].extend(row["window_mbps"])
             emit(f"remote_ingest/tps_procs{n}_round{r}",
                  row["seconds"] * 1e6, f"{row['tps']:.0f}")
+
+    # Same-host ring-arena leg: one paced actor over --transport shm. At
+    # offered load the applied rate should match the socket path's (the gate
+    # below); a shm-path backpressure or teardown bug shows up as applied <
+    # offered, exactly like a gateway stall would on the tcp rows.
+    shm_tps = None
+    if not args.skip_shm_leg:
+        row = ingest_rate(preset, 1, seconds, shards=args.shards,
+                          quantize_obs=args.quantize_obs,
+                          windows=args.windows,
+                          actor_rate=args.actor_rate, transport="shm")
+        rows.append(row)
+        shm_tps = row["tps"]
+        emit("remote_ingest/tps_procs1_shm", row["seconds"] * 1e6,
+             f"{shm_tps:.0f}")
+        emit("remote_ingest/wire_mbps_procs1_shm", row["seconds"] * 1e6,
+             f"{row['wire_mbps']:.1f}")
 
     medians = {n: statistics.median(all_tps[n]) for n in proc_counts}
     for n in proc_counts:
@@ -252,7 +283,9 @@ def main() -> int:
         "rounds": rounds,
         "actor_rate_blocks_per_s": args.actor_rate,
         "quantize_obs": args.quantize_obs,
+        "transport": args.transport,
         "speedup_2proc_vs_1proc": speedup,
+        "shm_tps_procs1": shm_tps,
         "median_tps": {str(n): medians[n] for n in proc_counts},
         "rows": rows,
     }, args.json)
@@ -265,6 +298,13 @@ def main() -> int:
             print(f"FAIL: 2 actor processes only {speedup:.2f}x the 1-proc "
                   f"ingest rate (need >= 1.3x)", file=sys.stderr)
             return 1
+        if shm_tps is not None and 1 in medians:
+            shm_ratio = shm_tps / max(medians[1], 1e-9)
+            if shm_ratio < 0.95:
+                print(f"FAIL: shm ingest only {shm_ratio:.2f}x the tcp "
+                      f"1-proc rate (need >= 0.95x — the ring path must "
+                      f"sustain the same offered load)", file=sys.stderr)
+                return 1
     return 0
 
 

@@ -9,10 +9,14 @@ transport lets the learn step hide:
 
 * ``local``         — ``LocalFabricSource``: pop a prefetched device batch.
 * ``remote``        — ``RemoteFabricSource`` over a loopback
-  ``ReplayGateway``: strict request/reply per batch, so the socket round
-  trip, frame encode/decode, and the batch's host→device move are *serial*
-  with learner compute. This is the honest cost of cutting the
-  learner↔replay boundary at the wire.
+  ``ReplayGateway`` with ``transport="tcp"``: strict request/reply per
+  batch, so the socket round trip, frame encode/decode, and the batch's
+  host→device move are *serial* with learner compute. This is the honest
+  cost of cutting the learner↔replay boundary at the wire.
+* ``remote_shm``    — the same request/reply protocol with
+  ``transport="shm"``: batches travel through the mmap'd ring arena
+  (one write into the ring, one copy out), only control frames touch the
+  socket. The same-host fast path ``--transport auto`` picks.
 * ``remote_staged`` — the same remote source wrapped in ``StagedSource``:
   a stager thread runs the request/decode and issues the async device put
   for batch k+1 while the learner computes on batch k, hiding the whole
@@ -34,15 +38,20 @@ informational ``*_real_learn`` rows, with write-backs of real |TD|
 priorities, so the full numeric path stays exercised.
 
 Acceptance gates (``--check``), on the occupancy rows:
-  * staged remote  >= 1.15x unstaged remote (double buffering must actually
-    hide transport latency at compute-bound geometry);
-  * unstaged remote >= 0.5x local (the wire boundary may tax the learner,
-    but not halve it).
+  * staged remote >= 0.98x local (double buffering must hide what remains
+    of the transport path — the historical 1.15x-vs-unstaged form of this
+    gate became unreachable once the unstaged tcp path itself cleared 0.9x
+    local, which caps the staged speedup at ~1.1x by construction);
+  * unstaged tcp remote >= 0.9x local (scatter-gather sendmsg + recv_into
+    leave the wire boundary a <=10% tax on the learner);
+  * unstaged shm remote >= 0.95x local (the ring arena makes same-host
+    remote nearly free).
 
 Emitted rows (benchmarks/common.py CSV convention):
   remote_sample/tps_<mode>
   remote_sample/speedup_staged_vs_unstaged_remote
   remote_sample/ratio_remote_vs_local
+  remote_sample/ratio_remote_shm_vs_local
 
 JSON result set: ``benchmarks/artifacts/BENCH_remote_sample.json`` plus the
 committed repo-root twin ``BENCH_remote_sample.json`` (perf trajectory).
@@ -72,7 +81,7 @@ from repro.runtime import (LocalFabricSource, ParamStore,  # noqa: E402
                            ReplayFabric, StagedSource, phases)
 from repro.runtime.phases import LearnerSlice, TransitionBlock  # noqa: E402
 
-MODES = ("local", "local_staged", "remote", "remote_staged")
+MODES = ("local", "local_staged", "remote", "remote_shm", "remote_staged")
 
 
 def bench_geometry(batch: int = 256, obs_dim: int = 384, hidden: int = 320):
@@ -169,9 +178,11 @@ def consume_rate(mode: str, cfg, agent, item, obs_dim: int, learn_fn,
     source = None
     try:
         if mode.startswith("remote"):
+            transport = "shm" if "shm" in mode else "tcp"
             gateway = ReplayGateway(fabric, ParamStore({}),
                                     sample_timeout_s=0.2).start()
-            source = RemoteFabricSource(gateway.host, gateway.port)
+            source = RemoteFabricSource(gateway.host, gateway.port,
+                                        transport=transport)
         else:
             source = LocalFabricSource(fabric)
         if mode.endswith("staged"):
@@ -223,8 +234,9 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: fewer steps/rounds")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 unless staged remote >= 1.15x unstaged "
-                         "remote and unstaged remote >= 0.5x local")
+                    help="exit 1 unless staged remote >= 0.98x local, tcp "
+                         "remote >= 0.9x local, and shm remote >= 0.95x "
+                         "local")
     ap.add_argument("--steps", type=int, default=None,
                     help="timed learner steps per measurement")
     ap.add_argument("--rounds", type=int, default=None,
@@ -285,10 +297,15 @@ def main() -> int:
     for m in MODES:
         emit(f"remote_sample/tps_{m}", 0.0, f"{medians[m]:.0f}")
     staged_speedup = medians["remote_staged"] / max(medians["remote"], 1e-9)
+    staged_ratio = medians["remote_staged"] / max(medians["local"], 1e-9)
     remote_ratio = medians["remote"] / max(medians["local"], 1e-9)
+    shm_ratio = medians["remote_shm"] / max(medians["local"], 1e-9)
     emit("remote_sample/speedup_staged_vs_unstaged_remote", 0.0,
          f"{staged_speedup:.2f}")
+    emit("remote_sample/ratio_remote_staged_vs_local", 0.0,
+         f"{staged_ratio:.2f}")
     emit("remote_sample/ratio_remote_vs_local", 0.0, f"{remote_ratio:.2f}")
+    emit("remote_sample/ratio_remote_shm_vs_local", 0.0, f"{shm_ratio:.2f}")
 
     write_artifact("remote_sample", {
         "bench": "remote_sample",
@@ -304,20 +321,28 @@ def main() -> int:
         "median_tps": medians,
         "real_learn_tps": real_tps,
         "speedup_staged_vs_unstaged_remote": staged_speedup,
+        "ratio_remote_staged_vs_local": staged_ratio,
         "ratio_remote_vs_local": remote_ratio,
+        "ratio_remote_shm_vs_local": shm_ratio,
         "rows": rows,
     }, args.json)
 
     if args.check:
         failed = False
-        if staged_speedup < 1.15:
-            print(f"FAIL: staged remote only {staged_speedup:.2f}x the "
-                  f"unstaged remote consume rate (need >= 1.15x)",
-                  file=sys.stderr)
+        if staged_ratio < 0.98:
+            print(f"FAIL: staged remote only {staged_ratio:.2f}x the local "
+                  f"consume rate (need >= 0.98x — staging must hide the "
+                  f"residual transport path)", file=sys.stderr)
             failed = True
-        if remote_ratio < 0.5:
-            print(f"FAIL: loopback remote learner only {remote_ratio:.2f}x "
-                  f"the local consume rate (need >= 0.5x)", file=sys.stderr)
+        if remote_ratio < 0.9:
+            print(f"FAIL: loopback tcp remote learner only "
+                  f"{remote_ratio:.2f}x the local consume rate "
+                  f"(need >= 0.9x)", file=sys.stderr)
+            failed = True
+        if shm_ratio < 0.95:
+            print(f"FAIL: same-host shm remote learner only "
+                  f"{shm_ratio:.2f}x the local consume rate "
+                  f"(need >= 0.95x)", file=sys.stderr)
             failed = True
         if failed:
             return 1

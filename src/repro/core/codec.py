@@ -25,11 +25,19 @@ class EncodedObs(NamedTuple):
     offset: jax.Array    # (..., 1) f32 per-observation min
 
 
-def encode(obs: jax.Array, feature_dims: int = 1) -> EncodedObs:
+def encode(obs, feature_dims: int = 1) -> EncodedObs:
     """Quantize trailing ``feature_dims`` axes to uint8 per observation.
+
+    One entry point for both halves of the system: a numpy input (the wire
+    codec quantizing on an actor host) runs the host-side numpy math; any
+    jax value — including tracers inside jit — runs the device version.
+    Both produce the same bytes (property-tested in ``tests/test_net_wire``),
+    so callers never pick a backend.
 
     uint8 inputs pass through losslessly (scale=1, offset=0).
     """
+    if isinstance(obs, np.ndarray):
+        return _encode_host(obs, feature_dims)
     if obs.dtype == jnp.uint8:
         lead = obs.shape[:obs.ndim - feature_dims] + (1,) * feature_dims
         return EncodedObs(obs, jnp.ones(lead, jnp.float32),
@@ -44,12 +52,16 @@ def encode(obs: jax.Array, feature_dims: int = 1) -> EncodedObs:
 
 
 def decode(enc: EncodedObs, dtype=jnp.float32) -> jax.Array:
-    """Inverse of :func:`encode` (exact for uint8 passthrough)."""
+    """Inverse of :func:`encode` (exact for uint8 passthrough). Dispatches
+    like :func:`encode`: numpy-leaf structs stay in numpy, jax values
+    (including tracers) run the device ops."""
+    if isinstance(enc.data, np.ndarray):
+        return _decode_host(enc, dtype)
     return (enc.data.astype(jnp.float32) * enc.scale + enc.offset).astype(dtype)
 
 
-def encode_np(obs: np.ndarray, feature_dims: int = 1) -> EncodedObs:
-    """Host-side (numpy) twin of :func:`encode`, same affine/rounding math.
+def _encode_host(obs: np.ndarray, feature_dims: int = 1) -> EncodedObs:
+    """Host-side (numpy) twin of the device path, same affine/rounding math.
 
     The wire codec (``repro.net.wire``) quantizes observations on the actor
     host before serialization; running the device version there would cost a
@@ -72,10 +84,15 @@ def encode_np(obs: np.ndarray, feature_dims: int = 1) -> EncodedObs:
     return EncodedObs(q, scale.astype(np.float32), lo.astype(np.float32))
 
 
-def decode_np(enc: EncodedObs, dtype=np.float32) -> np.ndarray:
-    """Host-side twin of :func:`decode` (exact for uint8 passthrough)."""
+def _decode_host(enc: EncodedObs, dtype=np.float32) -> np.ndarray:
     return (np.asarray(enc.data, np.float32) * np.asarray(enc.scale)
             + np.asarray(enc.offset)).astype(dtype)
+
+
+# Former explicit-backend entry points, kept as aliases: ``encode``/``decode``
+# now dispatch on the input type, so callers no longer choose a backend.
+encode_np = _encode_host
+decode_np = _decode_host
 
 
 def storage_bytes(enc: EncodedObs) -> int:

@@ -68,7 +68,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    sample_staging: bool = False,
                    learner_remote: str | None = None,
                    serve_sampling: bool = False, gateway_port: int = 0,
-                   gateway_host: str = "127.0.0.1"):
+                   gateway_host: str = "127.0.0.1", transport: str = "auto",
+                   wire_quantize_prios: bool = False,
+                   wire_quantize_params: bool = False):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
@@ -89,6 +91,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                        serve_sampling=serve_sampling,
                        gateway_port=gateway_port,
                        gateway_host=gateway_host,
+                       transport=transport,
+                       wire_quantize_prios=wire_quantize_prios,
+                       wire_quantize_params=wire_quantize_params,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -108,6 +113,7 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
     if res.gateway_stats is not None:
         g = res.gateway_stats
         print(f"  gateway: {int(s['actor_procs'])} actor procs, "
+              f"{g.connections} conns ({g.shm_connections} shm), "
               f"{g.blocks_in} blocks / {g.transitions_in} transitions in, "
               f"{g.param_sends} param snapshots out, "
               f"{g.bytes_in / 1e6:.1f} MB ingested")
@@ -226,6 +232,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="replay gateway bind address; the loopback "
                          "default only reaches same-machine peers — pass "
                          "0.0.0.0 to serve actors/learners on other hosts")
+    ap.add_argument("--transport", choices=("tcp", "shm", "auto"),
+                    default="auto",
+                    help="byte path for remote hops (--actor-procs and "
+                         "--learner-remote): tcp = sockets, shm = same-host "
+                         "shared-memory rings (strict), auto = shm when the "
+                         "peer is loopback-local, else tcp")
+    ap.add_argument("--wire-quantize-prios", action="store_true",
+                    help="the remote learner ships priority write-backs "
+                         "quantized (uint8 + affine; lossy) — requires "
+                         "--learner-remote")
+    ap.add_argument("--wire-quantize-params", action="store_true",
+                    help="the remote learner ships param snapshots "
+                         "quantized (uint8 + affine per tensor; lossy) — "
+                         "requires --learner-remote")
     return ap
 
 
@@ -247,6 +267,9 @@ def validate_args(ap: argparse.ArgumentParser,
                   ("--serve-sampling", args.serve_sampling),
                   ("--gateway-port", args.gateway_port != 0),
                   ("--gateway-host", args.gateway_host != "127.0.0.1"),
+                  ("--transport", args.transport != "auto"),
+                  ("--wire-quantize-prios", args.wire_quantize_prios),
+                  ("--wire-quantize-params", args.wire_quantize_params),
                   ("--actor-threads", args.actor_threads is not None)]
     if not is_async:
         used = [name for name, on in async_only if on]
@@ -317,6 +340,22 @@ def validate_args(ap: argparse.ArgumentParser,
                  "no gateway will run — add --serve-sampling (serve a "
                  "remote learner) or --actor-procs N (serve actor "
                  "processes)")
+    if (args.transport != "auto" and args.actor_procs == 0
+            and args.learner_remote is None and not args.serve_sampling):
+        ap.error("--transport configures remote hops, but none exist — add "
+                 "--actor-procs N, --learner-remote HOST:PORT, or "
+                 "--serve-sampling (in-process actor threads and the local "
+                 "fabric never touch a transport)")
+    if ((args.wire_quantize_prios or args.wire_quantize_params)
+            and args.learner_remote is None):
+        flags = [n for n, on in
+                 [("--wire-quantize-prios", args.wire_quantize_prios),
+                  ("--wire-quantize-params", args.wire_quantize_params)]
+                 if on]
+        ap.error(f"{', '.join(flags)} quantize(s) the remote learner's "
+                 "upstream frames and require(s) --learner-remote (a local "
+                 "learner writes priorities/params back in-process, no "
+                 "wire to quantize)")
 
     if args.actor_threads < 0:
         ap.error(f"--actor-threads must be >= 0, got {args.actor_threads}")
@@ -352,7 +391,9 @@ def main():
                            args.learn_batches, args.wire_quantize_obs,
                            args.sample_staging, args.learner_remote,
                            args.serve_sampling, args.gateway_port,
-                           args.gateway_host)
+                           args.gateway_host, args.transport,
+                           args.wire_quantize_prios,
+                           args.wire_quantize_params)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

@@ -1,39 +1,58 @@
 """Multi-host actor ingest (paper §3: distributed acting, after Gorila).
 
 * ``wire``         — versioned length-prefixed frame codec: transition
-  blocks + priorities (optionally obs-quantized via ``repro.core.codec``)
-  and ``ParamStore`` snapshots as deterministic array-trees.
-* ``gateway``      — ``ReplayGateway``: TCP server thread routing decoded
+  blocks + priorities (optionally quantized via ``repro.core.codec``)
+  and ``ParamStore`` snapshots as deterministic array-trees; every encoder
+  has a scatter-gather ``*_iov`` twin emitting buffer views instead of one
+  concatenated payload (bitwise-identical on the wire).
+* ``transport``    — the byte-moving plane: ``Transport``/``Listener``
+  with two implementations behind one API — ``TcpTransport`` (classic
+  socket, iovec ``sendmsg`` writes) and ``ShmRingTransport`` (same-host
+  shared-memory ring arena: data frames are written once into the mmap'd
+  arena, ACKs/control stay on a small socket control plane). Clients dial
+  ``connect(host, port, kind="tcp"|"shm"|"auto")``; auto upgrades to shm
+  when the peer is loopback-local and falls back to tcp otherwise.
+* ``gateway``      — ``ReplayGateway``: server thread routing decoded
   blocks into ``ReplayFabric.add`` (same global ``(shard, slot)`` keys and
   backpressure as the in-process queue) and serving param snapshots.
 * ``actor_client`` — ``RemoteActorLoop``: actor *process* entry point that
-  streams jitted ``act_phase`` rollouts over the socket with a bounded
+  streams jitted ``act_phase`` rollouts over its transport with a bounded
   in-flight window; ``python -m repro.net.actor_client`` runs it against a
   remote gateway (the multi-host path), ``launch/train.py --actor-procs N``
   spawns local subprocesses (the single-machine proof).
 * ``learner_client`` — ``RemoteFabricSource``: the *sample plane* — a
   ``repro.runtime.sources.SampleSource`` speaking ``SAMPLE_REQUEST`` /
-  ``SAMPLE_BATCH`` / ``PRIORITY_UPDATE`` / ``PARAM_PUSH`` against the same
-  gateway/fabric the actors feed, so a learner on another host samples,
-  learns, and writes priorities back through the global (shard, slot) keys
-  unchanged (``launch/train.py --learner-remote HOST:PORT``).
+  ``SAMPLE_BATCH`` / ``PRIORITY_UPDATE`` (coalesced, one frame per sample
+  round) / ``PARAM_PUSH`` against the same gateway/fabric the actors feed,
+  so a learner on another host samples, learns, and writes priorities back
+  through the global (shard, slot) keys unchanged
+  (``launch/train.py --learner-remote HOST:PORT``).
 """
 
 from repro.net.actor_client import (RemoteActorLoop, RemoteActorSpec,
                                     initial_slice, run_remote_actor)
 from repro.net.gateway import GatewayStats, ReplayGateway
 from repro.net.learner_client import RemoteFabricSource, parse_hostport
+from repro.net.transport import (Listener, ShmRingTransport, ShmUnavailable,
+                                 TcpTransport, Transport, TransportClosed,
+                                 connect, is_local_host, listen, resolve_kind)
 from repro.net.wire import (FrameReader, WireError, decode_block,
                             decode_params, decode_priority_update,
                             decode_sample_batch, decode_tree, encode_block,
-                            encode_params, encode_priority_update,
-                            encode_sample_batch, encode_tree)
+                            encode_block_iov, encode_params,
+                            encode_params_iov, encode_priority_update,
+                            encode_sample_batch, encode_sample_batch_iov,
+                            encode_tree, encode_tree_iov)
 
 __all__ = [
-    "FrameReader", "GatewayStats", "RemoteActorLoop", "RemoteActorSpec",
-    "RemoteFabricSource", "ReplayGateway", "WireError", "decode_block",
+    "FrameReader", "GatewayStats", "Listener", "RemoteActorLoop",
+    "RemoteActorSpec", "RemoteFabricSource", "ReplayGateway",
+    "ShmRingTransport", "ShmUnavailable", "TcpTransport", "Transport",
+    "TransportClosed", "WireError", "connect", "decode_block",
     "decode_params", "decode_priority_update", "decode_sample_batch",
-    "decode_tree", "encode_block", "encode_params",
-    "encode_priority_update", "encode_sample_batch", "encode_tree",
-    "initial_slice", "parse_hostport", "run_remote_actor",
+    "decode_tree", "encode_block", "encode_block_iov", "encode_params",
+    "encode_params_iov", "encode_priority_update", "encode_sample_batch",
+    "encode_sample_batch_iov", "encode_tree", "encode_tree_iov",
+    "initial_slice", "is_local_host", "listen", "parse_hostport",
+    "resolve_kind", "run_remote_actor",
 ]

@@ -4,20 +4,27 @@ This is the paper's actor binary (Alg. 1) as a separate OS process — the
 piece that makes "hundreds of actors on hundreds of machines" real rather
 than thread-simulated. Each process:
 
-1. connects to the gateway and handshakes (``HELLO``, protocol-versioned);
+1. connects to the gateway (``--transport tcp|shm|auto``: same-host
+   processes upgrade to a shared-memory ring, cross-host stays TCP) and
+   handshakes (``HELLO``, protocol-versioned);
 2. pulls the initial parameter snapshot (Alg. 1 l.1);
 3. loops: jitted ``act_phase`` rollout → serialize the ``TransitionBlock``
    (optionally quantizing float observations with the replay codec) →
    ``ADD_BLOCK`` → every ``param_sync_period`` rollouts, ``PARAM_PULL``
    (Alg. 1 l.2, periodic refresh);
-4. exits on ``STOP`` from the gateway (learner finished) or a closed
-   socket, reporting its client-side counters in a final ``BYE``.
+4. exits on ``STOP`` from the gateway (learner finished) or a torn-down
+   transport, reporting its client-side counters in a final ``BYE``.
 
 Backpressure mirrors the in-process path: at most ``max_inflight``
 un-acknowledged blocks may be on the wire. The gateway only ACKs a block
 *after* it lands in the fabric's bounded shard queue, so a saturated replay
 holds ACKs back and the remote actor blocks exactly where a local actor
 thread would block on ``fabric.add`` (waits counted like ``actor_blocked``).
+
+Blocks ship scatter-gather: ``encode_block_iov`` hands the transport a list
+of buffer views (tensor leaves are not concatenated host-side), so the TCP
+path writes them with one ``sendmsg`` and the shm path copies each leaf
+exactly once, straight into the ring arena.
 
 Numerics: the actor's rng/epsilon geometry is derived from ``(seed,
 actor_id)`` by the same fold-in scheme ``runtime/runner.py`` uses for actor
@@ -36,7 +43,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import socket
 import sys
 import time
 from typing import Any
@@ -44,6 +50,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.net import transport as transport_lib
 from repro.net import wire
 from repro.runtime import phases
 
@@ -61,6 +68,8 @@ class RemoteActorSpec:
     seed: int = 0                 # runner's AsyncConfig.seed
     max_inflight: int = 4         # un-acked ADD_BLOCKs allowed on the wire
     quantize_obs: bool = False    # wire-quantize float obs (replay codec)
+    transport: str = "auto"       # tcp | shm | auto (shm iff host is local)
+    ring_bytes: int = transport_lib.DEFAULT_RING_BYTES
     param_sync_period: int | None = None  # default: cfg.param_sync_period
     max_rollouts: int | None = None       # None: run until STOP / EOF
     pin_cpu: int | None = None    # pin this process (and its XLA threads)
@@ -90,7 +99,7 @@ initial_slice = phases.initial_actor_slice
 
 
 class RemoteActorLoop:
-    """One remote actor: socket client + jitted rollout loop."""
+    """One remote actor: transport client + jitted rollout loop."""
 
     def __init__(self, spec: RemoteActorSpec):
         self.spec = spec
@@ -106,7 +115,7 @@ class RemoteActorLoop:
         self._in_flight = 0
         self.stats = {"rollouts": 0, "pushed": 0, "blocked": 0,
                       "transitions": 0, "param_pulls": 0, "bytes_out": 0,
-                      "param_version": -1}
+                      "param_version": -1, "transport": ""}
 
     # -- frame plumbing -----------------------------------------------------
 
@@ -127,44 +136,41 @@ class RemoteActorLoop:
         else:
             raise wire.WireError(f"unexpected message {msg_type} from gateway")
 
-    def _pump(self, reader: wire.FrameReader, timeout: float) -> bool:
+    def _pump(self, conn: transport_lib.Transport, timeout: float) -> bool:
         """Process at most one pending frame; False on timeout."""
-        got = reader.read_frame(timeout=timeout)
+        got = conn.recv(timeout=timeout)
         if got is None:
             return False
         self._handle(*got)
         return True
 
-    def _pull_params(self, sock: socket.socket, reader: wire.FrameReader,
-                     ) -> None:
+    def _pull_params(self, conn: transport_lib.Transport) -> None:
         """Request a snapshot newer than ours and wait for the reply
         (ACKs interleaved on the stream are processed while waiting)."""
         replies_before = self._pull_replies
-        self.stats["bytes_out"] += wire.send_frame(
-            sock, wire.PARAM_PULL,
-            wire.encode_json({"have": self._param_version}))
+        conn.send(wire.PARAM_PULL,
+                  wire.encode_json({"have": self._param_version}))
         self.stats["param_pulls"] += 1
         deadline = time.monotonic() + self.spec.param_timeout_s
         while self._pull_replies == replies_before:
             if time.monotonic() > deadline:
                 raise TimeoutError("gateway never answered PARAM_PULL")
-            self._pump(reader, timeout=self.spec.poll_s)
+            self._pump(conn, timeout=self.spec.poll_s)
 
     # -- main loop ----------------------------------------------------------
 
     def run(self) -> dict:
         """Act until the gateway stops us; returns client-side counters."""
         spec = self.spec
-        sock = socket.create_connection((spec.host, spec.port),
-                                        timeout=spec.connect_timeout_s)
-        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        reader = wire.FrameReader(sock)
+        conn = transport_lib.connect(
+            spec.host, spec.port, spec.transport,
+            timeout=spec.connect_timeout_s, ring_bytes=spec.ring_bytes)
+        self.stats["transport"] = conn.kind
         try:
-            self.stats["bytes_out"] += wire.send_frame(
-                sock, wire.HELLO, wire.encode_json(
-                    {"actor_id": spec.actor_id,
-                     "protocol": wire.PROTOCOL_VERSION}))
-            self._pull_params(sock, reader)
+            conn.send(wire.HELLO, wire.encode_json(
+                {"actor_id": spec.actor_id,
+                 "protocol": wire.PROTOCOL_VERSION}))
+            self._pull_params(conn)
 
             sl = initial_slice(spec.cfg, spec.env, spec.seed, spec.actor_id)
             sid = jnp.int32(spec.actor_id)
@@ -173,10 +179,10 @@ class RemoteActorLoop:
                    or self.stats["rollouts"] < spec.max_rollouts):
                 if (self.stats["rollouts"] > 0
                         and self.stats["rollouts"] % self._sync_period == 0):
-                    self._pull_params(sock, reader)
+                    self._pull_params(conn)
                 sl, block, _metrics = self._act(self._params, sl, sid)
-                payload = wire.encode_block(block,
-                                            quantize_obs=spec.quantize_obs)
+                payload = wire.encode_block_iov(
+                    block, quantize_obs=spec.quantize_obs)
                 if spec.target_blocks_per_s:
                     # Pace to the offered rate (no catch-up bursts: the
                     # target is a strict upper bound), draining ACKs while
@@ -189,34 +195,31 @@ class RemoteActorLoop:
                         remaining = next_send - time.monotonic()
                         if remaining <= 0:
                             break
-                        self._pump(reader, timeout=remaining)
+                        self._pump(conn, timeout=remaining)
                 # Bounded in-flight window: wait for ACKs when full — this
                 # is where gateway/fabric backpressure reaches the actor.
                 while self._in_flight >= spec.max_inflight:
-                    if not self._pump(reader, timeout=spec.poll_s):
+                    if not self._pump(conn, timeout=spec.poll_s):
                         self.stats["blocked"] += 1
-                self.stats["bytes_out"] += wire.send_frame(
-                    sock, wire.ADD_BLOCK, payload)
+                conn.send(wire.ADD_BLOCK, payload)
                 self._in_flight += 1
                 self.stats["rollouts"] += 1
                 self.stats["pushed"] += 1
                 self.stats["transitions"] += int(block.priorities.shape[0])
                 # opportunistically drain any ACKs already on the stream
-                while self._pump(reader, timeout=0.001):
+                while self._pump(conn, timeout=0.001):
                     pass
-        except (_Stop, EOFError):
+        except (_Stop, EOFError, transport_lib.TransportClosed):
             pass
         finally:
             try:
-                wire.send_frame(sock, wire.BYE, wire.encode_json(
+                conn.send(wire.BYE, wire.encode_json(
                     {"rollouts": self.stats["rollouts"],
                      "blocked": self.stats["blocked"]}))
-            except OSError:
+            except (OSError, wire.WireError):
                 pass
-            try:
-                sock.close()
-            except OSError:
-                pass
+            self.stats["bytes_out"] = conn.bytes_out
+            conn.close()
         return self.stats
 
 
@@ -231,7 +234,8 @@ def run_remote_actor(spec: RemoteActorSpec) -> dict:
         os.sched_setaffinity(0, {spec.pin_cpu % os.cpu_count()})
     try:
         return RemoteActorLoop(spec).run()
-    except (ConnectionError, TimeoutError, OSError) as e:
+    except (ConnectionError, TimeoutError, OSError,
+            transport_lib.ShmUnavailable) as e:
         # Observable but non-fatal: the runtime tolerates individual actor
         # losses (paper §3 — actors are expendable) and its gateway
         # monitor stops the run only when no experience source remains.
@@ -255,6 +259,11 @@ def main() -> None:
     ap.add_argument("--max-inflight", type=int, default=4)
     ap.add_argument("--quantize-obs", action="store_true",
                     help="wire-quantize float observations (replay codec)")
+    ap.add_argument("--transport", choices=("tcp", "shm", "auto"),
+                    default="auto",
+                    help="byte path to the gateway: shm = same-host ring "
+                         "(requires a local gateway), auto = shm when the "
+                         "host is loopback-local, else tcp")
     ap.add_argument("--max-rollouts", type=int, default=None)
     ap.add_argument("--pin-cpu", type=int, default=None,
                     help="pin this actor process to one CPU core "
@@ -271,7 +280,8 @@ def main() -> None:
         cfg=cfg, env=preset.env, agent=preset.agent, host=args.host,
         port=args.port, actor_id=args.actor_id, seed=args.seed,
         max_inflight=args.max_inflight, quantize_obs=args.quantize_obs,
-        max_rollouts=args.max_rollouts, pin_cpu=args.pin_cpu)
+        transport=args.transport, max_rollouts=args.max_rollouts,
+        pin_cpu=args.pin_cpu)
     stats = run_remote_actor(spec)
     print(f"actor {args.actor_id} done: {stats}")
 

@@ -1,4 +1,5 @@
-"""Replay gateway: TCP ingest server in front of the replay fabric.
+"""Replay gateway: the serving side of the transport plane, in front of the
+replay fabric.
 
 This is the machine boundary of Fig. 1: remote actor processes (same host or
 across the network) stream ``ADD_BLOCK`` frames in, and the gateway routes
@@ -9,11 +10,16 @@ same backpressure semantics).
 
 Topology::
 
-    remote actor proc 0 ──TCP──┐
-    remote actor proc 1 ──TCP──┤   ReplayGateway          ReplayFabric
-           ...                 ├── (accept thread +  ───► add / round-robin
-    remote actor proc K ──TCP──┘    handler thread          shard routing
-                                    per connection)
+    remote actor proc 0 ──tcp/shm──┐
+    remote actor proc 1 ──tcp/shm──┤   ReplayGateway        ReplayFabric
+           ...                     ├── (accept thread + ──► add / round-robin
+    remote actor proc K ──tcp/shm──┘    handler thread        shard routing
+                                        per connection)
+
+Connections arrive through ``repro.net.transport.Listener``: every client
+starts on TCP and may upgrade itself to a shared-memory ring
+(``ShmRingTransport``) in-band — the handler below never knows which bytes
+path it is on, it just calls ``conn.recv()``/``conn.send()``.
 
 * Each connection gets its own handler thread: frame decode (a memcpy-level
   numpy view) runs concurrently across actors, and the device transfer
@@ -30,11 +36,13 @@ Topology::
   rollouts (Alg. 1 l.2), so the period is honored client-side and the
   gateway never pushes unsolicited traffic.
 * **Sample plane (remote learners).** The same fabric's *learner* side is
-  served over the same socket discipline: ``SAMPLE_REQUEST`` pops one
+  served over the same connection discipline: ``SAMPLE_REQUEST`` pops one
   prioritized batch (empty ``SAMPLE_BATCH`` reply while starved — the
   remote analogue of ``get_batch`` returning None), ``PRIORITY_UPDATE``
-  scatters write-backs by the global (shard, slot) keys the batch carried,
-  and ``PARAM_PUSH`` publishes the remote learner's fresh params into this
+  scatters write-backs by the global (shard, slot) keys the batch carried
+  (one frame may coalesce several write-back rounds; the ``batches`` leaf
+  advances the ``priority_updates`` learner clock by that many), and
+  ``PARAM_PUSH`` publishes the remote learner's fresh params into this
   host's ``ParamStore`` so the actors feeding the fabric keep pulling
   learning-current snapshots. ``fabric.get_batch`` is single-consumer, so
   sample pops are serialized under a lock; exactly one remote learner
@@ -49,13 +57,13 @@ records the error and drops that one connection, never the gateway.
 from __future__ import annotations
 
 import dataclasses
-import socket
 import threading
 import time
 from typing import Any
 
 import jax
 
+from repro.net import transport as transport_lib
 from repro.net import wire
 from repro.runtime.params import ParamStore
 
@@ -63,6 +71,7 @@ from repro.runtime.params import ParamStore
 @dataclasses.dataclass
 class GatewayStats:
     connections: int = 0        # accepted actor connections (lifetime)
+    shm_connections: int = 0    # ... that upgraded to the shm ring path
     blocks_in: int = 0          # ADD_BLOCKs routed into the fabric
     transitions_in: int = 0     # transitions carried by those blocks
     add_retries: int = 0        # fabric.add backpressure retries (remote
@@ -78,19 +87,23 @@ class GatewayStats:
     sample_sends: int = 0       # ... that shipped an actual batch
     sample_starved: int = 0     # ... answered empty (fabric below min-fill
                                 # or prefetch lagging)
-    priority_updates: int = 0   # PRIORITY_UPDATE write-backs routed into
-                                # the fabric (the serve-side learner clock)
+    priority_updates: int = 0   # priority write-back *rounds* routed into
+                                # the fabric (the serve-side learner clock;
+                                # coalesced frames count every round they
+                                # carry)
+    priority_frames: int = 0    # PRIORITY_UPDATE frames received
     param_pushes: int = 0       # PARAM_PUSH snapshots published locally
 
 
 class ReplayGateway:
-    """TCP server thread feeding ``ReplayFabric.add`` from remote actors."""
+    """Server thread feeding ``ReplayFabric.add`` from remote actors."""
 
     def __init__(self, fabric: Any, store: ParamStore, *,
                  host: str = "127.0.0.1", port: int = 0,
                  add_timeout_s: float = 0.05, sample_timeout_s: float = 0.05,
                  poll_s: float = 0.2, drain_grace_s: float = 1.0,
-                 backlog: int = 64):
+                 backlog: int = 64, accept_shm: bool = True,
+                 ring_bytes: int = transport_lib.DEFAULT_RING_BYTES):
         self._fabric = fabric
         self._store = store
         self._add_timeout_s = add_timeout_s
@@ -101,12 +114,13 @@ class ReplayGateway:
         self._sample_lock = threading.Lock()
         self._poll_s = poll_s
         self._drain_grace_s = drain_grace_s
-        self._listener = socket.create_server((host, port), backlog=backlog)
-        self._listener.settimeout(poll_s)
-        self.host, self.port = self._listener.getsockname()[:2]
+        self._listener = transport_lib.Listener(
+            host, port, backlog=backlog, accept_shm=accept_shm,
+            ring_bytes=ring_bytes, poll_s=poll_s)
+        self.host, self.port = self._listener.host, self._listener.port
         self._stop = threading.Event()
         self._lock = threading.Lock()      # stats + connection registry
-        self._conns: dict[int, tuple[socket.socket, threading.Lock]] = {}
+        self._conns: dict[int, transport_lib.Transport] = {}
         self._conn_blocks: dict[int, int] = {}  # routed blocks per accepted
                                                 # connection (kept after
                                                 # close, for observability)
@@ -131,16 +145,12 @@ class ReplayGateway:
         self._stop.set()
         with self._lock:
             conns = list(self._conns.values())
-        for sock, send_lock in conns:
+        for conn in conns:
             try:
-                with send_lock:
-                    wire.send_frame(sock, wire.STOP)
-            except OSError:
+                conn.send(wire.STOP)
+            except (OSError, wire.WireError):
                 pass
-        try:
-            self._listener.close()
-        except OSError:
-            pass
+        self._listener.close()
         if join:
             if self._thread.is_alive():
                 self._thread.join()
@@ -148,11 +158,8 @@ class ReplayGateway:
                 th.join()
             with self._lock:
                 conns = list(self._conns.values())
-            for sock, _ in conns:
-                try:
-                    sock.close()
-                except OSError:
-                    pass
+            for conn in conns:
+                conn.close()
 
     @property
     def address(self) -> tuple[str, int]:
@@ -180,20 +187,18 @@ class ReplayGateway:
         try:
             while not self._stop.is_set():
                 try:
-                    sock, _addr = self._listener.accept()
-                except (socket.timeout, TimeoutError):
-                    continue
+                    conn = self._listener.accept()
                 except OSError:
                     break  # listener closed by stop()
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                cid = id(sock)
-                send_lock = threading.Lock()
+                if conn is None:
+                    continue
+                cid = id(conn)
                 with self._lock:
-                    self._conns[cid] = (sock, send_lock)
+                    self._conns[cid] = conn
                     self._conn_blocks[cid] = 0
                     self.stats.connections += 1
                 th = threading.Thread(
-                    target=self._handle, args=(cid, sock, send_lock),
+                    target=self._handle, args=(cid, conn),
                     daemon=True, name=f"gateway-conn-{self.stats.connections}")
                 self._handlers.append(th)
                 th.start()
@@ -202,11 +207,43 @@ class ReplayGateway:
 
     # -- per-connection handler ---------------------------------------------
 
-    def _handle(self, cid: int, sock: socket.socket,
-                send_lock: threading.Lock) -> None:
-        reader = wire.FrameReader(sock)
+    def _handle(self, cid: int, conn: transport_lib.Transport) -> None:
         drain_deadline = None  # set when stop() is first observed
-        bytes_seen = 0
+        in_seen = out_seen = 0
+        was_shm = False
+        staged_sample: list | None = None  # pre-encoded next reply
+        # Decoded PRIORITY_UPDATE frames whose fabric application is
+        # deferred: the learner flushes write-backs immediately before its
+        # next SAMPLE_REQUEST, so applying eagerly puts the jitted scatter
+        # in the reply's critical path. Parking it and peeking for the
+        # request first moves the application into the learner's compute
+        # window. Application order relative to the reply batch is
+        # unchanged — that batch was popped before the update arrived.
+        pending_prio: list[tuple] = []
+
+        def account() -> None:
+            nonlocal in_seen, out_seen
+            bi, bo = conn.bytes_in, conn.bytes_out
+            if bi != in_seen or bo != out_seen:
+                self._bump(bytes_in=bi - in_seen, bytes_out=bo - out_seen)
+                in_seen, out_seen = bi, bo
+
+        def apply_priorities() -> None:
+            # Same asynchronous write-back path as the in-process learner;
+            # the global keys route to the owning shards. One frame may
+            # coalesce several rounds — re-apply each as its own call so
+            # the shard eviction clock ticks per round, exactly as if each
+            # had shipped separately.
+            while pending_prio:
+                idx, prios, counts = pending_prio.pop(0)
+                off = 0
+                for n in counts:
+                    n = int(n)
+                    self._fabric.write_back(idx[off:off + n],
+                                            prios[off:off + n])
+                    off += n
+                self._bump(priority_updates=len(counts))
+
         try:
             while True:
                 if self._stop.is_set():
@@ -217,28 +254,27 @@ class ReplayGateway:
                         drain_deadline = now + self._drain_grace_s
                     elif now >= drain_deadline:
                         break
-                got = reader.read_frame(timeout=self._poll_s)
-                if reader.bytes_in != bytes_seen:  # live, not close-time
-                    self._bump(bytes_in=reader.bytes_in - bytes_seen)
-                    bytes_seen = reader.bytes_in
+                got = conn.recv(timeout=0 if pending_prio else self._poll_s)
+                account()
+                if not was_shm and conn.kind == "shm":
+                    was_shm = True
+                    self._bump(shm_connections=1)
                 if got is None:
+                    apply_priorities()  # no request on its heels: apply now
                     continue
                 msg_type, payload = got
                 if msg_type == wire.ADD_BLOCK:
                     if self._route_block(cid, payload):
-                        with send_lock:
-                            self._bump(bytes_out=wire.send_frame(
-                                sock, wire.ADD_ACK))
+                        conn.send(wire.ADD_ACK)
                     # else: dropped during shutdown — no ACK; the client is
                     # about to receive STOP anyway
                 elif msg_type == wire.SAMPLE_REQUEST:
-                    self._serve_sample(sock, send_lock)
+                    staged_sample = self._serve_sample(conn, staged_sample)
+                    apply_priorities()
                 elif msg_type == wire.PRIORITY_UPDATE:
-                    idx, prios = wire.decode_priority_update(payload)
-                    # Same asynchronous write-back path as the in-process
-                    # learner; the global keys route to the owning shards.
-                    self._fabric.write_back(idx, prios)
-                    self._bump(priority_updates=1)
+                    pending_prio.append(
+                        wire.decode_priority_update(payload))
+                    self._bump(priority_frames=1)
                 elif msg_type == wire.PARAM_PUSH:
                     _version, params = wire.decode_params(payload)
                     # Publish on-device so the K actors pulling this
@@ -248,7 +284,7 @@ class ReplayGateway:
                     self._bump(param_pushes=1)
                 elif msg_type == wire.PARAM_PULL:
                     have = wire.decode_json(payload).get("have", -1)
-                    self._serve_params(sock, send_lock, int(have))
+                    self._serve_params(conn, int(have))
                 elif msg_type == wire.HELLO:
                     hello = wire.decode_json(payload)
                     if hello.get("protocol") != wire.PROTOCOL_VERSION:
@@ -268,17 +304,22 @@ class ReplayGateway:
         except wire.WireError:
             self._bump(wire_errors=1)
         except OSError:
-            pass  # socket torn down under us during stop()
+            pass  # transport torn down under us during stop()
         except BaseException as e:  # noqa: BLE001
             self.error = e
         finally:
-            self._bump(bytes_in=reader.bytes_in - bytes_seen)
+            # A connection may end (BYE, EOF, stop) with a parked update —
+            # the client's final flush-then-BYE must still land in the
+            # fabric, whoever wins the shutdown race.
+            try:
+                apply_priorities()
+            except BaseException as e:  # noqa: BLE001
+                if self.error is None:
+                    self.error = e
+            account()
             with self._lock:
                 self._conns.pop(cid, None)
-            try:
-                sock.close()
-            except OSError:
-                pass
+            conn.close()
 
     def _route_block(self, cid: int, payload: memoryview) -> bool:
         """Decode and push into the fabric, holding the client's ACK (and
@@ -297,19 +338,33 @@ class ReplayGateway:
             self._conn_blocks[cid] += 1
         return True
 
-    def _serve_sample(self, sock: socket.socket,
-                      send_lock: threading.Lock) -> None:
-        """Pop one prioritized batch and ship it; an empty payload tells the
-        learner the fabric is starved (poll again) — backpressure in the
-        sampling direction, mirroring the ADD_ACK window on ingest."""
+    def _serve_sample(self, conn: transport_lib.Transport,
+                      staged: list | None = None) -> list | None:
+        """Ship one prioritized batch; an empty payload tells the learner
+        the fabric is starved (poll again) — backpressure in the sampling
+        direction, mirroring the ADD_ACK window on ingest.
+
+        Returns the next reply, staged: after answering, the handler pops
+        and encodes the *next* batch immediately, so the fabric's prefetch
+        refill (a jitted sample + host transfer that competes for the same
+        cores) runs while the learner is busy computing on the batch just
+        shipped, not serially inside the next request. The pop order is the
+        fabric's prefetch-queue order either way — staging moves work in
+        time, never reorders or drops a batch the learner will see."""
+        if staged is None:
+            with self._sample_lock:
+                batch = self._fabric.get_batch(timeout=self._sample_timeout_s)
+            served = batch is not None
+            staged = wire.encode_sample_batch_iov(batch) if served else []
+        else:
+            served = True
+        conn.send(wire.SAMPLE_BATCH, staged)
+        self._bump(sample_requests=1,
+                   sample_sends=int(served),
+                   sample_starved=int(not served))
         with self._sample_lock:
-            batch = self._fabric.get_batch(timeout=self._sample_timeout_s)
-        payload = b"" if batch is None else wire.encode_sample_batch(batch)
-        with send_lock:
-            sent = wire.send_frame(sock, wire.SAMPLE_BATCH, payload)
-        self._bump(sample_requests=1, bytes_out=sent,
-                   sample_sends=int(batch is not None),
-                   sample_starved=int(batch is None))
+            nxt = self._fabric.get_batch(timeout=0)
+        return None if nxt is None else wire.encode_sample_batch_iov(nxt)
 
     def _encoded_params(self, snap) -> bytes:
         with self._param_cache_lock:
@@ -320,17 +375,12 @@ class ReplayGateway:
             self._param_cache = (snap.version, payload)
             return payload
 
-    def _serve_params(self, sock: socket.socket, send_lock: threading.Lock,
-                      have: int) -> None:
+    def _serve_params(self, conn: transport_lib.Transport, have: int) -> None:
         snap = self._store.get()
         if snap.version > have:
-            payload = self._encoded_params(snap)
-            with send_lock:
-                sent = wire.send_frame(sock, wire.PARAM, payload)
-            self._bump(param_pulls=1, param_sends=1, bytes_out=sent)
+            conn.send(wire.PARAM, self._encoded_params(snap))
+            self._bump(param_pulls=1, param_sends=1)
         else:
-            with send_lock:
-                sent = wire.send_frame(
-                    sock, wire.PARAM_UNCHANGED,
-                    wire.encode_json({"version": snap.version}))
-            self._bump(param_pulls=1, bytes_out=sent)
+            conn.send(wire.PARAM_UNCHANGED,
+                      wire.encode_json({"version": snap.version}))
+            self._bump(param_pulls=1)

@@ -10,9 +10,9 @@ a fabric it cannot touch in-process.
 
 Per batch, the exchange is strict request/reply::
 
+    learner ── PRIORITY_UPDATE (coalesced) ─► gateway
     learner ── SAMPLE_REQUEST ──────────────► gateway
     learner ◄───────── SAMPLE_BATCH ───────── gateway   (empty = starved)
-    learner ── PRIORITY_UPDATE (async) ─────► gateway
     learner ── PARAM_PUSH (on publish) ─────► gateway
 
 Deliberately *serial and simple*: the client holds at most one outstanding
@@ -23,45 +23,70 @@ stager thread runs this client's request/decode while the learner computes
 on the previous batch. That keeps the overlap policy in one place instead of
 re-implemented per transport.
 
-Thread contract: ``get_batch`` (and therefore the socket *reader*) belongs
-to one consumer thread (the learner, or the stager when wrapped);
-``write_back``/``publish_params`` only send and may be called from the
-learner thread concurrently with a stager's ``get_batch`` — sends are
-serialized by an internal lock.
+Write-backs coalesce: ``write_back`` only parks the arrays, and the pending
+rounds ship as **one** ``PRIORITY_UPDATE`` frame right before the next
+``SAMPLE_REQUEST`` (or params push / shutdown) — one frame per sample round
+instead of one per learner step. Rounds are concatenated in call order with
+their per-round lengths in the frame's ``counts`` leaf; the gateway
+re-applies each round as its own ``fabric.write_back``, so last-writer-wins
+ordering AND eviction-clock pacing are exactly those of per-round frames,
+and its learner clock (``priority_updates``) keeps counting rounds.
+
+The byte-moving layer is ``repro.net.transport``: ``transport="tcp"`` dials
+the classic socket path, ``"shm"`` requires the same-host ring upgrade, and
+``"auto"`` (default) uses shm when the gateway host is loopback-local. A
+torn-down transport — either side may win the shutdown race — surfaces as
+:class:`SourceClosed` from ``get_batch`` on every path.
+
+Thread contract: ``get_batch`` (and therefore the transport *reader*)
+belongs to one consumer thread (the learner, or the stager when wrapped);
+``write_back``/``publish_params`` may be called from the learner thread
+concurrently — they only touch the pending list / send under locks.
 
 Numerics: batches carry final globally-corrected IS weights and global
 (shard, slot) keys; fp32/int32 leaves travel bit-identically, so a remote
-learner consumes byte-for-byte what a local learner would.
+learner consumes byte-for-byte what a local learner would (unless the lossy
+``quantize_prios``/``quantize_params`` wire options are enabled).
 """
 
 from __future__ import annotations
 
-import socket
 import threading
 import time
 from typing import Any
 
+import numpy as np
+
 from repro.core.sampling import LearnerBatch
+from repro.net import transport as transport_lib
 from repro.net import wire
 from repro.runtime.service import ServiceStats
 from repro.runtime.sources import SampleSource, SourceClosed, SourceStats
 
 
 class RemoteFabricSource(SampleSource):
-    """Sample/write-back against a ``ReplayGateway`` over TCP."""
+    """Sample/write-back against a ``ReplayGateway`` over tcp or shm."""
 
     def __init__(self, host: str, port: int, *,
-                 connect_timeout_s: float = 10.0, poll_s: float = 0.05):
+                 transport: str = "auto",
+                 connect_timeout_s: float = 10.0, poll_s: float = 0.05,
+                 ring_bytes: int = transport_lib.DEFAULT_RING_BYTES,
+                 quantize_prios: bool = False,
+                 quantize_params: bool = False):
         self._addr = (host, int(port))
+        self._kind = transport_lib.resolve_kind(transport, host) \
+            if transport != "auto" else "auto"
         self._connect_timeout_s = connect_timeout_s
         self._poll_s = poll_s
-        self._sock: socket.socket | None = None
-        self._reader: wire.FrameReader | None = None
-        self._send_lock = threading.Lock()
+        self._ring_bytes = ring_bytes
+        self._quantize_prios = quantize_prios
+        self._quantize_params = quantize_params
+        self._conn: transport_lib.Transport | None = None
         self._requested = False   # one SAMPLE_REQUEST may be outstanding
         self._closed = False
+        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
+        self._pending_lock = threading.Lock()
         self.stats = SourceStats()
-        self.bytes_out = 0
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -72,39 +97,62 @@ class RemoteFabricSource(SampleSource):
         deadline = time.monotonic() + self._connect_timeout_s
         while True:
             try:
-                self._sock = socket.create_connection(
-                    self._addr, timeout=self._connect_timeout_s)
+                self._conn = transport_lib.connect(
+                    *self._addr, self._kind,
+                    timeout=self._connect_timeout_s,
+                    ring_bytes=self._ring_bytes)
                 break
             except OSError:
                 if time.monotonic() >= deadline:
                     raise
                 time.sleep(0.1)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._reader = wire.FrameReader(self._sock)
-        self._send(wire.HELLO, wire.encode_json(
+        self._conn.send(wire.HELLO, wire.encode_json(
             {"actor_id": -1, "role": "learner",
              "protocol": wire.PROTOCOL_VERSION}))
         return self
 
     def stop(self) -> None:
-        if self._sock is None:
+        if self._conn is None:
             return
         try:
-            self._send(wire.BYE, wire.encode_json(
+            self._flush_writebacks()
+            self._conn.send(wire.BYE, wire.encode_json(
                 {"rollouts": 0, "blocked": self.stats.starved_polls}))
-        except OSError:
+        except (OSError, SourceClosed):
             pass
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        self._conn.close()
         self._closed = True
 
-    def _send(self, msg_type: int, payload: bytes = b"") -> None:
-        with self._send_lock:
-            self.bytes_out += wire.send_frame(self._sock, msg_type, payload)
+    @property
+    def transport_kind(self) -> str:
+        """Resolved transport of the live connection (``tcp``/``shm``)."""
+        return self._conn.kind if self._conn is not None else self._kind
 
     # -- SampleSource -------------------------------------------------------
+
+    def _flush_writebacks(self) -> None:
+        """Ship every parked write-back round as one coalesced frame.
+        Concatenation order = ``write_back`` call order, so a key written
+        twice keeps its later priority (last-writer-wins)."""
+        with self._pending_lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return
+        if len(pending) == 1:
+            idx, prios = pending[0]
+        else:
+            idx = np.concatenate([p[0] for p in pending])
+            prios = np.concatenate([p[1] for p in pending])
+        counts = [p[0].shape[0] for p in pending]
+        try:
+            self._conn.send(wire.PRIORITY_UPDATE, wire.encode_priority_update(
+                idx, prios, counts=counts,
+                quantize=self._quantize_prios))
+        except (transport_lib.TransportClosed, OSError) as e:
+            self._closed = True
+            raise SourceClosed(
+                "replay gateway went away during priority write-back") from e
+        self.stats.writeback_frames += 1
 
     def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
         """Request/await one batch. None on reply timeout or a starved
@@ -113,12 +161,13 @@ class RemoteFabricSource(SampleSource):
         if self._closed:
             raise SourceClosed("remote fabric connection is closed")
         if not self._requested:
-            self._send(wire.SAMPLE_REQUEST)
+            self._flush_writebacks()
+            self._conn.send(wire.SAMPLE_REQUEST)
             self._requested = True
         try:
-            got = self._reader.read_frame(
+            got = self._conn.recv(
                 timeout=self._poll_s if timeout is None else timeout)
-        except EOFError as e:
+        except (EOFError, transport_lib.TransportClosed) as e:
             self._closed = True
             raise SourceClosed(
                 "replay gateway went away while the learner was sampling"
@@ -143,15 +192,20 @@ class RemoteFabricSource(SampleSource):
         return batch
 
     def write_back(self, indices: Any, priorities: Any) -> None:
-        self._send(wire.PRIORITY_UPDATE,
-                   wire.encode_priority_update(indices, priorities))
+        """Park one write-back round; it ships coalesced with the next
+        sample request (or params push / shutdown flush)."""
+        pair = (np.asarray(indices), np.asarray(priorities))
+        with self._pending_lock:
+            self._pending.append(pair)
         self.stats.writebacks += 1
 
     def publish_params(self, version: int, params: Any) -> None:
         """Ship fresh learner params to the gateway, which publishes them
         into *its* ParamStore — the one the fabric-side actors pull from —
         closing the acting↔learning loop across the machine boundary."""
-        self._send(wire.PARAM_PUSH, wire.encode_params(version, params))
+        self._flush_writebacks()
+        self._conn.send(wire.PARAM_PUSH, wire.encode_params_iov(
+            version, params, quantize=self._quantize_params))
         self.stats.param_pushes += 1
 
     def snapshot(self) -> ServiceStats:
@@ -163,7 +217,11 @@ class RemoteFabricSource(SampleSource):
 
     @property
     def bytes_in(self) -> int:
-        return self._reader.bytes_in if self._reader is not None else 0
+        return self._conn.bytes_in if self._conn is not None else 0
+
+    @property
+    def bytes_out(self) -> int:
+        return self._conn.bytes_out if self._conn is not None else 0
 
 
 def parse_hostport(spec: str, default_host: str = "127.0.0.1",

@@ -1,0 +1,709 @@
+"""Byte-moving layer under the ``repro.net`` wire protocol.
+
+The wire format (``repro.net.wire``) defines *what* travels — framed,
+versioned messages. This module defines *how* bytes move, behind one small
+API so the gateway, the remote actor loop, and the remote learner client
+never touch sockets or shared memory directly:
+
+* :class:`Transport` — ``send(msg_type, payload)`` / ``recv(timeout)`` /
+  ``close()``, where ``payload`` may be bytes-like **or an iovec-style list
+  of buffers** (``wire.encode_*_iov``): segments are handed to the kernel
+  (``sendmsg``) or written once into the ring arena, never concatenated
+  host-side, and the bytes on the wire are identical either way.
+* :class:`Listener` — ``accept(timeout) -> Transport`` for the serving side.
+* :func:`connect` / :func:`listen` — the only constructors callers need;
+  ``kind`` is ``"tcp"``, ``"shm"``, or ``"auto"`` (shm when the peer host is
+  loopback-local, tcp otherwise).
+
+Two transports implement the API:
+
+* :class:`TcpTransport` — today's stream socket + ``FrameReader`` path,
+  with scatter-gather ``sendmsg`` on the way out.
+* :class:`ShmRingTransport` — same-host processes exchange frames through a
+  mmap'd arena holding two SPSC byte rings (one per direction). **Bulk data
+  frames** (blocks, batches, params, priority updates above a small size
+  cutover) are written once into the ring and delivered from it; **ACKs,
+  control frames, and sub-cutover data frames stay on the socket control
+  plane**, which also carries the upgrade handshake and peer-liveness (EOF)
+  detection. A connection starts as TCP
+  and upgrades in-band: the client sends ``SHM_REQ``, the serving side
+  creates the arena file (under ``/dev/shm`` when available), replies
+  ``SHM_SETUP{path}``, and unlinks the file once the client confirms
+  ``SHM_ATTACHED`` — so a crash on either side reclaims the memory.
+
+Ring protocol: per ring a monotonically increasing u64 ``head`` (writer)
+and ``tail`` (reader) byte counter pair; frames are the exact TCP wire
+bytes, written with wraparound split copies, and the writer *commits a
+whole frame at once* by advancing ``head`` after the last byte is in place.
+A writer killed mid-frame therefore never publishes a torn frame: the
+reader sees socket EOF plus a quiet ring and fails fast with ``EOFError``
+(the same end-of-stream signal the socket path raises, which is what lets
+``RemoteFabricSource`` surface ``SourceClosed`` on both sides of the
+shutdown race). Aligned 8-byte counter loads/stores are atomic on the
+x86-64/arm64 hosts this targets, and the x86-TSO/acquire-release ordering
+of CPython's memcpy-based buffer writes makes data visible before the head
+that publishes it.
+
+Each ring commit is followed by a header-only ``SHM_DOORBELL`` frame on the
+socket, so the receive side *blocks on the socket* instead of polling the
+ring — commit-to-delivery latency is a socket wake-up (~µs on loopback),
+not a sleep quantum, while the bulk bytes still bypass the socket entirely.
+Doorbells are tokens: the reader pops exactly one ring frame per doorbell,
+which makes the socket's byte stream the single FIFO delivery order for
+both channels — a doorbell *is* the ring frame's slot in that order. Any
+frame sent before another by one sender is therefore delivered before it,
+regardless of which channel each rode: e.g. a coalesced
+``PRIORITY_UPDATE`` flushed right before a ``BYE`` is never lost to the
+shutdown race (the only exception is socket EOF, where committed ring
+frames are drained before ``EOFError`` is raised).
+
+The receive side copies a frame's payload out of the arena before handing
+it up — one deliberate memcpy, because payloads outlive the recv call (the
+gateway queues decoded blocks into shard queues asynchronously) while ring
+space must be reusable immediately. The zero-copy win is the send path:
+tensors go straight from their numpy buffers into the arena (or the
+kernel's iovec), never through an intermediate payload buffer.
+"""
+
+from __future__ import annotations
+
+import mmap
+import os
+import select
+import socket
+import struct
+import tempfile
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.net import wire
+
+# Per-direction ring capacity. 16 MiB holds dozens of the largest frames the
+# protocol ships (MB-class param snapshots / sample batches); the arena is
+# two rings + one header page.
+DEFAULT_RING_BYTES = 1 << 24
+
+# Data frames at or below this size ride the socket even on an shm
+# connection (per connection the cutover is ``min(this, ring_bytes // 4)``):
+# for a ~KB coalesced priority flush one ``sendmsg`` beats ring write +
+# doorbell syscall + wake-and-pop, while bulk frames still bypass the
+# socket entirely.
+RING_CUTOVER_BYTES = 1 << 15
+
+_ARENA_MAGIC = b"APXRING2"
+_HDR_A = 64            # client -> server ring counters (head u64, tail u64)
+_HDR_B = 128           # server -> client ring counters
+_DATA_OFF = 192
+_U64 = struct.Struct("<Q")
+
+# Frames that carry experience/params ride the ring on an shm connection;
+# everything else (HELLO/ACK/PULL/UNCHANGED/STOP/BYE/SAMPLE_REQUEST and the
+# SHM_* handshake itself) is small control traffic and stays on the socket.
+DATA_TYPES = frozenset({
+    wire.ADD_BLOCK, wire.SAMPLE_BATCH, wire.PARAM, wire.PARAM_PUSH,
+    wire.PRIORITY_UPDATE,
+})
+
+# recv/send wait backoff: start by yielding, escalate to sub-millisecond
+# sleeps — tight enough for request/reply latency, kind to single-CPU hosts
+# where a busy spin would starve the very peer we are waiting on.
+_POLL_MAX_S = 5e-4
+_POLL_STEP_S = 1e-4
+
+
+class TransportClosed(ConnectionError):
+    """The peer is gone (closed socket / dead ring partner) — raised from
+    ``send``; ``recv`` keeps the socket convention and raises ``EOFError``."""
+
+
+class ShmUnavailable(RuntimeError):
+    """The shm upgrade handshake was refused or cannot proceed; ``auto``
+    connections fall back to TCP, explicit ``shm`` connections fail."""
+
+
+def _tune(sock: socket.socket) -> None:
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    for opt in (socket.SO_SNDBUF, socket.SO_RCVBUF):
+        try:
+            sock.setsockopt(socket.SOL_SOCKET, opt, 1 << 21)
+        except OSError:
+            pass  # platform cap: the default stays
+
+
+def _sendmsg_all(sock: socket.socket, segments) -> None:
+    """Scatter-gather sendall: hand ``segments`` to ``sendmsg`` and resume
+    after partial sends / timeouts until every byte is out. Tolerates a
+    reader thread flipping the shared socket timeout (timeouts/would-block
+    park on select instead of erroring)."""
+    mvs = [m for m in (memoryview(s) for s in segments) if len(m)]
+    i = 0
+    while i < len(mvs):
+        try:
+            n = sock.sendmsg(mvs[i:i + 64])
+        except (socket.timeout, TimeoutError, BlockingIOError,
+                InterruptedError):
+            try:
+                select.select([], [sock], [], 0.05)
+            except (OSError, ValueError) as e:
+                raise TransportClosed(f"socket gone during send: {e!r}") from e
+            continue
+        except OSError as e:
+            raise TransportClosed(f"peer gone during send: {e!r}") from e
+        while n:
+            if n >= len(mvs[i]):
+                n -= len(mvs[i])
+                i += 1
+            else:
+                mvs[i] = mvs[i][n:]
+                n = 0
+
+
+class Transport:
+    """One bidirectional framed connection; see the module docstring.
+
+    * ``send(msg_type, payload)`` — payload is bytes-like or an iovec list;
+      thread-safe (internal lock), returns bytes put on the wire. Raises
+      ``WireError`` (oversize), ``TransportClosed`` (peer gone).
+    * ``recv(timeout)`` — next ``(msg_type, payload_view)`` or None on
+      timeout (``timeout=0`` polls); single consumer. Raises ``EOFError``
+      at end-of-stream, ``WireError`` on garbage.
+    """
+
+    kind = "?"
+
+    @property
+    def bytes_in(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def bytes_out(self) -> int:
+        raise NotImplementedError
+
+    def send(self, msg_type: int, payload: Any = b"") -> int:
+        raise NotImplementedError
+
+    def recv(self, timeout: float | None = None,
+             ) -> tuple[int, memoryview] | None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+
+class TcpTransport(Transport):
+    """Stream-socket transport: ``FrameReader`` in, scatter-gather
+    ``sendmsg`` out. A serving-side instance (``accept_shm=True``) upgrades
+    itself in place when the peer requests shm — after the handshake every
+    call delegates to the :class:`ShmRingTransport` it became."""
+
+    def __init__(self, sock: socket.socket, *, max_payload: int | None = None,
+                 accept_shm: bool = False,
+                 ring_bytes: int = DEFAULT_RING_BYTES,
+                 handshake_timeout_s: float = 10.0):
+        self._sock = sock
+        self._max_payload = wire.MAX_PAYLOAD if max_payload is None \
+            else max_payload
+        self._reader = wire.FrameReader(sock, max_payload=self._max_payload)
+        self._send_lock = threading.Lock()
+        self._accept_shm = accept_shm
+        self._ring_bytes = ring_bytes
+        self._handshake_timeout_s = handshake_timeout_s
+        self._shm: ShmRingTransport | None = None
+        self._sent = 0
+
+    @property
+    def kind(self) -> str:  # type: ignore[override]
+        return self._shm.kind if self._shm is not None else "tcp"
+
+    @property
+    def bytes_in(self) -> int:
+        return self._shm.bytes_in if self._shm is not None \
+            else self._reader.bytes_in
+
+    @property
+    def bytes_out(self) -> int:
+        return self._shm.bytes_out if self._shm is not None else self._sent
+
+    def send(self, msg_type: int, payload: Any = b"") -> int:
+        if self._shm is not None:
+            return self._shm.send(msg_type, payload)
+        segs = wire.frame_iov(msg_type, payload, self._max_payload)
+        n = wire.iov_len(segs)
+        with self._send_lock:
+            _sendmsg_all(self._sock, segs)
+            self._sent += n
+        return n
+
+    def recv(self, timeout: float | None = None,
+             ) -> tuple[int, memoryview] | None:
+        if self._shm is not None:
+            return self._shm.recv(timeout)
+        got = self._reader.read_frame(timeout)
+        if got is not None and got[0] == wire.SHM_REQ:
+            self._serve_upgrade(got[1])
+            return self.recv(timeout)
+        return got
+
+    def _serve_upgrade(self, req_payload: memoryview) -> None:
+        """Handle a peer's ``SHM_REQ``: build the arena and swap this
+        connection onto rings, or ``SHM_NACK`` and stay on TCP."""
+        req = wire.decode_json(req_payload)
+        if not self._accept_shm:
+            self.send(wire.SHM_NACK,
+                      wire.encode_json({"reason": "shm not accepted here"}))
+            return
+        n = int(req.get("ring_bytes", self._ring_bytes))
+        try:
+            path, mm = _create_arena(n)
+        except OSError as e:
+            self.send(wire.SHM_NACK, wire.encode_json({"reason": repr(e)}))
+            return
+        try:
+            self.send(wire.SHM_SETUP,
+                      wire.encode_json({"path": path, "ring_bytes": n}))
+            got = self._reader.read_frame(timeout=self._handshake_timeout_s)
+            if got is None:
+                raise wire.WireError("shm handshake: peer never attached")
+            if got[0] != wire.SHM_ATTACHED:
+                raise wire.WireError(
+                    f"shm handshake: expected SHM_ATTACHED, got {got[0]}")
+        except BaseException:
+            mm.close()
+            _unlink_quiet(path)
+            raise
+        # Peer holds its own mapping now: the name can go away — whoever
+        # dies last just drops the final reference to anonymous-again pages.
+        _unlink_quiet(path)
+        self._shm = ShmRingTransport(self._sock, self._reader, mm,
+                                     is_server=True, ring_bytes=n,
+                                     max_payload=self._max_payload)
+
+    def close(self) -> None:
+        if self._shm is not None:
+            self._shm.close()
+            return
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class _Ring:
+    """One SPSC byte ring inside the arena: monotone u64 head (writer) /
+    tail (reader) counters plus a circular data area. Whole frames only —
+    the writer advances head once per frame, after its last byte."""
+
+    def __init__(self, arena: memoryview, hdr_off: int, data_off: int,
+                 size: int):
+        self._arena = arena
+        self._hdr = hdr_off
+        self._data = arena[data_off:data_off + size]
+        # numpy views for the bulk copies: ndarray slice-assign out of the
+        # mmap into a fresh (non-zeroed) np.empty measures ~5x faster than
+        # bytearray allocation + memoryview slice-assign for ~1 MB frames.
+        self._np = np.frombuffer(self._data, np.uint8)
+        self.size = size
+
+    # Counter loads/stores are 8-byte aligned single-word accesses — atomic
+    # on every platform jax runs on; each counter has exactly one writer.
+    @property
+    def head(self) -> int:
+        return _U64.unpack_from(self._arena, self._hdr)[0]
+
+    @property
+    def tail(self) -> int:
+        return _U64.unpack_from(self._arena, self._hdr + 8)[0]
+
+    def free(self) -> int:
+        return self.size - (self.head - self.tail)
+
+    def avail(self) -> int:
+        return self.head - self.tail
+
+    def write(self, segments, total: int) -> None:
+        """Copy ``segments`` in at head (caller checked ``free() >= total``),
+        then publish the frame by advancing head once."""
+        pos = self.head
+        i = pos % self.size
+        for seg in segments:
+            src = np.frombuffer(seg, np.uint8)
+            n = len(src)
+            if i + n <= self.size:
+                self._np[i:i + n] = src
+                i = (i + n) % self.size
+            else:
+                first = self.size - i
+                self._np[i:] = src[:first]
+                self._np[:n - first] = src[first:]
+                i = n - first
+        _U64.pack_into(self._arena, self._hdr, pos + total)
+
+    def read_out(self, offset: int, n: int) -> np.ndarray:
+        """Copy ``n`` bytes at ``tail + offset`` out of the ring (split-safe;
+        does not consume)."""
+        i = (self.tail + offset) % self.size
+        out = np.empty(n, np.uint8)
+        first = min(n, self.size - i)
+        out[:first] = self._np[i:i + first]
+        if n > first:
+            out[first:] = self._np[:n - first]
+        return out
+
+    def consume(self, n: int) -> None:
+        _U64.pack_into(self._arena, self._hdr + 8, self.tail + n)
+
+    def release(self) -> None:
+        self._data.release()
+
+
+class ShmRingTransport(Transport):
+    """Same-host transport over a mmap'd two-ring arena; the socket stays
+    as the control plane (ACKs, small control frames, liveness)."""
+
+    kind = "shm"
+
+    def __init__(self, sock: socket.socket, reader: wire.FrameReader,
+                 mm: mmap.mmap, *, is_server: bool, ring_bytes: int,
+                 max_payload: int | None = None):
+        self._sock = sock
+        self._reader = reader
+        self._mm = mm
+        self._mv = memoryview(mm)
+        self._max_payload = wire.MAX_PAYLOAD if max_payload is None \
+            else max_payload
+        a = _Ring(self._mv, _HDR_A, _DATA_OFF, ring_bytes)            # c2s
+        b = _Ring(self._mv, _HDR_B, _DATA_OFF + ring_bytes, ring_bytes)  # s2c
+        self._send_ring, self._recv_ring = (b, a) if is_server else (a, b)
+        self._send_lock = threading.Lock()   # ring writer
+        self._ctrl_lock = threading.Lock()   # socket writer
+        # Below this size a data frame rides the socket: for small frames
+        # (priority updates, sample requests) one sendmsg beats ring write +
+        # doorbell + wake-and-pop; the ring earns its copies on bulk frames.
+        self._ring_min = min(RING_CUTOVER_BYTES, ring_bytes // 4)
+        self._peer_eof = False
+        self._closed = False
+        self._ring_in = 0
+        self._ring_out = 0
+        self._ctrl_out = 0
+
+    # -- establishment ------------------------------------------------------
+
+    @classmethod
+    def establish(cls, sock: socket.socket, *,
+                  ring_bytes: int = DEFAULT_RING_BYTES,
+                  max_payload: int | None = None,
+                  timeout: float = 10.0) -> "ShmRingTransport":
+        """Client side of the upgrade handshake. Raises
+        :class:`ShmUnavailable` when the serving side refuses or never
+        answers (the socket is still clean TCP then — ``connect(kind="auto")``
+        falls back on it)."""
+        cap = wire.MAX_PAYLOAD if max_payload is None else max_payload
+        reader = wire.FrameReader(sock, max_payload=cap)
+        wire.send_frame(sock, wire.SHM_REQ,
+                        wire.encode_json({"ring_bytes": int(ring_bytes)}))
+        try:
+            got = reader.read_frame(timeout=timeout)
+        except EOFError as e:
+            raise ShmUnavailable(f"peer closed during shm handshake: {e}") \
+                from e
+        if got is None:
+            raise ShmUnavailable("shm handshake timed out")
+        msg, payload = got
+        if msg == wire.SHM_NACK:
+            raise ShmUnavailable(
+                wire.decode_json(payload).get("reason", "refused"))
+        if msg != wire.SHM_SETUP:
+            raise wire.WireError(
+                f"shm handshake: expected SHM_SETUP, got {msg}")
+        setup = wire.decode_json(payload)
+        path, n = setup["path"], int(setup["ring_bytes"])
+        # Past this point the serving side is committed to rings: an attach
+        # failure is a hard connection failure, not a fallback.
+        fd = os.open(path, os.O_RDWR)
+        try:
+            mm = mmap.mmap(fd, 0)
+        finally:
+            os.close(fd)
+        if mm[:8] != _ARENA_MAGIC or _U64.unpack_from(mm, 8)[0] != n:
+            mm.close()
+            raise wire.WireError(f"shm arena {path!r} failed validation")
+        wire.send_frame(sock, wire.SHM_ATTACHED)
+        return cls(sock, reader, mm, is_server=False, ring_bytes=n,
+                   max_payload=max_payload)
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def bytes_in(self) -> int:
+        return self._ring_in + self._reader.bytes_in
+
+    @property
+    def bytes_out(self) -> int:
+        return self._ring_out + self._ctrl_out
+
+    # -- send ---------------------------------------------------------------
+
+    def send(self, msg_type: int, payload: Any = b"") -> int:
+        if self._closed:
+            raise TransportClosed("transport is closed")
+        segs = wire.frame_iov(msg_type, payload, self._max_payload)
+        total = wire.iov_len(segs)
+        if msg_type not in DATA_TYPES or total <= self._ring_min:
+            with self._ctrl_lock:
+                _sendmsg_all(self._sock, segs)
+                self._ctrl_out += total
+            return total
+        if total > self._send_ring.size:
+            raise wire.WireError(
+                f"frame of {total} bytes exceeds the {self._send_ring.size}"
+                f"-byte ring — raise ring_bytes for payloads this large")
+        with self._send_lock:
+            try:
+                sleep = 0.0
+                while self._send_ring.free() < total:
+                    if self._closed or self._peer_eof or self._peer_gone():
+                        raise TransportClosed(
+                            "ring peer gone with the ring full")
+                    time.sleep(sleep)
+                    sleep = min(_POLL_MAX_S, sleep + _POLL_STEP_S)
+                self._send_ring.write(segs, total)
+            except ValueError:
+                raise TransportClosed("transport is closed") from None
+            self._ring_out += total
+        # Doorbell after the commit: the peer's recv blocks on the socket
+        # and pops exactly one ring frame per doorbell, so delivery order is
+        # the socket's FIFO order and commit latency is a socket wake-up,
+        # not a sleep quantum. The count invariant survives concurrent
+        # senders: when doorbell #k arrives, k distinct commits are done,
+        # and ring commits are prefix-ordered, so frame #k is committed.
+        with self._ctrl_lock:
+            try:
+                _sendmsg_all(self._sock, wire.frame_iov(wire.SHM_DOORBELL,
+                                                        b""))
+                self._ctrl_out += wire.HEADER_SIZE
+            except TransportClosed:
+                pass  # frame is committed; the reader drains the ring on EOF
+        return total
+
+    def _peer_gone(self) -> bool:
+        """Liveness probe usable from the send side: MSG_PEEK never steals
+        control frames from the recv side. The zero-timeout select guard
+        matters — a dead peer makes the fd readable (EOF), an idle one does
+        not, and probing an idle socket through ``recv`` would park in
+        Python's internal readiness wait for the socket's full timeout."""
+        try:
+            readable, _, _ = select.select([self._sock], [], [], 0)
+            if not readable:
+                return False
+            return self._sock.recv(1, socket.MSG_PEEK
+                                   | socket.MSG_DONTWAIT) == b""
+        except (BlockingIOError, InterruptedError, socket.timeout,
+                TimeoutError):
+            return False
+        except (OSError, ValueError):
+            return True
+
+    # -- recv ---------------------------------------------------------------
+
+    def _pop_ring(self) -> tuple[int, memoryview] | None:
+        ring = self._recv_ring
+        try:
+            avail = ring.avail()
+        except ValueError:
+            # close() released the arena under this concurrent recv — the
+            # shutdown race, not corruption; surface the normal EOF signal.
+            raise EOFError("transport closed locally") from None
+        if avail == 0:
+            return None
+        if avail < wire.HEADER_SIZE:
+            raise wire.WireError(f"torn ring frame: {avail} bytes committed")
+        hdr = ring.read_out(0, wire.HEADER_SIZE)
+        magic, version, msg_type, length = wire._HEADER.unpack_from(hdr, 0)
+        wire.check_header(magic, version, length, self._max_payload)
+        if avail < wire.HEADER_SIZE + length:
+            raise wire.WireError(
+                f"torn ring frame: {avail} of {wire.HEADER_SIZE + length} "
+                f"bytes committed")
+        # The one receive-side copy: the payload must outlive ring reuse.
+        payload = ring.read_out(wire.HEADER_SIZE, length)
+        ring.consume(wire.HEADER_SIZE + length)
+        self._ring_in += wire.HEADER_SIZE + length
+        return msg_type, memoryview(payload)
+
+    def recv(self, timeout: float | None = None,
+             ) -> tuple[int, memoryview] | None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._closed:
+                raise EOFError("transport closed locally")
+            if self._peer_eof:
+                got = self._pop_ring()  # deliver committed frames first
+                if got is not None:
+                    return got
+                raise EOFError("peer closed")
+            if deadline is None:
+                wait = None
+            else:
+                # At/past the deadline, wait=0 still makes one non-blocking
+                # poll — ``timeout=0`` means "poll", as on the tcp path.
+                wait = max(0.0, deadline - time.monotonic())
+            # Block on the control socket — never touch the ring until its
+            # doorbell arrives: the socket is the single delivery order for
+            # both channels (a doorbell *is* the ring frame's FIFO slot),
+            # control frames carry themselves, and peer death is socket
+            # EOF. Commit latency is a socket wake-up, not a sleep quantum.
+            try:
+                ctrl = self._reader.read_frame(timeout=wait)
+            except EOFError:
+                self._peer_eof = True
+                continue
+            if ctrl is None:
+                return None
+            if ctrl[0] != wire.SHM_DOORBELL:
+                return ctrl
+            got = self._pop_ring()
+            if got is None:
+                # Commit happens-before the doorbell send, so an empty ring
+                # here is a protocol violation, not a race.
+                raise wire.WireError("doorbell rang on an empty ring")
+            return got
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        try:
+            self._send_ring.release()
+            self._recv_ring.release()
+            self._mv.release()
+            self._mm.close()
+        except BufferError:
+            # A decoded view still aliases the arena somewhere: leak the
+            # mapping rather than invalidate live buffers.
+            pass
+
+
+class Listener:
+    """Serving-side acceptor; every accepted connection is a
+    :class:`TcpTransport` that upgrades itself to shm when the client asks
+    (``accept_shm=False`` NACKs such requests instead)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 backlog: int = 16, accept_shm: bool = True,
+                 ring_bytes: int = DEFAULT_RING_BYTES,
+                 max_payload: int | None = None, poll_s: float = 0.2):
+        self._sock = socket.create_server((host, port), backlog=backlog)
+        self._sock.settimeout(poll_s)
+        self._accept_shm = accept_shm
+        self._ring_bytes = ring_bytes
+        self._max_payload = max_payload
+        self.host, self.port = self._sock.getsockname()[:2]
+
+    def accept(self, timeout: float | None = None) -> TcpTransport | None:
+        """Next connection or None on timeout; raises ``OSError`` once the
+        listener is closed."""
+        if timeout is not None:
+            self._sock.settimeout(timeout)
+        try:
+            sock, _ = self._sock.accept()
+        except (socket.timeout, TimeoutError):
+            return None
+        _tune(sock)
+        sock.settimeout(None)
+        return TcpTransport(sock, max_payload=self._max_payload,
+                            accept_shm=self._accept_shm,
+                            ring_bytes=self._ring_bytes)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+_LOOPBACK = {"localhost", "127.0.0.1", "::1", ""}
+
+
+def is_local_host(host: str) -> bool:
+    """Same-host detection for ``kind="auto"``: loopback names/addresses."""
+    return host in _LOOPBACK or host.startswith("127.")
+
+
+def resolve_kind(kind: str, host: str) -> str:
+    if kind == "auto":
+        return "shm" if is_local_host(host) else "tcp"
+    if kind not in ("tcp", "shm"):
+        raise ValueError(f"transport kind must be tcp|shm|auto, got {kind!r}")
+    return kind
+
+
+def connect(host: str, port: int, kind: str = "auto", *,
+            timeout: float | None = 10.0,
+            ring_bytes: int = DEFAULT_RING_BYTES,
+            max_payload: int | None = None) -> Transport:
+    """Dial a gateway and return a ready transport. ``auto`` tries the shm
+    upgrade against loopback peers and falls back to plain TCP when the
+    serving side refuses; ``shm`` makes refusal an error."""
+    want = resolve_kind(kind, host)
+    sock = socket.create_connection((host, port), timeout=timeout)
+    _tune(sock)
+    sock.settimeout(None)
+    if want == "tcp":
+        return TcpTransport(sock, max_payload=max_payload)
+    try:
+        return ShmRingTransport.establish(
+            sock, ring_bytes=ring_bytes, max_payload=max_payload,
+            timeout=10.0 if timeout is None else timeout)
+    except ShmUnavailable:
+        if kind != "auto":
+            try:
+                sock.close()
+            finally:
+                raise
+        return TcpTransport(sock, max_payload=max_payload)
+
+
+def listen(host: str = "127.0.0.1", port: int = 0, **kw) -> Listener:
+    return Listener(host, port, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Arena plumbing
+# ---------------------------------------------------------------------------
+
+def _create_arena(ring_bytes: int) -> tuple[str, mmap.mmap]:
+    """mkstemp + ftruncate + mmap one two-ring arena; prefers ``/dev/shm``
+    (tmpfs — guaranteed RAM-backed) and falls back to the default tmp dir,
+    which is still a correct same-host shared mapping."""
+    if ring_bytes < (1 << 12) or ring_bytes > (1 << 34):
+        raise ValueError(f"ring_bytes {ring_bytes} out of range")
+    size = _DATA_OFF + 2 * ring_bytes
+    shm_dir = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    fd, path = tempfile.mkstemp(prefix="apx-ring-", dir=shm_dir)
+    try:
+        os.ftruncate(fd, size)
+        mm = mmap.mmap(fd, size)
+    except BaseException:
+        os.close(fd)
+        _unlink_quiet(path)
+        raise
+    os.close(fd)
+    mm[:8] = _ARENA_MAGIC
+    _U64.pack_into(mm, 8, ring_bytes)
+    return path, mm
+
+
+def _unlink_quiet(path: str) -> None:
+    try:
+        os.unlink(path)
+    except OSError:
+        pass

@@ -86,8 +86,20 @@ class AsyncConfig:
                                      # serve actors/learners on other hosts
     ingest_max_inflight: int = 4     # un-acked blocks per remote actor (the
                                      # socket analogue of add_queue_depth)
+    transport: str = "auto"          # byte path for every remote hop (actor
+                                     # procs and learner_remote): "tcp",
+                                     # "shm" (same-host shared-memory ring,
+                                     # strict), or "auto" (shm when the peer
+                                     # is loopback-local, else tcp)
+    transport_ring_bytes: int = 0    # shm ring arena size per direction
+                                     # (0: repro.net default)
     wire_quantize_obs: bool = False  # remote actors ship obs via the replay
                                      # codec (uint8 + affine, ~4x less wire)
+    wire_quantize_prios: bool = False  # remote learner quantizes priority
+                                     # write-backs (lossy, uint8 + affine)
+    wire_quantize_params: bool = False  # remote learner quantizes PARAM_PUSH
+                                     # snapshots (lossy; actors then act on
+                                     # quantized params)
     sample_staging: bool = False     # wrap the learner's SampleSource in a
                                      # StagedSource: a stager thread device-
                                      # puts batch k+1 (pinned-host staging +
@@ -167,6 +179,13 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     if acfg.actor_procs < 0:
         raise ValueError("AsyncConfig.actor_procs must be >= 0, got "
                          f"{acfg.actor_procs}")
+    if acfg.transport not in ("tcp", "shm", "auto"):
+        raise ValueError("AsyncConfig.transport must be 'tcp', 'shm', or "
+                         f"'auto', got {acfg.transport!r}")
+    if (acfg.wire_quantize_prios or acfg.wire_quantize_params) and not remote:
+        raise ValueError(
+            "wire_quantize_prios/wire_quantize_params configure the remote "
+            "learner's upstream frames and require learner_remote")
     if remote and (acfg.actor_threads or acfg.actor_procs
                    or acfg.inference_batching or acfg.replay_shards != 1):
         raise ValueError(
@@ -231,9 +250,15 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     if acfg.actor_procs > 0 or serving:
         # Deferred import: repro.net sits on top of this module's siblings.
         from repro.net import ReplayGateway
-        gateway = ReplayGateway(fabric, store, host=acfg.gateway_host,
-                                port=acfg.gateway_port,
-                                add_timeout_s=acfg.add_poll_s)
+        from repro.net import transport as transport_lib
+        gateway = ReplayGateway(
+            fabric, store, host=acfg.gateway_host, port=acfg.gateway_port,
+            add_timeout_s=acfg.add_poll_s,
+            # A tcp-pinned runtime refuses ring upgrades outright; shm/auto
+            # let each client negotiate (cross-host peers stay tcp anyway).
+            accept_shm=acfg.transport != "tcp",
+            ring_bytes=(acfg.transport_ring_bytes
+                        or transport_lib.DEFAULT_RING_BYTES))
 
     # -- sample plane ------------------------------------------------------
     # The learner consumes a SampleSource and never reaches into fabric
@@ -241,11 +266,17 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     source: SampleSource | None = None
     if not serving:
         if remote:
+            from repro.net import transport as transport_lib
             from repro.net.learner_client import (RemoteFabricSource,
                                                   parse_hostport)
             host, port = parse_hostport(acfg.learner_remote)
-            source = RemoteFabricSource(host, port,
-                                        poll_s=acfg.starve_timeout_s)
+            source = RemoteFabricSource(
+                host, port, transport=acfg.transport,
+                poll_s=acfg.starve_timeout_s,
+                ring_bytes=(acfg.transport_ring_bytes
+                            or transport_lib.DEFAULT_RING_BYTES),
+                quantize_prios=acfg.wire_quantize_prios,
+                quantize_params=acfg.wire_quantize_params)
         else:
             source = LocalFabricSource(fabric)
         if acfg.sample_staging:
@@ -466,7 +497,10 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 host=dial_host, port=gateway.port,
                 actor_id=acfg.actor_threads + j, seed=acfg.seed,
                 max_inflight=acfg.ingest_max_inflight,
-                quantize_obs=acfg.wire_quantize_obs)
+                quantize_obs=acfg.wire_quantize_obs,
+                transport=acfg.transport,
+                **({"ring_bytes": acfg.transport_ring_bytes}
+                   if acfg.transport_ring_bytes else {}))
             p = ctx.Process(target=run_remote_actor, args=(spec,),
                             daemon=True, name=f"actor-proc-{j}")
             p.start()

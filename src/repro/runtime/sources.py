@@ -56,7 +56,9 @@ class SourceStats:
     """Client-side (learner-plane) counters, one instance per source."""
 
     batches: int = 0          # batches handed to the learner
-    writebacks: int = 0       # priority write-backs accepted
+    writebacks: int = 0       # priority write-back rounds accepted
+    writeback_frames: int = 0  # coalesced PRIORITY_UPDATE frames actually
+                               # sent (remote transports; <= writebacks)
     starved_polls: int = 0    # get_batch calls that returned None
     param_pushes: int = 0     # params shipped upstream (remote transports)
     staged: int = 0           # batches staged ahead (StagedSource)

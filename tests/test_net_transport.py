@@ -1,0 +1,425 @@
+"""Transport plane: scatter-gather encode identity, the tcp/shm Transport
+pair behind one API, ring wraparound + backpressure, the auto-upgrade
+handshake and its fallback, and teardown semantics (either side may win the
+shutdown race; a writer killed mid-frame must never hang the reader)."""
+
+import socket
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _apex_helpers import make_block, tiny_preset
+from _hypothesis_fallback import given, settings, st
+
+from repro.core import codec
+from repro.net import transport, wire
+from repro.net.gateway import ReplayGateway
+from repro.net.learner_client import RemoteFabricSource
+from repro.runtime import ParamStore
+from repro.runtime.sources import SourceClosed
+
+
+# --- scatter-gather encode: bitwise identity ---------------------------------
+
+def _join(segments) -> bytes:
+    return b"".join(bytes(memoryview(s)) for s in segments)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 96),
+       dim=st.integers(1, 48))
+def test_tree_iov_bitwise_identical_to_concatenated(seed, n, dim):
+    """Property (acceptance): the iovec encoder hands out buffer views whose
+    concatenation is byte-for-byte the classic single-buffer encoding —
+    leaves straddle the inline threshold in both directions."""
+    rng = np.random.RandomState(seed)
+    tree = {
+        "big_f32": rng.randn(n, dim).astype(np.float32),    # usually > 1 KiB
+        "tiny": rng.randint(0, 256, (3,), np.uint8),        # always inlined
+        "i64": rng.randint(-9, 9, (n,), np.int64),
+        "scalar": np.float32(rng.randn()),
+        "nested": {"a": rng.randn(dim).astype(np.float64),
+                   "b": {"deep": rng.randint(0, 2, (n, 2), np.uint8)}},
+    }
+    assert _join(wire.encode_tree_iov(tree)) == wire.encode_tree(tree)
+
+
+def test_block_batch_params_iov_twins_and_frames_identical():
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    assert _join(wire.encode_block_iov(block)) == wire.encode_block(block)
+    assert (_join(wire.encode_block_iov(block, quantize_obs=True))
+            == wire.encode_block(block, quantize_obs=True))
+
+    from repro.core.sampling import LearnerBatch
+    rng = np.random.default_rng(0)
+    lb = LearnerBatch(rng.integers(0, 99, 8).astype(np.int32),
+                      {"obs": rng.random((8, 2000)).astype(np.float32)},
+                      rng.random(8).astype(np.float32))
+    assert (_join(wire.encode_sample_batch_iov(lb))
+            == wire.encode_sample_batch(lb))
+
+    params = {"w": rng.random((700,)).astype(np.float32), "b": np.int32(3)}
+    assert _join(wire.encode_params_iov(9, params)) == wire.encode_params(
+        9, params)
+
+    # ... and the framed wire bytes are identical too (what actually ships)
+    payload = wire.encode_params(9, params)
+    framed = wire.frame(wire.PARAM, payload)
+    assert _join(wire.frame_iov(wire.PARAM,
+                                wire.encode_params_iov(9, params))) == framed
+
+
+# --- wire quantization beyond obs (satellite) --------------------------------
+
+def test_priority_update_quantized_round_trip():
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, 1 << 16, 64).astype(np.int32)
+    prios = rng.uniform(0.01, 4.0, 64).astype(np.float32)
+    raw = wire.encode_priority_update(idx, prios)
+    quant = wire.encode_priority_update(idx, prios, quantize=True)
+    assert len(quant) < len(raw)  # uint8 data beats fp32 at this size
+    idx2, prios2, counts = wire.decode_priority_update(quant)
+    np.testing.assert_array_equal(idx2, idx)  # keys stay exact
+    np.testing.assert_array_equal(counts, [64])
+    # priorities are affine-quantized: codec-accurate, not bit-exact
+    err = np.abs(prios2 - prios).max()
+    assert err <= (prios.max() - prios.min()) / 254
+
+
+def test_params_quantized_round_trip_and_exact_leaf_passthrough():
+    rng = np.random.default_rng(2)
+    params = {"w": (rng.standard_normal((64, 32)) * 0.3).astype(np.float32),
+              "step": np.int32(17),          # non-float: must stay bit-exact
+              "scale": np.float32(1.5)}      # scalar: stays bit-exact
+    version, dec = wire.decode_params(wire.encode_params(
+        5, params, quantize=True))
+    assert version == 5
+    assert dec["step"] == 17 and dec["step"].dtype == np.int32
+    assert dec["scale"] == np.float32(1.5)
+    w = params["w"]
+    assert np.abs(dec["w"] - w).max() <= (w.max() - w.min()) / 254
+
+
+def test_codec_single_api_dispatches_host_vs_device():
+    """Satellite: one ``codec.encode``/``decode`` serving both backends —
+    numpy in, numpy out (host path); jax in, jax out (device path) — with
+    the legacy ``encode_np``/``decode_np`` names aliased to the host path."""
+    x_np = np.linspace(-2, 2, 48, dtype=np.float32).reshape(6, 8)
+    enc_host = codec.encode(x_np)
+    assert isinstance(enc_host.data, np.ndarray)
+    assert isinstance(codec.decode(enc_host), np.ndarray)
+    enc_dev = codec.encode(jnp.asarray(x_np))
+    assert not isinstance(enc_dev.data, np.ndarray)
+    np.testing.assert_array_equal(enc_host.data, np.asarray(enc_dev.data))
+    np.testing.assert_array_equal(codec.decode(enc_host),
+                                  np.asarray(codec.decode(enc_dev)))
+    assert codec.encode_np is not None and codec.decode_np is not None
+    enc_legacy = codec.encode_np(x_np)
+    np.testing.assert_array_equal(enc_legacy.data, enc_host.data)
+
+
+# --- transport pairs ---------------------------------------------------------
+
+def _pair(kind, *, ring_bytes=1 << 16, accept_shm=True):
+    """A connected (client, server, listener) triple. For upgrade-seeking
+    kinds the server runs one recv to serve the in-band handshake."""
+    lst = transport.listen("127.0.0.1", 0, accept_shm=accept_shm,
+                           ring_bytes=ring_bytes)
+    box = {}
+
+    def srv():
+        conn = lst.accept(timeout=10.0)
+        box["server"] = conn
+        if kind != "tcp":
+            conn.recv(timeout=1.0)  # serves SHM_REQ (upgrade or NACK)
+
+    th = threading.Thread(target=srv, daemon=True)
+    th.start()
+    client = transport.connect("127.0.0.1", lst.port, kind,
+                               ring_bytes=ring_bytes)
+    th.join(timeout=10.0)
+    assert "server" in box
+    return client, box["server"], lst
+
+
+def _close_all(*closeables):
+    for c in closeables:
+        try:
+            c.close()
+        except Exception:
+            pass
+
+
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_transport_pair_round_trips_data_and_control(kind):
+    """Same bytes, either byte path: bulk data frames (ring on shm), small
+    data frames (socket even on shm — below the ring cutover), and control
+    frames (always socket) round trip bitwise in both directions, and both
+    ends agree on the negotiated kind."""
+    client, server, lst = _pair(kind)
+    try:
+        assert client.kind == kind and server.kind == kind
+        rng = np.random.default_rng(5)
+        # 32 KB of floats: above the ring cutover, so on shm this frame
+        # genuinely rides the ring (the int32 batch below stays sub-cutover
+        # and exercises the socket-routed data path).
+        payload = wire.encode_tree({"x": rng.random((8000,)).astype(np.float32)})
+        client.send(wire.ADD_BLOCK, payload)               # data plane
+        client.send(wire.HELLO, wire.encode_json({"hi": 1}))  # control plane
+        msg, got = server.recv(timeout=5.0)
+        assert msg == wire.ADD_BLOCK and bytes(got) == payload
+        msg, got = server.recv(timeout=5.0)
+        assert msg == wire.HELLO and wire.decode_json(got) == {"hi": 1}
+        # reverse direction, iovec payload
+        server.send(wire.SAMPLE_BATCH, wire.encode_tree_iov(
+            {"y": np.arange(500, dtype=np.int32)}))
+        msg, got = client.recv(timeout=5.0)
+        assert msg == wire.SAMPLE_BATCH
+        np.testing.assert_array_equal(wire.decode_tree(got)["y"],
+                                      np.arange(500, dtype=np.int32))
+        assert client.bytes_out > 0 and server.bytes_in > 0
+    finally:
+        _close_all(client, server, lst)
+
+
+def test_shm_small_ring_wraparound_under_backpressure():
+    """Many frames through a ring a fraction of their aggregate size: the
+    writer parks on ring-full, the reader frees space, every payload
+    survives the split copies bitwise."""
+    client, server, lst = _pair("shm", ring_bytes=1 << 12)  # 4 KiB ring
+    n_frames, errs = 48, []
+    rng = np.random.default_rng(6)
+    payloads = [wire.encode_tree({"d": rng.integers(0, 256, 1500)
+                                  .astype(np.uint8)}) for _ in range(n_frames)]
+
+    def producer():
+        try:
+            for p in payloads:
+                client.send(wire.ADD_BLOCK, p)
+        except Exception as e:  # pragma: no cover - surfaced by the assert
+            errs.append(e)
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    try:
+        for i in range(n_frames):
+            msg, got = server.recv(timeout=10.0)
+            assert msg == wire.ADD_BLOCK
+            assert bytes(got) == payloads[i], f"frame {i} corrupted"
+        th.join(timeout=10.0)
+        assert not errs
+    finally:
+        _close_all(client, server, lst)
+
+
+def test_shm_frame_exceeding_ring_is_rejected_not_wedged():
+    client, server, lst = _pair("shm", ring_bytes=1 << 12)
+    try:
+        with pytest.raises(wire.WireError, match="ring"):
+            client.send(wire.ADD_BLOCK, b"x" * (1 << 13))
+        # the connection survives the refusal
+        client.send(wire.ADD_BLOCK, b"ok")
+        msg, got = server.recv(timeout=5.0)
+        assert (msg, bytes(got)) == (wire.ADD_BLOCK, b"ok")
+    finally:
+        _close_all(client, server, lst)
+
+
+def test_auto_falls_back_to_tcp_when_refused_and_strict_shm_raises():
+    client, server, lst = _pair("auto", accept_shm=False)
+    try:
+        assert client.kind == "tcp" and server.kind == "tcp"
+        client.send(wire.ADD_BLOCK, b"still works")
+        msg, got = server.recv(timeout=5.0)
+        assert (msg, bytes(got)) == (wire.ADD_BLOCK, b"still works")
+    finally:
+        _close_all(client, server, lst)
+
+    lst2 = transport.listen("127.0.0.1", 0, accept_shm=False)
+    box = {}
+
+    def srv():
+        conn = lst2.accept(timeout=10.0)
+        box["server"] = conn
+        try:
+            conn.recv(timeout=1.0)
+        except EOFError:
+            pass
+
+    th = threading.Thread(target=srv, daemon=True)
+    th.start()
+    try:
+        with pytest.raises(transport.ShmUnavailable):
+            transport.connect("127.0.0.1", lst2.port, "shm")
+        th.join(timeout=10.0)
+    finally:
+        _close_all(box.get("server"), lst2)
+
+
+def test_ring_data_committed_before_control_is_delivered_first():
+    """The cross-channel ordering rule: a data frame committed to the ring
+    before a control frame's socket send is delivered before it — this is
+    what makes flush-writebacks-then-BYE race-free."""
+    client, server, lst = _pair("shm")
+    try:
+        # 4096 entries keeps the update above the ring cutover — the point
+        # is ring-vs-socket ordering, not the small-frame socket path.
+        client.send(wire.PRIORITY_UPDATE, wire.encode_priority_update(
+            np.arange(4096, dtype=np.int32), np.ones(4096, np.float32)))
+        client.send(wire.BYE, wire.encode_json({"rollouts": 1}))
+        time.sleep(0.05)  # let both frames become readable before one recv
+        msg, _ = server.recv(timeout=5.0)
+        assert msg == wire.PRIORITY_UPDATE
+        msg, _ = server.recv(timeout=5.0)
+        assert msg == wire.BYE
+    finally:
+        _close_all(client, server, lst)
+
+
+# --- teardown semantics (satellite) ------------------------------------------
+
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_teardown_drains_committed_frames_then_eof(kind):
+    """Either side may win the shutdown race: after the peer closes, frames
+    it committed before dying are still delivered, then EOFError — on both
+    byte paths."""
+    client, server, lst = _pair(kind)
+    try:
+        last_words = b"last words! " * 4096   # above the ring cutover
+        client.send(wire.ADD_BLOCK, last_words)
+        client.close()
+        msg, got = server.recv(timeout=5.0)
+        assert (msg, bytes(got)) == (wire.ADD_BLOCK, last_words)
+        with pytest.raises(EOFError):
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline:
+                server.recv(timeout=0.2)
+    finally:
+        _close_all(server, lst)
+
+
+def test_shm_reader_fails_fast_when_writer_killed_mid_frame():
+    """A writer killed mid-frame never published it (head only advances
+    after the last byte), so the reader must see clean EOF *fast* — not a
+    torn frame, not a hang."""
+    client, server, lst = _pair("shm")
+    try:
+        committed = b"committed" * 4096       # above the ring cutover
+        client.send(wire.ADD_BLOCK, committed)
+        # simulate death mid-write: bytes in the data area, head NOT bumped
+        ring = client._send_ring
+        i = ring.head % ring.size
+        ring._data[i:i + 64] = b"\xde" * 64
+        client._sock.close()  # the "process died" signal
+
+        msg, got = server.recv(timeout=5.0)   # committed frame survives
+        assert (msg, bytes(got)) == (wire.ADD_BLOCK, committed)
+        t0 = time.monotonic()
+        with pytest.raises(EOFError):
+            server.recv(timeout=10.0)
+        assert time.monotonic() - t0 < 5.0, "reader hung on a torn frame"
+    finally:
+        _close_all(client, server, lst)
+
+
+def test_shm_send_raises_transport_closed_when_peer_dies_with_ring_full():
+    client, server, lst = _pair("shm", ring_bytes=1 << 12)
+    errs = []
+
+    def producer():
+        try:
+            while True:
+                client.send(wire.ADD_BLOCK, b"z" * 1024)
+        except Exception as e:
+            errs.append(e)
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    try:
+        time.sleep(0.2)        # let the producer fill the ring and park
+        server.close()         # peer dies without ever consuming
+        th.join(timeout=10.0)
+        assert not th.is_alive(), "send wedged on a dead peer"
+        assert errs and isinstance(errs[0], transport.TransportClosed)
+    finally:
+        _close_all(client, lst)
+
+
+def test_shm_teardown_surfaces_source_closed_like_the_socket_path():
+    """Satellite: the learner-plane contract on the ring path — when the
+    serving gateway goes away, ``get_batch`` raises ``SourceClosed`` (fail
+    fast), exactly like the socket path."""
+
+    class StarvedFabric:
+        def get_batch(self, timeout=None):
+            return None
+
+        def write_back(self, indices, priorities):
+            pass
+
+    gw = ReplayGateway(StarvedFabric(), ParamStore({}),
+                       sample_timeout_s=0.01).start()
+    src = RemoteFabricSource(gw.host, gw.port, transport="shm").start()
+    try:
+        assert src.get_batch(timeout=1.0) is None  # connected and starved
+        assert src.transport_kind == "shm"
+        gw.stop()                                  # serving side wins teardown
+        t0 = time.monotonic()
+        with pytest.raises(SourceClosed):
+            deadline = time.monotonic() + 10.0
+            while time.monotonic() < deadline:
+                src.get_batch(timeout=0.2)
+        assert time.monotonic() - t0 < 8.0, "learner hung on a dead gateway"
+    finally:
+        src.stop()
+        gw.stop()
+
+
+# --- gateway over both transports (tier-1 matrix value) ----------------------
+
+class RecordingFabric:
+    def __init__(self):
+        self.blocks = []
+
+    def add(self, block, timeout=None):
+        self.blocks.append(block)
+        return True
+
+
+@pytest.mark.parametrize("kind", ["tcp", "shm"])
+def test_gateway_routes_blocks_over_either_transport(kind):
+    """The gateway's handler never knows which byte path a client chose:
+    blocks route into the fabric identically over tcp and shm, and the
+    stats record the upgrade."""
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    fabric = RecordingFabric()
+    gw = ReplayGateway(fabric, ParamStore({"w": jnp.zeros(2)})).start()
+    conn = transport.connect(gw.host, gw.port, kind)
+    try:
+        assert conn.kind == kind
+        conn.send(wire.HELLO, wire.encode_json(
+            {"actor_id": 0, "protocol": wire.PROTOCOL_VERSION}))
+        conn.send(wire.ADD_BLOCK, wire.encode_block_iov(block))
+        msg, _ = conn.recv(timeout=10.0)
+        assert msg == wire.ADD_ACK
+        assert len(fabric.blocks) == 1
+        np.testing.assert_array_equal(fabric.blocks[0].priorities,
+                                      np.asarray(block.priorities))
+        # params serve over the same connection
+        conn.send(wire.PARAM_PULL, wire.encode_json({"have": -1}))
+        msg, payload = conn.recv(timeout=10.0)
+        assert msg == wire.PARAM
+        version, got = wire.decode_params(payload)
+        assert version == 0
+        np.testing.assert_array_equal(got["w"], np.zeros(2, np.float32))
+        snap = gw.snapshot()
+        assert snap.blocks_in == 1
+        assert snap.shm_connections == (1 if kind == "shm" else 0)
+    finally:
+        conn.close()
+        gw.stop()
+    assert gw.error is None

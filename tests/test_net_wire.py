@@ -404,11 +404,21 @@ def test_sample_batch_and_priority_update_round_trip():
     assert out.is_weights.dtype == np.float32
     assert_tree_equal(out.items, batch["items"])
 
-    idx2, prios2 = wire.decode_priority_update(
+    idx2, prios2, counts = wire.decode_priority_update(
         wire.encode_priority_update(batch["indices"],
                                     batch["is_weights"] * 2.0))
     np.testing.assert_array_equal(idx2, batch["indices"])
     np.testing.assert_array_equal(prios2, batch["is_weights"] * 2.0)
+    # uncoalesced frames carry one round spanning every key
+    np.testing.assert_array_equal(counts, [len(batch["indices"])])
+    # coalesced: per-round lengths survive, and inconsistent ones are
+    # rejected before any write-back applies
+    _, _, counts2 = wire.decode_priority_update(wire.encode_priority_update(
+        batch["indices"], batch["is_weights"], counts=[10, 6]))
+    np.testing.assert_array_equal(counts2, [10, 6])
+    with pytest.raises(wire.WireError, match="counts"):
+        wire.decode_priority_update(wire.encode_priority_update(
+            batch["indices"], batch["is_weights"], counts=[10, 10]))
 
     with pytest.raises(wire.WireError, match="SAMPLE_BATCH"):
         wire.decode_sample_batch(wire.encode_tree({"nope": np.zeros(3)}))
@@ -429,7 +439,8 @@ def test_gateway_serves_sample_plane_against_real_fabric():
         wire.send_frame(sock, wire.SAMPLE_REQUEST)
         msg, payload = reader.read_frame(timeout=5.0)
         assert msg == wire.SAMPLE_BATCH and len(payload) == 0
-        assert gw.snapshot().sample_starved == 1
+        # the counter bump trails the reply send; poll instead of racing it
+        _await(lambda: gw.snapshot().sample_starved == 1)
 
         assert fabric.add(block, timeout=5.0)
         deadline = time.monotonic() + 10.0

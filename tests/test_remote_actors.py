@@ -3,6 +3,7 @@ the acceptance 2-actor-process run through ``AsyncConfig.actor_procs``, and
 the lax.scan learner-batching satellite."""
 
 import dataclasses
+import os
 import threading
 import time
 
@@ -138,10 +139,14 @@ def test_initial_slice_matches_runner_derivation():
 def test_run_async_two_actor_procs_end_to_end():
     """Acceptance: a 2-actor-process run via actor_procs reaches the replay
     min-fill gate and completes learner steps, with priority write-backs
-    landing on the correct shard."""
+    landing on the correct shard. The CI matrix sets REPRO_TEST_TRANSPORT
+    to pin the byte path (strict shm — no silent tcp fallback) instead of
+    the default auto negotiation."""
     preset = tiny_preset()
+    transport = os.environ.get("REPRO_TEST_TRANSPORT") or "auto"
     acfg = AsyncConfig(actor_threads=0, actor_procs=2, replay_shards=2,
-                       total_learner_steps=8, max_seconds=240.0, seed=3)
+                       total_learner_steps=8, max_seconds=240.0, seed=3,
+                       transport=transport)
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
                     preset.make_optimizer())
     s = res.stats
@@ -151,6 +156,8 @@ def test_run_async_two_actor_procs_end_to_end():
     assert s["replay_size"] > 0
     assert res.gateway_stats is not None
     assert res.gateway_stats.connections == 2
+    if transport == "shm":
+        assert res.gateway_stats.shm_connections == 2
     assert res.gateway_stats.blocks_in > 0
     assert res.gateway_stats.transitions_in == s["actor_transitions"]
     assert len(res.shard_stats) == 2

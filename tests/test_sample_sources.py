@@ -83,58 +83,78 @@ def assert_batches_bit_identical(a: LearnerBatch, b: LearnerBatch):
 @pytest.mark.parametrize("shards", [1, 2])
 def test_local_remote_staged_bit_identical(shards):
     """Acceptance property: same batches, same IS weights, same write-back
-    effect on the shard sum-trees, across all three transports."""
+    effect on the shard sum-trees, across every source implementation AND
+    both remote byte paths (tcp socket vs same-host shm ring) — the ring
+    upgrade must be invisible to the learner, bit for bit."""
     preset = sources_preset(shards)
     cfg, env, agent = preset.apex, preset.env, preset.agent
     blocks = [make_block(cfg, env, agent, seed=s) for s in range(BLOCKS)]
 
     fab_local = filled_fabric(preset, shards, blocks)
-    fab_remote = filled_fabric(preset, shards, blocks, fns=fab_local.fns)
+    fab_tcp = filled_fabric(preset, shards, blocks, fns=fab_local.fns)
+    fab_shm = filled_fabric(preset, shards, blocks, fns=fab_local.fns)
     fab_staged = filled_fabric(preset, shards, blocks, fns=fab_local.fns)
+    fabs = (fab_local, fab_tcp, fab_shm, fab_staged)
 
-    gw = ReplayGateway(fab_remote, ParamStore({}), sample_timeout_s=0.2)
-    gw.start()
+    gw_tcp = ReplayGateway(fab_tcp, ParamStore({}), sample_timeout_s=0.2,
+                           accept_shm=False).start()
+    gw_shm = ReplayGateway(fab_shm, ParamStore({}),
+                           sample_timeout_s=0.2).start()
     src_local = LocalFabricSource(fab_local).start()
-    src_remote = RemoteFabricSource(gw.host, gw.port).start()
+    src_tcp = RemoteFabricSource(gw_tcp.host, gw_tcp.port,
+                                 transport="tcp").start()
+    src_shm = RemoteFabricSource(gw_shm.host, gw_shm.port,
+                                 transport="shm").start()
     src_staged = StagedSource(LocalFabricSource(fab_staged)).start()
+    assert src_tcp.transport_kind == "tcp"
+    assert src_shm.transport_kind == "shm"
+    named = (("local", src_local), ("tcp", src_tcp), ("shm", src_shm),
+             ("staged", src_staged))
     k = 6
     try:
-        got = {name: drain_batches(src, k) for name, src in
-               (("local", src_local), ("remote", src_remote),
-                ("staged", src_staged))}
+        got = {name: drain_batches(src, k) for name, src in named}
         for i in range(k):
-            assert_batches_bit_identical(got["local"][i], got["remote"][i])
-            assert_batches_bit_identical(got["local"][i], got["staged"][i])
+            for name in ("tcp", "shm", "staged"):
+                assert_batches_bit_identical(got["local"][i], got[name][i])
 
         # Identical write-backs (deterministic synthetic priorities) must
         # land identically in every fabric's shard sum-trees.
         rng = np.random.default_rng(7)
         prios = [rng.uniform(0.1, 2.0, size=cfg.batch_size)
                  .astype(np.float32) for _ in range(k)]
-        for name, src in (("local", src_local), ("remote", src_remote),
-                          ("staged", src_staged)):
+        for name, src in named:
             for i in range(k):
                 src.write_back(np.asarray(got[name][i].indices), prios[i])
+        for src in (src_tcp, src_shm):
+            src._flush_writebacks()  # remote rounds park until the next
+                                     # sample request; ship them now
         # remote write-backs land asynchronously through the gateway
         deadline = time.monotonic() + 30.0
-        while gw.snapshot().priority_updates < k:
+        while (gw_tcp.snapshot().priority_updates < k
+               or gw_shm.snapshot().priority_updates < k):
             assert time.monotonic() < deadline
             time.sleep(0.01)
         assert src_local.stats.writebacks == k
         assert src_staged.stats.writebacks == k
+        # k rounds coalesced into one frame per flush on the remote paths
+        for src in (src_tcp, src_shm):
+            assert src.stats.writebacks == k
+            assert src.stats.writeback_frames == 1
     finally:
         src_staged.stop()
-        src_remote.stop()
-        gw.stop()
-        for f in (fab_local, fab_remote, fab_staged):
+        src_shm.stop()
+        src_tcp.stop()
+        gw_shm.stop()
+        gw_tcp.stop()
+        for f in fabs:
             f.stop()
-    assert gw.error is None
-    for f in (fab_local, fab_remote, fab_staged):
+    assert gw_tcp.error is None and gw_shm.error is None
+    assert gw_shm.snapshot().shm_connections == 1
+    for f in fabs:
         assert f.error is None
-    for s_local, s_remote, s_staged in zip(fab_local.replay_states(),
-                                           fab_remote.replay_states(),
-                                           fab_staged.replay_states()):
-        for other in (s_remote, s_staged):
+    for s_local, s_tcp, s_shm, s_staged in zip(*[f.replay_states()
+                                                 for f in fabs]):
+        for other in (s_tcp, s_shm, s_staged):
             np.testing.assert_array_equal(np.asarray(s_local.tree),
                                           np.asarray(other.tree))
             np.testing.assert_array_equal(np.asarray(s_local.size),
@@ -275,9 +295,16 @@ def test_remote_source_starved_returns_none():
                        sample_timeout_s=0.01).start()
     src = RemoteFabricSource(gw.host, gw.port).start()
     try:
-        assert src.get_batch(timeout=1.0) is None
-        assert src.stats.starved_polls >= 1
-        snap = gw.snapshot()
+        # Under full-suite CPU load the gateway's handler thread may not be
+        # scheduled within one client timeout — keep polling (every poll
+        # must yield None) until the request has landed server-side.
+        deadline = time.monotonic() + 30.0
+        while True:
+            assert src.get_batch(timeout=1.0) is None
+            assert src.stats.starved_polls >= 1
+            snap = gw.snapshot()
+            if snap.sample_requests >= 1 or time.monotonic() > deadline:
+                break
         assert snap.sample_requests >= 1
         assert snap.sample_starved >= 1
         assert snap.sample_sends == 0
@@ -304,6 +331,57 @@ def test_remote_source_param_push_publishes_at_gateway():
         src.stop()
         gw.stop()
     assert gw.error is None
+
+
+@pytest.mark.parametrize("transport", ["tcp", "shm"])
+def test_coalesced_writebacks_preserve_order_and_last_writer_wins(transport):
+    """Satellite: several write_back rounds ship as ONE coalesced
+    PRIORITY_UPDATE frame, and a key written twice keeps its *later*
+    priority — the wire semantics must equal per-round frames applied in
+    call order."""
+    preset = sources_preset(1)
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    blocks = [make_block(cfg, env, agent, seed=s) for s in range(BLOCKS)]
+    fab_direct = filled_fabric(preset, 1, blocks)
+    fab_remote = filled_fabric(preset, 1, blocks, fns=fab_direct.fns)
+    gw = ReplayGateway(fab_remote, ParamStore({}),
+                       sample_timeout_s=0.2).start()
+    src = RemoteFabricSource(gw.host, gw.port, transport=transport).start()
+    try:
+        batch = drain_batches(src, 1)[0]
+        idx = np.asarray(batch.indices)
+        # Three rounds touching overlapping keys: round 2 rewrites round 1's
+        # keys, round 3 rewrites a subset again. LWW = round 3 > 2 > 1.
+        rounds = [(idx, np.full(idx.shape, 0.125, np.float32)),
+                  (idx, np.full(idx.shape, 0.75, np.float32)),
+                  (idx[: len(idx) // 2 or 1],
+                   np.full((len(idx) // 2 or 1,), 2.5, np.float32))]
+        for r_idx, r_prio in rounds:
+            src.write_back(r_idx, r_prio)
+            fab_direct.write_back(r_idx, r_prio)  # reference: in-order frames
+        src._flush_writebacks()
+        deadline = time.monotonic() + 30.0
+        while gw.snapshot().priority_updates < len(rounds):
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        snap = gw.snapshot()
+        assert snap.priority_frames == 1          # one frame on the wire...
+        assert snap.priority_updates == len(rounds)  # ...carrying 3 rounds
+        assert src.stats.writeback_frames == 1
+        while fab_direct.snapshot().updates_applied < len(rounds):
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+    finally:
+        src.stop()
+        gw.stop()
+        fab_direct.stop()
+        fab_remote.stop()
+    assert gw.error is None
+    assert fab_direct.error is None and fab_remote.error is None
+    for s_direct, s_remote in zip(fab_direct.replay_states(),
+                                  fab_remote.replay_states()):
+        np.testing.assert_array_equal(np.asarray(s_direct.tree),
+                                      np.asarray(s_remote.tree))
 
 
 def test_parse_hostport():
@@ -334,10 +412,15 @@ def test_run_async_sample_staging_end_to_end():
     assert res.stats["param_version"] >= 1
 
 
-def test_run_async_serve_plus_remote_learner_loopback():
-    """The full two-process topology on loopback: one runtime serves actors
-    + fabric + gateway (no local learner), the other runs only the learner
-    against it; params flow back through PARAM_PUSH."""
+@pytest.mark.parametrize("transport", ["tcp", "shm"])
+def test_run_async_serve_plus_remote_learner_loopback(transport):
+    """The full two-process topology on loopback, over both byte paths: one
+    runtime serves actors + fabric + gateway (no local learner), the other
+    runs only the learner against it; params flow back through PARAM_PUSH.
+    Every assertion holds identically for tcp and shm — batch-level
+    bit-identity across the two paths is pinned down by
+    ``test_local_remote_staged_bit_identical`` (live runs sample on racing
+    clocks, so run-level trajectories are not comparable)."""
     preset = tiny_preset()
     s = socket.socket()
     s.bind(("127.0.0.1", 0))
@@ -351,7 +434,7 @@ def test_run_async_serve_plus_remote_learner_loopback():
             preset.apex,
             AsyncConfig(actor_threads=1, serve_sampling=True,
                         gateway_port=port, total_learner_steps=steps,
-                        max_seconds=180),
+                        transport=transport, max_seconds=180),
             preset.env, preset.agent, preset.make_optimizer())
 
     th = threading.Thread(target=serve, daemon=True)
@@ -360,7 +443,7 @@ def test_run_async_serve_plus_remote_learner_loopback():
         preset.apex,
         AsyncConfig(actor_threads=0, learner_remote=f"127.0.0.1:{port}",
                     total_learner_steps=steps, sample_staging=True,
-                    max_seconds=180),
+                    transport=transport, max_seconds=180),
         preset.env, preset.agent, preset.make_optimizer())
     th.join(timeout=180)
     assert not th.is_alive()
@@ -373,6 +456,9 @@ def test_run_async_serve_plus_remote_learner_loopback():
     assert g.priority_updates >= steps
     assert g.sample_sends >= steps
     assert g.param_pushes >= 1
+    assert g.shm_connections == (1 if transport == "shm" else 0)
+    # write-backs coalesced: never more frames than rounds
+    assert res.source_stats.writeback_frames <= res.source_stats.writebacks
     # the serving side's actors kept generating experience
     assert serve_res.stats["actor_transitions"] > 0
 
