@@ -31,11 +31,18 @@ from thread-safe fabric snapshots while hot. The acceptance bar: 2 actor
 processes sustain >= 1.3x the applied transitions/s of 1 actor process
 (``--check``).
 
+Two single-proc comparison legs ride along: the same-host shm ring
+transport (gate: >= 0.95x tcp 1-proc) and the pipelined ingest-staging
+drain, where shard owners stage block k+1's H2D put while block k's add
+runs (gate: >= --min-staged-ratio x the unstaged 1-proc rate — the
+pipeline must sustain the same offered load).
+
 Emitted rows (benchmarks/common.py CSV convention):
   remote_ingest/tps_procs{N}
   remote_ingest/speedup_2proc_vs_1proc
   remote_ingest/wire_mbps_procs{N}
   remote_ingest/tps_procs1_shm
+  remote_ingest/tps_procs1_staged
 
 JSON result set: ``benchmarks/artifacts/BENCH_remote_ingest.json`` plus the
 committed repo-root twin ``BENCH_remote_ingest.json`` (perf trajectory).
@@ -90,7 +97,7 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
                 shards: int = 2, quantize_obs: bool = False,
                 warm_timeout: float = 300.0, windows: int = 3,
                 gap_s: float = 0.5, actor_rate: float = 5.0,
-                transport: str = "tcp") -> dict:
+                transport: str = "tcp", ingest_staging: bool = False) -> dict:
     """One measurement: spawn ``procs`` actor processes, wait until each
     has landed ``warm_blocks`` blocks (compile + connect excluded from the
     clock), then read applied transitions/s from fabric snapshots over
@@ -111,7 +118,8 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
     item = phases.item_example(preset.env, obs, cfg.compress_obs)
     params = preset.agent.init(jax.random.key(0), obs[:1])
 
-    fabric = ReplayFabric(cfg, item, num_shards=shards).start()
+    fabric = ReplayFabric(cfg, item, num_shards=shards,
+                          ingest_staging=ingest_staging).start()
     gateway = ReplayGateway(fabric, ParamStore(params)).start()
     ctx = multiprocessing.get_context("spawn")
     workers = []
@@ -162,6 +170,7 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
             window_tps.append(applied / dt if dt > 0 else 0.0)
             window_mbps.append((g1.bytes_in - g0.bytes_in) / dt / 1e6
                                if dt > 0 else 0.0)
+        end_snap = fabric.snapshot()
     finally:
         gateway.stop()
         for p in workers:
@@ -182,7 +191,10 @@ def ingest_rate(preset, procs: int, seconds: float, warm_blocks: int = 3,
             "window_tps": window_tps, "window_mbps": window_mbps,
             "tps": statistics.median(window_tps),
             "wire_mbps": statistics.median(window_mbps),
-            "quantize_obs": quantize_obs}
+            "quantize_obs": quantize_obs,
+            "ingest_staging": ingest_staging,
+            "blocks_staged": end_snap.blocks_staged,
+            "h2d_us": end_snap.h2d_us}
 
 
 def main() -> int:
@@ -212,6 +224,12 @@ def main() -> int:
                          "measured separately)")
     ap.add_argument("--skip-shm-leg", action="store_true",
                     help="skip the single-proc shm comparison row")
+    ap.add_argument("--skip-staged-leg", action="store_true",
+                    help="skip the single-proc ingest-staging row")
+    ap.add_argument("--min-staged-ratio", type=float, default=0.99,
+                    help="gate: staged ingest tps vs the unstaged 1-proc "
+                         "row (>= 1.0x at measurement resolution — the "
+                         "pipeline must not cost throughput)")
     ap.add_argument("--json", default=None,
                     help="override the artifact path")
     args = ap.parse_args()
@@ -258,6 +276,25 @@ def main() -> int:
         emit("remote_ingest/wire_mbps_procs1_shm", row["seconds"] * 1e6,
              f"{row['wire_mbps']:.1f}")
 
+    # Pipelined ingest-staging leg: one paced actor, shard owners staging
+    # block k+1's H2D put while block k's add runs. At offered load the
+    # applied rate must match the unstaged 1-proc row (the pipeline adds no
+    # serial work; on a CPU host the stager passes through, so this leg
+    # gates the stage-ahead *ordering* — a pipelining bug that held or
+    # dropped a block would show up as applied < offered). On accelerator
+    # hosts the same leg records h2d_us/blocks_staged for the overlap.
+    staged_tps = None
+    if not args.skip_staged_leg:
+        row = ingest_rate(preset, 1, seconds, shards=args.shards,
+                          quantize_obs=args.quantize_obs,
+                          windows=args.windows,
+                          actor_rate=args.actor_rate,
+                          transport=args.transport, ingest_staging=True)
+        rows.append(row)
+        staged_tps = row["tps"]
+        emit("remote_ingest/tps_procs1_staged", row["seconds"] * 1e6,
+             f"{staged_tps:.0f}")
+
     medians = {n: statistics.median(all_tps[n]) for n in proc_counts}
     for n in proc_counts:
         emit(f"remote_ingest/tps_procs{n}",
@@ -286,6 +323,11 @@ def main() -> int:
         "transport": args.transport,
         "speedup_2proc_vs_1proc": speedup,
         "shm_tps_procs1": shm_tps,
+        "staged_tps_procs1": staged_tps,
+        "staged_ratio": (staged_tps / max(medians[1], 1e-9)
+                         if staged_tps is not None and 1 in medians
+                         else None),
+        "min_staged_ratio": args.min_staged_ratio,
         "median_tps": {str(n): medians[n] for n in proc_counts},
         "rows": rows,
     }, args.json)
@@ -304,6 +346,15 @@ def main() -> int:
                 print(f"FAIL: shm ingest only {shm_ratio:.2f}x the tcp "
                       f"1-proc rate (need >= 0.95x — the ring path must "
                       f"sustain the same offered load)", file=sys.stderr)
+                return 1
+        if staged_tps is not None and 1 in medians:
+            staged_ratio = staged_tps / max(medians[1], 1e-9)
+            if staged_ratio < args.min_staged_ratio:
+                print(f"FAIL: staged ingest only {staged_ratio:.2f}x the "
+                      f"unstaged 1-proc rate (need >= "
+                      f"{args.min_staged_ratio:.2f}x — the pipelined drain "
+                      f"must sustain the same offered load)",
+                      file=sys.stderr)
                 return 1
     return 0
 

@@ -17,6 +17,12 @@ Eviction strategies (both from the paper):
     experience alive longer (the paper's Fig. 5 hypothesis).
 
 Slots are the paper's "keys": a transition's global key is (shard, slot).
+
+Both add modes funnel into one ingest contract — packed items, slot indices,
+an ``applied`` lane mask — dispatched like the sum-tree hot ops: a fused
+Pallas kernel (``repro.kernels.replay_ingest``) does priority init, storage
+scatter, and tree repair in one VMEM round-trip on TPU, with the unfused
+XLA chain (:func:`ingest_unfused`) as the bit-identical fallback/oracle.
 """
 
 from __future__ import annotations
@@ -88,6 +94,54 @@ def _store(storage: Any, idx: jax.Array, items: Any) -> Any:
     return jax.tree.map(lambda buf, x: buf.at[idx].set(x.astype(buf.dtype)), storage, items)
 
 
+def ingest_unfused(
+    cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
+    idx: jax.Array, applied: jax.Array,
+) -> tuple[Any, jax.Array]:
+    """The pre-fusion ingest chain (XLA fallback and the fused op's oracle).
+
+    Three logical dispatches — leaf init, per-buffer storage scatter,
+    incremental tree write — with gather-then-scatter semantics throughout:
+    masked (``~applied``) lanes re-write their slot's *original* leaf and
+    row, so they are no-ops except under duplicate slots, where the scatter's
+    last-writer-wins applies. Out-of-range lanes (``add_alloc``'s overflow
+    fill value ``capacity``) drop on every scatter.
+    """
+    leaf = jnp.where(applied, prio.to_leaf(priorities, cfg.alpha),
+                     sumtree.leaves(state.tree)[idx])
+    storage = jax.tree.map(
+        lambda buf, x: buf.at[idx].set(
+            jnp.where(jnp.expand_dims(applied, tuple(range(1, x.ndim))),
+                      x.astype(buf.dtype), buf[idx])),
+        state.storage, items)
+    tree = sumtree.write(state.tree, idx, leaf)
+    return storage, tree
+
+
+def _ingest(
+    cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
+    idx: jax.Array, applied: jax.Array,
+) -> tuple[Any, jax.Array]:
+    """One fused ingest: priority init + storage scatter + tree repair.
+
+    Both add modes reduce to this contract once their slot indices and lane
+    mask are computed (FIFO cursor arithmetic / ``free_slot_idx``). Dispatch
+    follows the sum-tree hot ops (``set_backend`` / ``REPRO_SUMTREE_BACKEND``):
+    the Pallas kernel does the whole thing in one VMEM round-trip on TPU
+    (``interpret`` runs it under the interpreter for CPU CI); the ``xla``
+    backend keeps :func:`ingest_unfused`, which an enclosing jit fuses into
+    one XLA program. All paths are bit-identical.
+    """
+    bk = sumtree.hot_backend(cfg.capacity)
+    if bk in ("pallas", "interpret"):
+        from repro.kernels.replay_ingest.ops import replay_ingest
+        tree, storage = replay_ingest(
+            state.tree, state.storage, idx, priorities, applied, items,
+            alpha=cfg.alpha, interpret=(bk == "interpret"))
+        return storage, tree
+    return ingest_unfused(cfg, state, items, priorities, idx, applied)
+
+
 def add_fifo(
     cfg: ReplayConfig, state: ReplayState, items: Any, priorities: jax.Array,
     valid: jax.Array | None = None,
@@ -110,24 +164,11 @@ def add_fifo(
 
     offs = jnp.arange(batch, dtype=jnp.int32)
     idx = (state.write_pos + offs) % cfg.capacity
-    # Invalid tail lanes write to a parking slot = current write_pos of the tail
-    # position; simpler: clamp them onto the same indices but with zero priority
-    # and re-written storage — they will be immediately overwritten by the next
-    # add since write_pos only advances by n_valid.
-    leaf = jnp.where(offs < n_valid, prio.to_leaf(priorities, cfg.alpha), 0.0)
-    old_leaves = sumtree.leaves(state.tree)[idx]
-    keep_old = offs >= n_valid
-    leaf = jnp.where(keep_old, old_leaves, leaf)
-    storage = jax.tree.map(
-        lambda buf, x: buf.at[idx].set(
-            jnp.where(
-                jnp.expand_dims(keep_old, tuple(range(1, x.ndim))),
-                buf[idx], x.astype(buf.dtype),
-            )
-        ),
-        state.storage, items,
-    )
-    tree = sumtree.write(state.tree, idx, leaf)
+    # Invalid tail lanes land on the same circular indices but masked: they
+    # re-write their slot's old leaf/row (a no-op), and since write_pos only
+    # advances by n_valid the next add claims those slots anyway.
+    applied = offs < n_valid
+    storage, tree = _ingest(cfg, state, items, priorities, idx, applied)
     return ReplayState(
         storage=storage,
         tree=tree,
@@ -181,15 +222,7 @@ def add_alloc(
     offs = jnp.arange(batch, dtype=jnp.int32)
     # Lanes past the free-slot count would land on live slots: mask them out.
     applied = valid & (offs < num_free)
-    leaf = jnp.where(applied, prio.to_leaf(priorities, cfg.alpha),
-                     sumtree.leaves(state.tree)[idx])
-    storage = jax.tree.map(
-        lambda buf, x: buf.at[idx].set(
-            jnp.where(jnp.expand_dims(applied, tuple(range(1, x.ndim))), x.astype(buf.dtype), buf[idx])
-        ),
-        state.storage, items,
-    )
-    tree = sumtree.write(state.tree, idx, leaf)
+    storage, tree = _ingest(cfg, state, items, priorities, idx, applied)
     n_new = applied.sum().astype(jnp.int32)
     return ReplayState(
         storage=storage,

@@ -46,10 +46,12 @@ __all__ = [
     "rebuild",
     "sample",
     "sample_with_mass",
+    "sample_two_gather",
     "stratified_uniforms",
     "sample_stratified",
     "backend",
     "set_backend",
+    "hot_backend",
 ]
 
 # Process-wide backend for the hot ops (write / sample_with_mass):
@@ -91,9 +93,11 @@ def set_backend(name: str | None) -> None:
     _backend = name
 
 
-def _hot_backend(cap: int) -> str:
+def hot_backend(cap: int) -> str:
     """Backend for one hot-op call: the auto-selected Pallas path is gated
-    on the tree being VMEM-small; explicit choices pass through."""
+    on the tree being VMEM-small; explicit choices pass through. Shared by
+    every kernelized op that holds whole-tree state in VMEM (``write``,
+    ``sample_with_mass``, and ``repro.core.replay``'s fused ingest)."""
     bk = backend()
     if _backend is None and bk == "pallas" and cap > _PALLAS_AUTO_MAX_CAPACITY:
         return "xla"
@@ -193,7 +197,7 @@ def write(tree: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
     kernel on TPU, :func:`update` under XLA). Use :func:`write_rebuild` when
     the batch covers most of the tree (e.g. full-capacity rewrites).
     """
-    bk = _hot_backend(capacity(tree))
+    bk = hot_backend(capacity(tree))
     if bk in ("pallas", "interpret"):
         from repro.kernels.sumtree_update.ops import sumtree_update
         return sumtree_update(tree, idx, values, interpret=(bk == "interpret"))
@@ -225,19 +229,31 @@ def sample(tree: jax.Array, u: jax.Array) -> jax.Array:
     return jnp.clip(node - cap, 0, cap - 1)
 
 
+def sample_two_gather(tree: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The XLA form of the mass-emitting descent: plain :func:`sample`
+    followed by a leaf gather. Two logical gathers, but XLA fuses them into
+    one program with no kernel-launch boundary — on CPU/GPU hosts this is
+    the fastest shape, so it is the form the ``xla`` backend keeps (the
+    fused single-pass form only pays off where the descent kernel already
+    holds the leaf level in VMEM)."""
+    idx = sample(tree, u)
+    return idx, leaves(tree)[idx]
+
+
 def sample_with_mass(tree: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Fused descent: leaf ids *and* their masses ``p^alpha`` in one pass.
 
-    ``replay.sample`` needs both; fusing saves the second leaf gather (on the
-    Pallas backend the mass falls out of the final descent level). The mass
-    is bitwise ``leaves(tree)[idx]`` on every backend.
+    ``replay.sample`` needs both. Backend-dispatched per path: the Pallas
+    kernel emits the mass from the final descent level (no second tree
+    gather); the ``xla`` backend keeps :func:`sample_two_gather`, whose
+    descent + gather fuse into one XLA program anyway. The mass is bitwise
+    ``leaves(tree)[idx]`` on every backend.
     """
-    bk = _hot_backend(capacity(tree))
+    bk = hot_backend(capacity(tree))
     if bk in ("pallas", "interpret"):
         from repro.kernels.sumtree_sample.ops import sumtree_sample_with_mass
         return sumtree_sample_with_mass(tree, u, interpret=(bk == "interpret"))
-    idx = sample(tree, u)
-    return idx, leaves(tree)[idx]
+    return sample_two_gather(tree, u)
 
 
 def stratified_uniforms(rng: jax.Array, batch: int, total_mass: jax.Array) -> jax.Array:

@@ -1,0 +1,1 @@
+from repro.kernels.replay_ingest import ops, ref  # noqa: F401

@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: fused replay-block ingest (storage + leaf init + tree).
+
+The replay server's *add* hot path, as one kernel. The XLA form of an ingest
+is a chain of logical dispatches per block — priority init (``p^alpha``
+leaf values), a masked scatter into every storage buffer, and the
+incremental sum-tree write — each round-tripping the replay state through
+HBM. This kernel consumes the already-computed slot indices (FIFO cursor
+arithmetic or ``free_slot_idx``'s masked-cumsum compaction) plus the
+``applied`` lane mask and performs everything else in one VMEM round-trip:
+
+* *leaf values* — applied lanes take ``to_leaf(priority, alpha)`` (computed
+  in-kernel with the exact ``repro.core.priority.to_leaf`` formula); masked
+  lanes re-write their slot's *original* leaf, gathered from the input tree
+  — the gather-then-scatter semantics of the XLA reference, where every
+  lane's "old" value predates the whole batch.
+* *leaf + ancestor repair* — identical machinery to the ``sumtree_update``
+  kernel: last-writer-wins one-hot scatter at the leaf level, then each of
+  the log2(C) ancestor levels recomputed as ``left + right`` via an elected
+  representative lane, bit-identical to ``sumtree.update``.
+* *storage scatter* — each storage buffer lives whole in VMEM as a
+  ``(C, F)`` 2-D view; a serial walk over the block's lanes stores
+  ``applied ? item_row : original_row`` at the lane's slot. In-order
+  stores give last-writer-wins for duplicate slots; masked/out-of-range
+  lanes are skipped (``pl.when``), matching ``.at[idx].set``'s
+  drop-out-of-bounds scatter.
+
+Index handling matches the XLA scatters exactly: negatives in [-C, -1]
+wrap numpy-style, anything else outside [0, C) is dropped (``add_alloc``'s
+overflow lanes arrive as index C, so a full buffer sheds them instead of
+aliasing slot 0). TPU grids run sequentially and the outputs are revisited
+whole-array blocks, so later batch tiles observe earlier tiles' writes —
+cross-tile last-writer-wins — while the *gathers* of old values read the
+untouched input refs, preserving reference semantics for every lane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import priority as prio_lib
+
+
+def _last_writer(node: jax.Array, eligible: jax.Array, block_b: int) -> jax.Array:
+    """Mask of lanes that are the highest-numbered eligible writer of their
+    node value — the scatter's winner under duplicate indices."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_b, block_b), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_b, block_b), 1)
+    shadowed = (node[None, :] == node[:, None]) & (col > row) & eligible[None, :]
+    return eligible & ~jnp.any(shadowed, axis=1)
+
+
+def _kernel(*refs, depth: int, capacity: int, block_b: int, n_bufs: int,
+            alpha: float):
+    tree_ref = refs[0]
+    idx_ref, prio_ref, app_ref = refs[1:4]
+    buf_in = refs[4:4 + n_bufs]
+    item_in = refs[4 + n_bufs:4 + 2 * n_bufs]
+    out_tree = refs[4 + 2 * n_bufs]
+    buf_out = refs[5 + 2 * n_bufs:]
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_tree[...] = tree_ref[...]
+        for src, dst in zip(buf_in, buf_out):
+            dst[...] = src[...]
+
+    idx = idx_ref[...]                                      # (block_b,)
+    applied = app_ref[...] != 0
+    pr = prio_ref[...].astype(jnp.float32)
+
+    # numpy-style index handling, matching `.at[idx].set(mode="drop")`:
+    # negatives in [-C, -1] wrap, anything else out of [0, C) is dropped
+    idx = jnp.where(idx < 0, idx + capacity, idx)
+    in_range = (idx >= 0) & (idx < capacity)
+    slot = jnp.clip(idx, 0, capacity - 1)
+    node = slot + capacity
+    lane = jax.lax.broadcasted_iota(jnp.int32, (block_b, 2 * capacity), 1)
+
+    # Leaf values: applied lanes initialize to p^alpha; masked lanes re-write
+    # the slot's *original* leaf, gathered from the input tree (which no grid
+    # step mutates — the reference's gather-all-then-scatter semantics).
+    gsel = (lane == node[:, None]).astype(jnp.float32)
+    old_leaf = jnp.sum(gsel * tree_ref[...][None, :], axis=1)
+    val = jnp.where(applied, prio_lib.to_leaf(pr, alpha), old_leaf)
+
+    # Storage: serial walk over lanes — in-order stores are last-writer-wins
+    # under duplicate slots, and skipping out-of-range lanes is the scatter's
+    # drop. Old rows come from the (unmutated) input buffers.
+    def lane_body(b, carry):
+        @pl.when(in_range[b])
+        def _():
+            t = slot[b]
+            for src, dst, itm in zip(buf_in, buf_out, item_in):
+                old = pl.load(src, (pl.ds(t, 1), slice(None)))
+                new = pl.load(itm, (pl.ds(b, 1), slice(None)))
+                pl.store(dst, (pl.ds(t, 1), slice(None)),
+                         jnp.where(applied[b], new, old))
+        return carry
+
+    jax.lax.fori_loop(0, block_b, lane_body, 0)
+
+    # Tree repair on the *output* tree: leaf-level last-writer-wins scatter,
+    # then each ancestor level recomputed as left + right via an elected
+    # representative lane — the sumtree_update kernel's machinery verbatim.
+    tree = out_tree[...]
+    wins = _last_writer(node, in_range, block_b)
+    sel = (lane == node[:, None]) & wins[:, None]
+    tree = jnp.where(jnp.any(sel, axis=0),
+                     jnp.sum(jnp.where(sel, val[:, None], 0.0), axis=0),
+                     tree)
+
+    all_lanes = jnp.ones((block_b,), bool)
+
+    def level(_, carry):
+        tree, node = carry
+        node = node >> 1
+        lsel = (lane == (2 * node)[:, None]).astype(jnp.float32)
+        rsel = (lane == (2 * node + 1)[:, None]).astype(jnp.float32)
+        pval = (jnp.sum(lsel * tree[None, :], axis=1)
+                + jnp.sum(rsel * tree[None, :], axis=1))
+        rep = _last_writer(node, all_lanes, block_b)
+        sel = (lane == node[:, None]) & rep[:, None]
+        tree = jnp.where(jnp.any(sel, axis=0),
+                         jnp.sum(jnp.where(sel, pval[:, None], 0.0), axis=0),
+                         tree)
+        return tree, node
+
+    tree, _ = jax.lax.fori_loop(0, depth, level, (tree, node))
+    out_tree[...] = tree
+
+
+def replay_ingest_pallas(tree: jax.Array, storage, idx: jax.Array,
+                         priorities: jax.Array, applied: jax.Array, items,
+                         *, alpha: float = prio_lib.PRIORITY_EXPONENT,
+                         block_b: int = 128,
+                         interpret: bool = False):
+    """Fused ingest of one packed transition block.
+
+    ``tree`` (2C,) f32; ``storage`` a pytree of (C, ...) buffers; ``idx``
+    (B,) int32 slot ids; ``priorities`` (B,) raw |TD|; ``applied`` (B,)
+    lane mask (False lanes re-write their slot's old leaf/row — a no-op
+    for distinct slots); ``items`` a pytree of (B, ...) rows matching
+    ``storage``. Returns ``(new_tree, new_storage)``, bit-identical to the
+    three-dispatch reference ``repro.kernels.replay_ingest.ref``.
+    """
+    (two_c,) = tree.shape
+    capacity = two_c // 2
+    depth = capacity.bit_length() - 1
+    flat_bufs, treedef = jax.tree.flatten(storage)
+    flat_items = treedef.flatten_up_to(items)
+
+    (B,) = idx.shape
+    block_b = max(1, min(block_b, B)) if B else 1
+    pad = (-B) % block_b if B else block_b
+    idx = idx.astype(jnp.int32)
+    # bool refs are fragile on TPU; carry the mask as int32 lanes
+    applied = applied.astype(jnp.int32)
+    priorities = priorities.astype(jnp.float32)
+    # 2-D (rows, features) views: scalar leaves get a unit feature axis,
+    # higher-rank leaves flatten their trailing axes; items are pre-cast to
+    # the buffer dtype (the reference's `x.astype(buf.dtype)`).
+    shapes = [b.shape for b in flat_bufs]
+    bufs2d = [b.reshape(capacity, -1) for b in flat_bufs]
+    items2d = [x.astype(b.dtype).reshape(x.shape[0], -1)
+               for x, b in zip(flat_items, flat_bufs)]
+    if pad:
+        # padding lanes carry an always-dropped index (>= C; negative
+        # sentinels would wrap numpy-style and hit a real leaf)
+        idx = jnp.pad(idx, (0, pad), constant_values=capacity)
+        priorities = jnp.pad(priorities, (0, pad))
+        applied = jnp.pad(applied, (0, pad))
+        items2d = [jnp.pad(x, ((0, pad), (0, 0))) for x in items2d]
+    blocks = idx.shape[0] // block_b
+
+    kernel = functools.partial(_kernel, depth=depth, capacity=capacity,
+                               block_b=block_b, n_bufs=len(bufs2d),
+                               alpha=alpha)
+    lane_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=(
+            [pl.BlockSpec((two_c,), lambda i: (0,))]        # whole tree
+            + [lane_spec, lane_spec, lane_spec]
+            + [pl.BlockSpec(b.shape, lambda i: (0, 0)) for b in bufs2d]
+            + [pl.BlockSpec((block_b, x.shape[1]), lambda i: (i, 0))
+               for x in items2d]),
+        out_specs=(
+            [pl.BlockSpec((two_c,), lambda i: (0,))]        # revisited
+            + [pl.BlockSpec(b.shape, lambda i: (0, 0)) for b in bufs2d]),
+        out_shape=(
+            [jax.ShapeDtypeStruct((two_c,), tree.dtype)]
+            + [jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bufs2d]),
+        interpret=interpret,
+    )(tree, idx, priorities, applied, *bufs2d, *items2d)
+    new_tree = outs[0]
+    new_bufs = [o.reshape(s) for o, s in zip(outs[1:], shapes)]
+    return new_tree, jax.tree.unflatten(treedef, new_bufs)

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the fused replay ingest kernel (pytree-aware)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.core.priority import PRIORITY_EXPONENT
+from repro.kernels.replay_ingest.kernel import replay_ingest_pallas
+
+
+@partial(jax.jit, static_argnames=("alpha", "block_b", "interpret"))
+def replay_ingest(tree, storage, idx, priorities, applied, items, *,
+                  alpha: float = PRIORITY_EXPONENT, block_b: int = 128,
+                  interpret: bool = False):
+    """tree (2C,), storage pytree of (C, ...), idx (B,) slot ids,
+    priorities (B,) raw |TD|, applied (B,) lane mask, items pytree of
+    (B, ...) -> (new_tree, new_storage)."""
+    return replay_ingest_pallas(tree, storage, idx, priorities, applied,
+                                items, alpha=alpha, block_b=block_b,
+                                interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: the pre-fusion three-dispatch ingest chain.
+
+Exactly the ops ``repro.core.replay.add_fifo``/``add_alloc`` issued before
+the fused kernel existed — leaf init (``to_leaf`` under the ``applied``
+mask), a masked gather-then-scatter per storage buffer, and the incremental
+sum-tree write — in reference (XLA) form. The fused kernel must be
+bit-identical to this on any input, including duplicate slots, out-of-range
+(overflow) lanes, and masked lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+from repro.core import sumtree
+
+
+def replay_ingest_ref(tree, storage, idx, priorities, applied, items, *,
+                      alpha: float = prio.PRIORITY_EXPONENT):
+    """Three logical dispatches: leaf values, storage scatter, tree write.
+
+    All "old" values (masked lanes' leaves and rows) are gathered from the
+    *input* state before any scatter lands, and duplicate slots resolve
+    last-writer-wins — the semantics the fused kernel reproduces.
+    """
+    leaf = jnp.where(applied, prio.to_leaf(priorities, alpha),
+                     sumtree.leaves(tree)[idx])
+    new_storage = jax.tree.map(
+        lambda buf, x: buf.at[idx].set(
+            jnp.where(jnp.expand_dims(applied, tuple(range(1, x.ndim))),
+                      x.astype(buf.dtype), buf[idx])),
+        storage, items)
+    new_tree = sumtree.update(tree, idx, leaf)
+    return new_tree, new_storage

@@ -70,7 +70,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    serve_sampling: bool = False, gateway_port: int = 0,
                    gateway_host: str = "127.0.0.1", transport: str = "auto",
                    wire_quantize_prios: bool = False,
-                   wire_quantize_params: bool = False):
+                   wire_quantize_params: bool = False,
+                   ingest_staging: bool = False,
+                   add_queue_depth: int = 4, sample_queue_depth: int = 2):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
@@ -79,7 +81,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
     ``learner_remote`` turns this process into a pure learner sampling a
     remote fabric; ``serve_sampling`` turns it into the serving side
     (actors + fabric + gateway, no local learner); ``sample_staging``
-    double-buffers the learner's sample path through async device puts."""
+    double-buffers the learner's sample path through async device puts and
+    ``ingest_staging`` mirrors it on the add side (shard owners overlap
+    block k+1's H2D with block k's in-place update)."""
     acfg = AsyncConfig(actor_threads=actor_threads,
                        actor_procs=actor_procs,
                        replay_shards=replay_shards,
@@ -94,6 +98,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                        transport=transport,
                        wire_quantize_prios=wire_quantize_prios,
                        wire_quantize_params=wire_quantize_params,
+                       ingest_staging=ingest_staging,
+                       add_queue_depth=add_queue_depth,
+                       sample_queue_depth=sample_queue_depth,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -122,6 +129,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                   f"({g.sample_starved} starved polls), "
                   f"{g.priority_updates} priority write-backs in, "
                   f"{g.param_pushes} param pushes in")
+    if res.service_stats is not None and res.service_stats.blocks_staged:
+        print(f"  ingest staging: {res.service_stats.blocks_staged} blocks "
+              f"staged ahead (h2d issue ~{res.service_stats.h2d_us:.0f}us)")
     if res.source_stats is not None and res.source_stats.staged:
         ss = res.source_stats
         print(f"  staging: {ss.staged} batches staged ahead "
@@ -216,6 +226,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="double-buffer the learner's sample path: a stager "
                          "thread device-puts batch k+1 while the learner "
                          "computes on batch k (--runtime async)")
+    ap.add_argument("--ingest-staging", action="store_true",
+                    help="double-buffer the replay shards' add path: each "
+                         "owner thread issues block k+1's async device put "
+                         "before dispatching block k's in-place update "
+                         "(--runtime async; pass-through on CPU hosts)")
+    ap.add_argument("--add-queue-depth", type=int, default=4,
+                    help="bounded actor->replay queue depth per shard "
+                         "(--runtime async); full queues backpressure "
+                         "actors")
+    ap.add_argument("--sample-queue-depth", type=int, default=2,
+                    help="replay->learner prefetch depth per shard "
+                         "(--runtime async); 2 = classic double buffering")
     ap.add_argument("--learner-remote", metavar="HOST:PORT", default=None,
                     help="run ONLY the learner here, sampling the replay "
                          "fabric served by a --serve-sampling run at "
@@ -263,6 +285,9 @@ def validate_args(ap: argparse.ArgumentParser,
                   ("--learn-batches", args.learn_batches != 1),
                   ("--wire-quantize-obs", args.wire_quantize_obs),
                   ("--sample-staging", args.sample_staging),
+                  ("--ingest-staging", args.ingest_staging),
+                  ("--add-queue-depth", args.add_queue_depth != 4),
+                  ("--sample-queue-depth", args.sample_queue_depth != 2),
                   ("--learner-remote", args.learner_remote is not None),
                   ("--serve-sampling", args.serve_sampling),
                   ("--gateway-port", args.gateway_port != 0),
@@ -291,6 +316,12 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error(f"--actor-procs must be >= 0, got {args.actor_procs}")
     if args.replay_shards < 1:
         ap.error(f"--replay-shards must be >= 1, got {args.replay_shards}")
+    if args.add_queue_depth < 1:
+        ap.error("--add-queue-depth must be >= 1 (a bounded queue is what "
+                 f"backpressures actors), got {args.add_queue_depth}")
+    if args.sample_queue_depth < 1:
+        ap.error("--sample-queue-depth must be >= 1 (the learner prefetch "
+                 f"buffer), got {args.sample_queue_depth}")
 
     if args.learner_remote is not None:
         from repro.net.learner_client import parse_hostport
@@ -307,6 +338,9 @@ def validate_args(ap: argparse.ArgumentParser,
                      ("--replay-shards", args.replay_shards != 1),
                      ("--inference-batching", args.inference_batching),
                      ("--wire-quantize-obs", args.wire_quantize_obs),
+                     ("--ingest-staging", args.ingest_staging),
+                     ("--add-queue-depth", args.add_queue_depth != 4),
+                     ("--sample-queue-depth", args.sample_queue_depth != 2),
                      ("--gateway-port", args.gateway_port != 0),
                      ("--gateway-host", args.gateway_host != "127.0.0.1")]
         used = [name for name, on in conflicts if on]
@@ -393,7 +427,9 @@ def main():
                            args.serve_sampling, args.gateway_port,
                            args.gateway_host, args.transport,
                            args.wire_quantize_prios,
-                           args.wire_quantize_params)
+                           args.wire_quantize_params,
+                           args.ingest_staging,
+                           args.add_queue_depth, args.sample_queue_depth)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

@@ -122,7 +122,8 @@ class ReplayFabric:
     def __init__(self, cfg, item_example: Any, *, num_shards: int = 1,
                  batch_size: int | None = None, add_queue_depth: int = 4,
                  sample_queue_depth: int = 2, seed: int = 0,
-                 poll_s: float = 0.05, fns: ShardFns | None = None):
+                 poll_s: float = 0.05, fns: ShardFns | None = None,
+                 ingest_staging: bool = False):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         batch = batch_size or cfg.batch_size
@@ -151,7 +152,8 @@ class ReplayFabric:
                         batch_size=self.sub_batch,
                         add_queue_depth=add_queue_depth,
                         sample_queue_depth=sample_queue_depth,
-                        seed=seed + k, shard_id=k, fns=fns, poll_s=poll_s)
+                        seed=seed + k, shard_id=k, fns=fns, poll_s=poll_s,
+                        ingest_staging=ingest_staging)
             for k in range(num_shards)]
         self._poll_s = poll_s
         self._ticket = 0

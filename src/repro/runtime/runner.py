@@ -105,6 +105,13 @@ class AsyncConfig:
                                      # puts batch k+1 (pinned-host staging +
                                      # async DMA on TPU) while the learner
                                      # computes on batch k
+    ingest_staging: bool = False     # the add-side mirror: shard owners
+                                     # issue block k+1's async device_put
+                                     # (BlockStager) before dispatching
+                                     # block k's in-place add, hiding H2D
+                                     # behind the update kernel (pass-
+                                     # through on CPU hosts; bit-identical
+                                     # everywhere)
     learner_remote: str | None = None  # "host:port" of a serving gateway:
                                      # run ONLY the learner here, sampling a
                                      # remote fabric (requires
@@ -187,15 +194,18 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             "wire_quantize_prios/wire_quantize_params configure the remote "
             "learner's upstream frames and require learner_remote")
     if remote and (acfg.actor_threads or acfg.actor_procs
-                   or acfg.inference_batching or acfg.replay_shards != 1):
+                   or acfg.inference_batching or acfg.replay_shards != 1
+                   or acfg.ingest_staging):
         raise ValueError(
             "AsyncConfig.learner_remote runs a learner-only process: the "
             "actors, replay shards, and inference server live on the "
             "serving host — set actor_threads=0, actor_procs=0, "
-            "replay_shards=1, inference_batching=False (got "
+            "replay_shards=1, inference_batching=False, "
+            "ingest_staging=False (got "
             f"threads={acfg.actor_threads}, procs={acfg.actor_procs}, "
             f"shards={acfg.replay_shards}, "
-            f"inference_batching={acfg.inference_batching})")
+            f"inference_batching={acfg.inference_batching}, "
+            f"ingest_staging={acfg.ingest_staging})")
     if serving and (acfg.sample_staging or acfg.learn_batches_per_step != 1):
         raise ValueError(
             "serve_sampling runs no local learner: sample_staging and "
@@ -217,6 +227,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     if acfg.learn_batches_per_step < 1:
         raise ValueError("AsyncConfig.learn_batches_per_step must be >= 1, "
                          f"got {acfg.learn_batches_per_step}")
+    if acfg.add_queue_depth < 1 or acfg.sample_queue_depth < 1:
+        raise ValueError(
+            "AsyncConfig.add_queue_depth and sample_queue_depth must be "
+            ">= 1: the runtime relies on bounded queues for actor "
+            "backpressure and learner double buffering (got "
+            f"add={acfg.add_queue_depth}, sample={acfg.sample_queue_depth})")
     if acfg.inference_batching and acfg.actor_threads < 1:
         raise ValueError("inference_batching needs in-process actor threads")
     cfg = _actor_geometry(cfg, acfg)
@@ -241,7 +257,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     fabric = None if remote else ReplayFabric(
         cfg, item, num_shards=acfg.replay_shards,
         add_queue_depth=acfg.add_queue_depth,
-        sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1)
+        sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1,
+        ingest_staging=acfg.ingest_staging)
     server = (InferenceServer(cfg, env, agent, store,
                               max_batch=acfg.actor_threads,
                               coalesce_s=acfg.coalesce_s)
@@ -467,8 +484,9 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                   f"sampled_batches={snap.batches_sampled} "
                   f"writebacks={snap.updates_applied} "
                   f"replay_size~{snap.replay_size} "
-                  f"lat_us(add/sample/wb)={snap.add_us:.0f}/"
-                  f"{snap.sample_us:.0f}/{snap.writeback_us:.0f} "
+                  f"lat_us(add/sample/wb/h2d)={snap.add_us:.0f}/"
+                  f"{snap.sample_us:.0f}/{snap.writeback_us:.0f}/"
+                  f"{snap.h2d_us:.0f} "
                   f"params_v{store.version}")
 
     # -- drive ------------------------------------------------------------

@@ -71,6 +71,13 @@ class ServiceStats:
     add_us: float = 0.0            # EMA applied-latency per op kind, in
     sample_us: float = 0.0         # microseconds (0.0 until first sample;
     writeback_us: float = 0.0      # fabric aggregation averages, not sums)
+    h2d_us: float = 0.0            # EMA *issue* latency of the ingest
+                                   # stager's async device_put (the DMA
+                                   # itself overlaps the previous add; 0.0
+                                   # when staging is off or passes through)
+    blocks_staged: int = 0         # blocks whose H2D put was issued ahead
+                                   # by the ingest stager (0 on CPU, where
+                                   # staging passes through)
 
     @classmethod
     def aggregate(cls, snaps: "list[ServiceStats]") -> "ServiceStats":
@@ -128,7 +135,8 @@ class ReplayShard:
                  batch_size: int | None = None, add_queue_depth: int = 4,
                  sample_queue_depth: int = 2, seed: int = 0,
                  shard_id: int = 0, fns: ShardFns | None = None,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05, ingest_staging: bool = False,
+                 stager: "Any | None" = None):
         self._cfg = cfg
         # Private copy: add/writeback *donate* the state into jit, deleting
         # its buffers. Copying here keeps the caller's reference readable
@@ -139,6 +147,15 @@ class ReplayShard:
         self._fns = fns or make_shard_fns(cfg, batch_size or cfg.batch_size)
         self._poll_s = poll_s
         self.shard_id = shard_id
+        # Ingest staging (mirror of the sample plane's StagedSource): the
+        # owner loop issues block k+1's async device_put before dispatching
+        # block k's add, hiding H2D behind the update. An explicit ``stager``
+        # (tests) wins over the flag; the default BlockStager passes through
+        # on CPU hosts where a put would serialize a redundant copy.
+        if stager is None and ingest_staging:
+            from repro.runtime.sources import BlockStager
+            stager = BlockStager()
+        self._stager = stager
 
         self._ready = False  # sticky min-fill latch (see _can_sample)
         self._add_q: queue.Queue = queue.Queue(maxsize=add_queue_depth)
@@ -257,6 +274,27 @@ class ReplayShard:
                     else prev + _LATENCY_EMA_WEIGHT * (us - prev))
         return out
 
+    def _stage_block(self, block: phases.TransitionBlock):
+        """Issue the async H2D put for a block (no-op without a stager).
+
+        The put's *issue* time feeds the ``h2d_us`` EMA — deliberately not
+        synced: the transfer itself is the thing being overlapped, so timing
+        its completion would serialize exactly what staging hides."""
+        if self._stager is None:
+            return block
+        before = self._stager.blocks_staged
+        t0 = time.perf_counter()
+        staged = self._stager.stage(block)
+        us = 1e6 * (time.perf_counter() - t0)
+        if self._stager.blocks_staged == before:  # passed through
+            return staged
+        with self._stats_lock:
+            self.stats.blocks_staged += 1
+            prev = self.stats.h2d_us
+            self.stats.h2d_us = (us if prev == 0.0
+                                 else prev + _LATENCY_EMA_WEIGHT * (us - prev))
+        return staged
+
     def _apply_add(self, block: phases.TransitionBlock) -> None:
         self._state = self._timed("add", self._fns.add, self._state, block)
         self._bump(blocks_added=1,
@@ -326,14 +364,25 @@ class ReplayShard:
             # a permanently non-empty add queue. One queue's worth per
             # iteration keeps ingest at full rate while the prefetch/
             # write-back steps stay scheduled (an unbounded queue —
-            # maxsize 0 — gets a fixed chunk instead).
+            # maxsize 0 — gets a fixed chunk instead). The drain is
+            # *pipelined* when an ingest stager is attached: block k+1's
+            # async device_put is issued before block k's add dispatches,
+            # so the H2D transfer overlaps the in-place update; the last
+            # staged block is flushed when the queue runs dry (holding it
+            # across iterations would stall min-fill under sparse traffic).
+            staged_prev = None
             for _ in range(self._add_q.maxsize or _SIZE_REFRESH_OPS):
                 try:
                     block = self._add_q.get_nowait()
                 except queue.Empty:
                     break
-                self._apply_add(block)
+                staged_next = self._stage_block(block)
+                if staged_prev is not None:
+                    self._apply_add(staged_prev)
+                staged_prev = staged_next
                 progressed = True
+            if staged_prev is not None:
+                self._apply_add(staged_prev)
 
             if self._stop.is_set():
                 if self._add_q.empty() and self._update_q.empty():
@@ -345,7 +394,9 @@ class ReplayShard:
                     block = self._add_q.get(timeout=0.002)
                 except queue.Empty:
                     continue
-                self._apply_add(block)
+                # A lone block has no overlap partner, but staging it still
+                # turns the in-jit transfer into an explicit counted put.
+                self._apply_add(self._stage_block(block))
 
         size = int(self._state.size)
         with self._stats_lock:

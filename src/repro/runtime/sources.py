@@ -22,6 +22,11 @@ same loop runs against
   through pinned host memory with an async DMA; on CPU it degrades to a
   (possibly zero-copy) alias, keeping numerics bit-identical everywhere.
 
+:class:`BlockStager` is the same double-buffering idea pointed at the
+*ingest* plane: replay shard owners use it to overlap block k+1's H2D
+transfer with block k's in-place add (``ReplayShard(ingest_staging=True)``).
+It lives here because it is ``StagedSource._stage`` as a standalone object.
+
 All sources yield ``repro.core.sampling.LearnerBatch`` — global
 ``(shard, slot)`` keys, items, globally-corrected IS weights — and accept
 write-backs of any subset/order of those keys, which is what makes the
@@ -41,6 +46,47 @@ import jax
 from repro.core.sampling import LearnerBatch
 from repro.runtime.fabric import ReplayFabric
 from repro.runtime.service import ServiceStats
+
+
+class BlockStager:
+    """Ingest-side twin of :class:`StagedSource`'s device staging.
+
+    The sample plane double-buffers D2H-ward transfers; this is the same
+    machinery pointed the other way: the shard owner calls :meth:`stage` on
+    an incoming ``TransitionBlock`` *before* dispatching the previous
+    block's in-place add, so the async ``jax.device_put`` (pinned-host
+    staging + DMA on TPU) of block k+1 overlaps the update kernel running
+    on block k. ``device_put`` is value-preserving, so a staged pipeline is
+    bit-identical to an unstaged one.
+
+    On a CPU "device" host and device memory are one address space and PJRT
+    runs transfers on the compute stream — a put would serialize a redundant
+    copy — so staging degrades to pass-through there, exactly like
+    ``StagedSource`` (``passthrough`` can be forced off in tests to exercise
+    the put path anywhere). Leaves already resident on the target device
+    (thread-actor blocks) pass through untouched; the put only pays off for
+    host-resident blocks, i.e. gateway-decoded numpy arrays.
+    """
+
+    def __init__(self, device: Any = None, passthrough: bool | None = None):
+        self._device = device if device is not None else jax.devices()[0]
+        self.passthrough = (getattr(self._device, "platform", None) == "cpu"
+                            if passthrough is None else passthrough)
+        self.blocks_staged = 0  # blocks that actually issued a device put
+
+    def stage(self, block: Any) -> Any:
+        """Issue the async H2D put for every host-resident leaf of a block."""
+        if self.passthrough:
+            return block
+
+        def put(x: Any) -> Any:
+            if isinstance(x, jax.Array) and x.devices() == {self._device}:
+                return x
+            return jax.device_put(x, self._device)
+
+        staged = jax.tree.map(put, block)
+        self.blocks_staged += 1
+        return staged
 
 
 class SourceClosed(RuntimeError):

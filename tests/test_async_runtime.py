@@ -1,6 +1,8 @@
 """Async runtime: shared phases, snapshot store, replay-service queue
-behaviour (backpressure + starvation), and an end-to-end decoupled run."""
+behaviour (backpressure + starvation), ingest staging, and an end-to-end
+decoupled run."""
 
+import os
 import threading
 import time
 
@@ -13,6 +15,12 @@ from _apex_helpers import init_actor, item_example, make_block, tiny_preset
 from repro.core import apex, replay as replay_lib
 from repro.runtime import (AsyncConfig, ParamStore, ReplayService, phases,
                            run_async)
+from repro.runtime.sources import BlockStager
+
+# CI matrix leg: REPRO_TEST_INGEST_STAGING=1 re-runs the end-to-end test
+# with the pipelined ingest stager attached (pass-through puts on CPU, so
+# it exercises the stage-ahead ordering, not the DMA).
+INGEST_STAGING = bool(os.environ.get("REPRO_TEST_INGEST_STAGING"))
 
 
 # --- shared phases ----------------------------------------------------------
@@ -181,12 +189,82 @@ def test_priority_writeback_applied_on_drain():
     assert service.learner_steps == 1
 
 
+# --- ingest staging ----------------------------------------------------------
+
+def test_block_stager_put_path_bit_identical():
+    """Forcing the put path on a CPU host must still be value-preserving:
+    staged leaves land on the device bitwise-equal, already-resident leaves
+    pass through untouched, and the default stager passes through on CPU."""
+    preset = tiny_preset()
+    block = make_block(preset.apex, preset.env, preset.agent)
+    host = jax.tree.map(np.asarray, block)   # gateway-style numpy leaves
+    stager = BlockStager(passthrough=False)
+    staged = stager.stage(host)
+    assert stager.blocks_staged == 1
+    for got, want in zip(jax.tree.leaves(staged), jax.tree.leaves(block)):
+        assert isinstance(got, jax.Array)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # device-resident leaves are not re-put (no redundant copy/dispatch)
+    again = stager.stage(staged)
+    for a, b in zip(jax.tree.leaves(again), jax.tree.leaves(staged)):
+        assert a is b
+    default = BlockStager()                  # auto-detect: CPU passes through
+    assert default.passthrough
+    assert default.stage(host) is host
+    assert default.blocks_staged == 0
+
+
+def test_staged_shard_matches_unstaged_and_reports_h2d():
+    """A shard with a (forced-put) ingest stager must produce the exact
+    replay state of an unstaged shard over the same add stream, while the
+    h2d_us / blocks_staged counters populate."""
+    preset = tiny_preset(min_fill=10**6)     # sampler stays quiet
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    blocks = [make_block(cfg, env, agent, seed=s) for s in range(3)]
+
+    def run(stager):
+        svc = ReplayService(cfg, empty_replay(cfg, env), stager=stager).start()
+        try:
+            for b in blocks:
+                assert svc.add(b, timeout=5.0)
+        finally:
+            svc.stop()
+        return svc
+
+    plain = run(None)
+    staged = run(BlockStager(passthrough=False))
+    np.testing.assert_array_equal(np.asarray(staged.replay_state.tree),
+                                  np.asarray(plain.replay_state.tree))
+    for got, want in zip(jax.tree.leaves(staged.replay_state.storage),
+                         jax.tree.leaves(plain.replay_state.storage)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert plain.stats.blocks_staged == 0
+    assert staged.stats.blocks_staged == len(blocks)
+    assert staged.stats.h2d_us > 0.0
+
+
+def test_run_async_staged_ingest_end_to_end():
+    """The pipelined staged drain (stage k+1 before applying k, flush at
+    queue-dry) must preserve every end-to-end invariant."""
+    preset = tiny_preset()
+    acfg = AsyncConfig(actor_threads=2, total_learner_steps=4,
+                       max_seconds=60.0, seed=5, ingest_staging=True)
+    res = run_async(preset.apex, acfg, preset.env, preset.agent,
+                    preset.make_optimizer())
+    assert res.stats["learner_steps"] == 4
+    assert res.service_stats.updates_applied == 4
+    assert res.service_stats.transitions_added == res.stats["actor_transitions"]
+    # CPU host: the default stager passes through (no puts to count)
+    assert res.service_stats.blocks_staged == 0
+
+
 # --- end to end -------------------------------------------------------------
 
 def test_run_async_end_to_end():
     preset = tiny_preset()
     acfg = AsyncConfig(actor_threads=2, total_learner_steps=8,
-                       max_seconds=60.0, seed=3)
+                       max_seconds=60.0, seed=3,
+                       ingest_staging=INGEST_STAGING)
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
                     preset.make_optimizer())
     s = res.stats

@@ -6,11 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import sumtree
+from repro.core import priority as prio, sumtree
 from repro.core.nstep import from_trajectory
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.nstep_return.ops import nstep_return
+from repro.kernels.replay_ingest.ops import replay_ingest
+from repro.kernels.replay_ingest.ref import replay_ingest_ref
 from repro.kernels.sumtree_sample.ops import (sumtree_sample,
                                               sumtree_sample_with_mass)
 from repro.kernels.sumtree_update.ops import sumtree_update
@@ -106,6 +108,109 @@ def test_sumtree_update_kernel_cross_block_last_writer_wins():
     ref = sumtree.write_rebuild(tree, idx, vals)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
     assert float(sumtree.leaves(got)[5]) == 6.0
+
+
+def _ingest_case(cap, B, seed):
+    """Random fused-ingest inputs: a partially-filled tree, a mixed-dtype
+    storage pytree (matrix, int32 vector, scalar leaf), duplicate slots,
+    overflow lanes (idx == C, the alloc path's drop sentinel) and a mixed
+    applied mask."""
+    rng = np.random.RandomState(seed)
+    leaves = (rng.uniform(0, 10, cap) * (rng.uniform(size=cap) > 0.3))
+    tree = sumtree.rebuild(jnp.asarray(leaves.astype(np.float32)))
+    storage = {"obs": jnp.asarray(rng.normal(size=(cap, 5)).astype(np.float32)),
+               "act": jnp.asarray(rng.randint(0, 7, cap).astype(np.int32)),
+               "ret": jnp.asarray(rng.normal(size=cap).astype(np.float32))}
+    items = {"obs": jnp.asarray(rng.normal(size=(B, 5)).astype(np.float32)),
+             "act": jnp.asarray(rng.randint(0, 7, B).astype(np.int32)),
+             "ret": jnp.asarray(rng.normal(size=B).astype(np.float32))}
+    idx = rng.randint(0, cap + 1, B)           # cap == dropped overflow lane
+    if B >= 4:                                 # force duplicate writers
+        idx[1] = idx[0]
+        idx[3] = idx[0]
+    prios = jnp.asarray(rng.uniform(-3.0, 3.0, B).astype(np.float32))
+    applied = jnp.asarray(rng.uniform(size=B) > 0.3)
+    return tree, storage, jnp.asarray(idx.astype(np.int32)), prios, applied, items
+
+
+def _assert_ingest_equal(got, want):
+    got_tree, got_storage = got
+    want_tree, want_storage = want
+    np.testing.assert_array_equal(np.asarray(got_tree), np.asarray(want_tree))
+    for k in want_storage:
+        assert got_storage[k].dtype == want_storage[k].dtype
+        assert got_storage[k].shape == want_storage[k].shape
+        np.testing.assert_array_equal(np.asarray(got_storage[k]),
+                                      np.asarray(want_storage[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("cap,B,block", [(64, 32, 32), (256, 100, 64),
+                                         (32, 7, 8), (64, 64, 16),
+                                         (16, 16, 1)])
+def test_replay_ingest_matches_ref(cap, B, block):
+    """Fused ingest (priority init + storage scatter + tree repair) ==
+    the three-dispatch oracle, bit-for-bit, across block geometries."""
+    tree, storage, idx, prios, applied, items = _ingest_case(cap, B, cap + B)
+    want = replay_ingest_ref(tree, storage, idx, prios, applied, items)
+    got = replay_ingest(tree, storage, idx, prios, applied, items,
+                        block_b=block, interpret=True)
+    _assert_ingest_equal(got, want)
+
+
+def test_replay_ingest_index_handling():
+    """Scatter-faithful index handling (and the block padding path): -1
+    wraps to C-1, idx == C (the alloc overflow sentinel) drops without
+    touching slot 0."""
+    cap = 8
+    tree, storage, _, _, _, items = _ingest_case(cap, 3, 7)
+    idx = jnp.array([-1, cap, 2], jnp.int32)   # block_b=2: exercises padding
+    prios = jnp.array([9.0, 8.0, 7.0], jnp.float32)
+    applied = jnp.array([True, True, True])
+    want = replay_ingest_ref(tree, storage, idx, prios, applied, items)
+    got = replay_ingest(tree, storage, idx, prios, applied, items,
+                        block_b=2, interpret=True)
+    _assert_ingest_equal(got, want)
+    got_tree, got_storage = got
+    # -1 wrapped: slot C-1 carries lane 0's item; the overflow lane changed
+    # nothing (in particular slot 0 kept its original row).
+    np.testing.assert_array_equal(np.asarray(got_storage["obs"][cap - 1]),
+                                  np.asarray(items["obs"][0]))
+    np.testing.assert_array_equal(np.asarray(got_storage["obs"][0]),
+                                  np.asarray(storage["obs"][0]))
+
+
+def test_replay_ingest_cross_block_last_writer_wins():
+    """Duplicate slots split across grid blocks resolve like the XLA
+    scatter: the later lane wins — and a masked later duplicate re-writes
+    the *original* row/leaf (gather-all-then-scatter), not the earlier
+    lane's value."""
+    cap = 8
+    tree, storage, _, _, _, items = _ingest_case(cap, 4, 11)
+    idx = jnp.array([5, 1, 5, 5], jnp.int32)   # block_b=2: dup spans blocks
+    prios = jnp.array([2.0, 3.0, 4.0, 6.0], jnp.float32)
+    applied = jnp.array([True, True, True, True])
+    want = replay_ingest_ref(tree, storage, idx, prios, applied, items)
+    got = replay_ingest(tree, storage, idx, prios, applied, items,
+                        block_b=2, interpret=True)
+    _assert_ingest_equal(got, want)
+    got_tree, got_storage = got
+    assert float(sumtree.leaves(got_tree)[5]) == float(
+        prio.to_leaf(jnp.float32(6.0)))
+    np.testing.assert_array_equal(np.asarray(got_storage["obs"][5]),
+                                  np.asarray(items["obs"][3]))
+    # masked later duplicate: lane 1 is not applied, so slot 5 must end up
+    # with the ORIGINAL row/leaf (the mask re-writes old state, last).
+    applied2 = jnp.array([True, False])
+    idx2 = jnp.array([5, 5], jnp.int32)
+    items2 = jax.tree.map(lambda x: x[:2], items)
+    want2 = replay_ingest_ref(tree, storage, idx2, prios[:2], applied2, items2)
+    got2 = replay_ingest(tree, storage, idx2, prios[:2], applied2, items2,
+                         block_b=1, interpret=True)
+    _assert_ingest_equal(got2, want2)
+    np.testing.assert_array_equal(np.asarray(got2[1]["obs"][5]),
+                                  np.asarray(storage["obs"][5]))
+    np.testing.assert_array_equal(np.asarray(sumtree.leaves(got2[0])[5]),
+                                  np.asarray(sumtree.leaves(tree)[5]))
 
 
 @pytest.mark.parametrize("lanes,T,n,block", [(8, 20, 3, 8), (100, 16, 5, 32),

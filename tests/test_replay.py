@@ -1,6 +1,8 @@
 """Prioritized replay behaviour: adds, sampling, priority updates, both
 eviction strategies, IS weights (paper §3/§4.1/Appendix D/F)."""
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -121,6 +123,103 @@ def test_min_fill_gate():
     assert not bool(replay.can_sample(CFG, state))
     state = replay.add_fifo(CFG, state, make_items(4), jnp.ones(4))
     assert bool(replay.can_sample(CFG, state))
+
+
+# --- fused ingest: kernel path bit-identical to the three-dispatch path -----
+
+@contextlib.contextmanager
+def pinned_backend(name):
+    """Pin the sum-tree hot-op backend, restoring whatever override was in
+    effect before (the CI matrix legs seed one via REPRO_SUMTREE_BACKEND)."""
+    saved = sumtree._backend
+    sumtree.set_backend(name)
+    try:
+        yield
+    finally:
+        sumtree.set_backend(saved)
+
+
+def assert_replay_states_identical(got, want):
+    np.testing.assert_array_equal(np.asarray(got.tree), np.asarray(want.tree))
+    for k in want.storage:
+        np.testing.assert_array_equal(np.asarray(got.storage[k]),
+                                      np.asarray(want.storage[k]), err_msg=k)
+    for field in ("write_pos", "size", "total_added"):
+        assert int(getattr(got, field)) == int(getattr(want, field)), field
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mode=st.sampled_from(["fifo", "alloc"]),
+    batch=st.integers(1, 24),
+    prefill=st.integers(0, 32),
+    seed=st.integers(0, 10**6),
+)
+def test_fused_ingest_bit_identical(mode, batch, prefill, seed):
+    """add_fifo/add_alloc through the fused Pallas ingest kernel (interpret
+    on CPU) must be bit-identical to the unfused XLA three-dispatch path —
+    across wrap-around, duplicate slots, overflow lanes and valid masks."""
+    cfg = replay.ReplayConfig(capacity=32, soft_capacity=24, min_fill=1)
+    state = replay.init(cfg, {"x": jnp.zeros(()),
+                              "y": jnp.zeros((3,), jnp.int32)})
+    rng = np.random.RandomState(seed)
+    add = replay.add_fifo if mode == "fifo" else replay.add_alloc
+    with pinned_backend("xla"):
+        if prefill:  # moves write_pos / consumes free slots before the probe
+            state = add(cfg, state, make_items(prefill),
+                        jnp.asarray(rng.uniform(0.1, 5.0, prefill),
+                                    jnp.float32))
+    pr = jnp.asarray(rng.uniform(0.0, 5.0, batch), jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=batch) > 0.3)
+    items = make_items(batch, base=1000)
+    with pinned_backend("xla"):
+        want = add(cfg, state, items, pr, valid)
+    with pinned_backend("interpret"):
+        got = add(cfg, state, items, pr, valid)
+    assert_replay_states_identical(got, want)
+
+
+@pytest.mark.parametrize("mode", ["fifo", "alloc"])
+def test_fused_ingest_full_capacity_add(mode):
+    """A block exactly the size of the buffer, onto an empty state and onto
+    a full one: fifo wraps/overwrites everything, alloc drops every overflow
+    lane — both bit-identical to the unfused path."""
+    cap = 32
+    cfg = replay.ReplayConfig(capacity=cap, soft_capacity=24, min_fill=1)
+    empty = replay.init(cfg, {"x": jnp.zeros(()),
+                              "y": jnp.zeros((3,), jnp.int32)})
+    add = replay.add_fifo if mode == "fifo" else replay.add_alloc
+    pr = jnp.linspace(0.1, 5.0, cap, dtype=jnp.float32)
+    with pinned_backend("xla"):
+        full_w = add(cfg, empty, make_items(cap), pr)
+        again_w = add(cfg, full_w, make_items(cap, base=500), pr)
+    with pinned_backend("interpret"):
+        full_g = add(cfg, empty, make_items(cap), pr)
+        again_g = add(cfg, full_g, make_items(cap, base=500), pr)
+    assert_replay_states_identical(full_g, full_w)
+    assert_replay_states_identical(again_g, again_w)
+    if mode == "alloc":  # every lane of the second block dropped
+        assert int(again_g.total_added) == cap
+
+
+def test_fused_alloc_overflow_drops_on_kernel_path():
+    """The overflow sentinel (idx == C) must drop inside the kernel too —
+    live slots (slot 0 in particular) keep their rows and leaves."""
+    cfg = replay.ReplayConfig(capacity=16, soft_capacity=12, min_fill=1)
+    state = replay.init(cfg, {"x": jnp.zeros(()),
+                              "y": jnp.zeros((3,), jnp.int32)})
+    with pinned_backend("interpret"):
+        state = replay.add_alloc(cfg, state, make_items(12),
+                                 jnp.full(12, 2.0))
+        before_x = np.asarray(state.storage["x"]).copy()
+        # 4 free slots, 10-lane block: 4 applied, 6 overflow lanes dropped.
+        state = replay.add_alloc(cfg, state, make_items(10, base=100),
+                                 jnp.full(10, 9.0))
+    assert int(state.size) == 16
+    x = np.asarray(state.storage["x"])
+    np.testing.assert_array_equal(x[:12], before_x[:12])
+    np.testing.assert_array_equal(x[12:16],
+                                  np.arange(100, 104, dtype=np.float32))
 
 
 @settings(max_examples=20, deadline=None)

@@ -34,6 +34,23 @@ def test_async_only_flags_rejected_under_sync(capsys):
     assert_rejected(["--sample-staging"], "--runtime async", capsys)
     assert_rejected(["--learner-remote", "h:1"], "--runtime async", capsys)
     assert_rejected(["--replay-shards", "2"], "--runtime async", capsys)
+    assert_rejected(["--ingest-staging"], "--runtime async", capsys)
+    assert_rejected(["--add-queue-depth", "8"], "--runtime async", capsys)
+    assert_rejected(["--sample-queue-depth", "4"], "--runtime async", capsys)
+
+
+def test_ingest_plane_flags():
+    args = validate(["--runtime", "async", "--ingest-staging",
+                     "--add-queue-depth", "8", "--sample-queue-depth", "4"])
+    assert args.ingest_staging
+    assert args.add_queue_depth == 8 and args.sample_queue_depth == 4
+
+
+def test_queue_depths_must_be_positive(capsys):
+    assert_rejected(["--runtime", "async", "--add-queue-depth", "0"],
+                    "--add-queue-depth", capsys)
+    assert_rejected(["--runtime", "async", "--sample-queue-depth", "-1"],
+                    "--sample-queue-depth", capsys)
 
 
 def test_serve_sampling_conflicts(capsys):
@@ -67,6 +84,11 @@ def test_learner_remote_conflicts(capsys):
                      "--serve-sampling"], "two sides", capsys)
     assert_rejected(["--runtime", "async", "--learner-remote", "nonsense"],
                     "HOST:PORT", capsys)
+    # the ingest plane lives with the fabric, not the learner-only process
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--ingest-staging"], "learner-only", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--add-queue-depth", "8"], "learner-only", capsys)
 
 
 def test_no_experience_source_rejected(capsys):
