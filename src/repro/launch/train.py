@@ -34,6 +34,7 @@ from repro.checkpoint import checkpoint as ckpt_lib
 from repro.core import apex, replay as replay_lib, sequence_replay as seqrep
 from repro.data import pipeline as data_lib
 from repro.models import registry, transformer
+from repro.obs import log as obslog
 from repro.optim import optimizers as optim
 from repro.runtime import AsyncConfig, run_async
 
@@ -49,10 +50,11 @@ def run_apex(preset, iterations: int, log_every: int, ckpt_dir: str | None):
         if (it + 1) % log_every == 0:
             m = {k: float(v) for k, v in metrics.items()}
             fps = float(state.frames) / (time.time() - t0)
-            print(f"iter {it+1:5d} frames={int(m['frames'])} "
-                  f"size={int(m['replay_size'])} fps={fps:8.0f} "
-                  f"return={m.get('mean_ep_return', float('nan')):8.3f} "
-                  f"loss={m.get('loss', m.get('critic_loss', 0)):.4f}")
+            obslog.emit(
+                "iter", n=it + 1, frames=int(m["frames"]),
+                size=int(m["replay_size"]), fps=round(fps),
+                ret=f"{m.get('mean_ep_return', float('nan')):.3f}",
+                loss=f"{m.get('loss', m.get('critic_loss', 0)):.4f}")
         if ckpt_dir and (it + 1) % (log_every * 10) == 0:
             ckpt_lib.save(f"{ckpt_dir}/ckpt_{it+1}.npz",
                           {"params": state.params,
@@ -72,7 +74,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    wire_quantize_prios: bool = False,
                    wire_quantize_params: bool = False,
                    ingest_staging: bool = False,
-                   add_queue_depth: int = 4, sample_queue_depth: int = 2):
+                   add_queue_depth: int = 4, sample_queue_depth: int = 2,
+                   metrics_dir: str | None = None,
+                   trace_sample_rate: float = 0.0):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
@@ -101,48 +105,54 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                        ingest_staging=ingest_staging,
                        add_queue_depth=add_queue_depth,
                        sample_queue_depth=sample_queue_depth,
+                       metrics_dir=metrics_dir,
+                       trace_sample_rate=trace_sample_rate,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
                     preset.make_optimizer())
     s = res.stats
-    print(f"async done in {time.time() - t0:6.1f}s  "
-          f"learner_steps={int(s['learner_steps'])} "
-          f"param_version={int(s['param_version'])}")
-    print(f"  generate={s['actor_tps']:8.0f} t/s  "
-          f"consume={s['learner_tps']:8.0f} t/s  "
-          f"ratio={s['generate_consume_ratio']:.2f} "
-          f"(paper §4.1: ~12.5K:9.7K ~ 1.29)")
-    print(f"  actor_blocked={int(s['actor_blocked'])} "
-          f"learner_starved={int(s['learner_starved'])} "
-          f"replay_size={int(s['replay_size'])} "
-          f"shards={int(s['replay_shards'])}")
+    obslog.emit("async-done", seconds=round(time.time() - t0, 1),
+                learner_steps=int(s["learner_steps"]),
+                param_version=int(s["param_version"]))
+    obslog.emit("async-throughput",
+                generate_tps=round(s["actor_tps"]),
+                consume_tps=round(s["learner_tps"]),
+                ratio=f"{s['generate_consume_ratio']:.2f}",
+                paper_ratio="1.29")
+    obslog.emit("async-contention",
+                actor_blocked=int(s["actor_blocked"]),
+                learner_starved=int(s["learner_starved"]),
+                replay_size=int(s["replay_size"]),
+                shards=int(s["replay_shards"]))
     if res.gateway_stats is not None:
         g = res.gateway_stats
-        print(f"  gateway: {int(s['actor_procs'])} actor procs, "
-              f"{g.connections} conns ({g.shm_connections} shm), "
-              f"{g.blocks_in} blocks / {g.transitions_in} transitions in, "
-              f"{g.param_sends} param snapshots out, "
-              f"{g.bytes_in / 1e6:.1f} MB ingested")
+        obslog.emit("gateway", actor_procs=int(s["actor_procs"]),
+                    conns=g.connections, shm_conns=g.shm_connections,
+                    blocks_in=g.blocks_in, transitions_in=g.transitions_in,
+                    param_sends=g.param_sends,
+                    mb_in=round(g.bytes_in / 1e6, 1))
         if g.sample_requests:
-            print(f"  sample plane: {g.sample_sends} batches served "
-                  f"({g.sample_starved} starved polls), "
-                  f"{g.priority_updates} priority write-backs in, "
-                  f"{g.param_pushes} param pushes in")
+            obslog.emit("sample-plane", batches_served=g.sample_sends,
+                        starved_polls=g.sample_starved,
+                        priority_updates=g.priority_updates,
+                        param_pushes=g.param_pushes)
     if res.service_stats is not None and res.service_stats.blocks_staged:
-        print(f"  ingest staging: {res.service_stats.blocks_staged} blocks "
-              f"staged ahead (h2d issue ~{res.service_stats.h2d_us:.0f}us)")
+        obslog.emit("ingest-staging",
+                    blocks_staged=res.service_stats.blocks_staged,
+                    h2d_issue_us=round(res.service_stats.h2d_us))
     if res.source_stats is not None and res.source_stats.staged:
         ss = res.source_stats
-        print(f"  staging: {ss.staged} batches staged ahead "
-              f"({ss.stage_idle} idle polls)")
+        obslog.emit("sample-staging", batches_staged=ss.staged,
+                    idle_polls=ss.stage_idle)
     if res.inference_stats is not None:
         i = res.inference_stats
-        print(f"  inference: {i.requests} act-requests in {i.dispatches} "
-              f"device dispatches ({i.full_waves} full waves)")
+        obslog.emit("inference", requests=i.requests,
+                    dispatches=i.dispatches, full_waves=i.full_waves)
     if res.last_actor_metrics:
-        print(f"  last mean_ep_return="
-              f"{res.last_actor_metrics['mean_ep_return']:.3f}")
+        obslog.emit(
+            "actor-metrics",
+            mean_ep_return=f"{res.last_actor_metrics['mean_ep_return']:.3f}")
     if ckpt_dir and not serve_sampling:
         # In serve mode the trained params live on the remote learner host;
         # res.learner here is the untouched init state.
@@ -177,9 +187,10 @@ def run_llm(arch: str, iterations: int, log_every: int, ckpt_dir: str | None,
     for it in range(iterations):
         state, metrics = round_step(state, it)
         if (it + 1) % log_every == 0:
-            print(f"round {it+1:4d} loss={float(metrics['loss']):.4f} "
-                  f"mean_prio={float(metrics['mean_priority']):.4f} "
-                  f"replay={int(state.replay.size)}")
+            obslog.emit("round", n=it + 1,
+                        loss=f"{float(metrics['loss']):.4f}",
+                        mean_prio=f"{float(metrics['mean_priority']):.4f}",
+                        replay=int(state.replay.size))
         if ckpt_dir and (it + 1) % (log_every * 10) == 0:
             ckpt_lib.save(f"{ckpt_dir}/ckpt_{it+1}.npz",
                           {"params": state.params}, step=it + 1)
@@ -268,6 +279,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="the remote learner ships param snapshots "
                          "quantized (uint8 + affine per tensor; lossy) — "
                          "requires --learner-remote")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write telemetry (metrics.jsonl + spans.jsonl) "
+                         "into this directory during the run; render with "
+                         "`python -m repro.obs.report DIR` "
+                         "(--runtime async)")
+    ap.add_argument("--trace-sample-rate", type=float, default=0.0,
+                    help="fraction of transition blocks / learner batches "
+                         "carrying an end-to-end pipeline trace id, in "
+                         "[0, 1] (requires --metrics-dir; traced ops force "
+                         "a device sync — keep small on hot runs)")
     return ap
 
 
@@ -295,6 +316,8 @@ def validate_args(ap: argparse.ArgumentParser,
                   ("--transport", args.transport != "auto"),
                   ("--wire-quantize-prios", args.wire_quantize_prios),
                   ("--wire-quantize-params", args.wire_quantize_params),
+                  ("--metrics-dir", args.metrics_dir is not None),
+                  ("--trace-sample-rate", args.trace_sample_rate != 0.0),
                   ("--actor-threads", args.actor_threads is not None)]
     if not is_async:
         used = [name for name, on in async_only if on]
@@ -322,6 +345,15 @@ def validate_args(ap: argparse.ArgumentParser,
     if args.sample_queue_depth < 1:
         ap.error("--sample-queue-depth must be >= 1 (the learner prefetch "
                  f"buffer), got {args.sample_queue_depth}")
+    if not 0.0 <= args.trace_sample_rate <= 1.0:
+        ap.error("--trace-sample-rate is a sampling fraction in [0, 1] "
+                 f"(0 = tracing off, 1 = every block), got "
+                 f"{args.trace_sample_rate}")
+    if args.trace_sample_rate > 0 and args.metrics_dir is None:
+        ap.error("--trace-sample-rate records pipeline spans, which only "
+                 "persist through the JSONL sink — add --metrics-dir DIR "
+                 "(without it the spans would fill a ring buffer nobody "
+                 "drains)")
 
     if args.learner_remote is not None:
         from repro.net.learner_client import parse_hostport
@@ -403,9 +435,9 @@ def validate_args(ap: argparse.ArgumentParser,
                  "with --actor-threads 0 there is nothing to batch (actor "
                  "processes run their own jitted rollouts)")
     if args.serve_sampling and args.gateway_port == 0:
-        print("note: --serve-sampling with an ephemeral --gateway-port; "
-              "the learner host needs the port printed at startup "
-              "(pass --gateway-port to fix it)")
+        obslog.emit("note", serve_sampling=True, gateway_port="ephemeral",
+                    hint="the learner host needs the port logged at "
+                         "startup; pass --gateway-port to pin it")
     return args
 
 
@@ -429,7 +461,8 @@ def main():
                            args.wire_quantize_prios,
                            args.wire_quantize_params,
                            args.ingest_staging,
-                           args.add_queue_depth, args.sample_queue_depth)
+                           args.add_queue_depth, args.sample_queue_depth,
+                           args.metrics_dir, args.trace_sample_rate)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

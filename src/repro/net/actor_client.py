@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.net import transport as transport_lib
 from repro.net import wire
+from repro.obs import Tracer
 from repro.runtime import phases
 
 
@@ -86,6 +87,11 @@ class RemoteActorSpec:
                                     # ACKs back) — that's congestion, not
                                     # death, so this bound is generous
     poll_s: float = 0.05          # wait granularity on a full window
+    trace_sample_rate: float = 0.0  # fraction of blocks stamped with a
+                                    # pipeline trace id in the ADD_BLOCK
+                                    # header (repro.obs); spans are
+                                    # recorded on the gateway host, whose
+                                    # sink owns the run's JSONL
 
 
 class _Stop(Exception):
@@ -113,6 +119,11 @@ class RemoteActorLoop:
         self._param_version = -1
         self._pull_replies = 0    # PARAM + PARAM_UNCHANGED frames seen
         self._in_flight = 0
+        # Deterministic block sampling for pipeline tracing: a sampled
+        # block carries its id in the ADD_BLOCK header, and the gateway
+        # host's tracer records the downstream spans (this process has no
+        # sink — it only originates ids).
+        self._tracer = Tracer(spec.trace_sample_rate)
         self.stats = {"rollouts": 0, "pushed": 0, "blocked": 0,
                       "transitions": 0, "param_pulls": 0, "bytes_out": 0,
                       "param_version": -1, "transport": ""}
@@ -201,7 +212,8 @@ class RemoteActorLoop:
                 while self._in_flight >= spec.max_inflight:
                     if not self._pump(conn, timeout=spec.poll_s):
                         self.stats["blocked"] += 1
-                conn.send(wire.ADD_BLOCK, payload)
+                conn.send(wire.ADD_BLOCK, payload,
+                          trace_id=self._tracer.sample())
                 self._in_flight += 1
                 self.stats["rollouts"] += 1
                 self.stats["pushed"] += 1

@@ -65,6 +65,7 @@ import jax
 
 from repro.net import transport as transport_lib
 from repro.net import wire
+from repro.obs import Telemetry
 from repro.runtime.params import ParamStore
 
 
@@ -103,9 +104,17 @@ class ReplayGateway:
                  add_timeout_s: float = 0.05, sample_timeout_s: float = 0.05,
                  poll_s: float = 0.2, drain_grace_s: float = 1.0,
                  backlog: int = 64, accept_shm: bool = True,
-                 ring_bytes: int = transport_lib.DEFAULT_RING_BYTES):
+                 ring_bytes: int = transport_lib.DEFAULT_RING_BYTES,
+                 telemetry: Telemetry | None = None):
         self._fabric = fabric
         self._store = store
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        # decode + fabric-route latency per ADD_BLOCK; the retries counter
+        # mirrors GatewayStats.add_retries into the obs registry so the
+        # run report's backpressure section sees it.
+        self._h_route = self._tel.histogram("gateway/route_us")
+        self._c_retries = self._tel.counter("gateway/add_retries")
+        self._c_blocks = self._tel.counter("gateway/blocks_in")
         self._add_timeout_s = add_timeout_s
         self._sample_timeout_s = sample_timeout_s
         # fabric.get_batch is single-consumer (parked sub-batches); serialize
@@ -233,14 +242,16 @@ class ReplayGateway:
             # the global keys route to the owning shards. One frame may
             # coalesce several rounds — re-apply each as its own call so
             # the shard eviction clock ticks per round, exactly as if each
-            # had shipped separately.
+            # had shipped separately. A traced frame's id follows every
+            # round to the owning shards' writeback spans.
             while pending_prio:
-                idx, prios, counts = pending_prio.pop(0)
+                idx, prios, counts, tid = pending_prio.pop(0)
                 off = 0
                 for n in counts:
                     n = int(n)
                     self._fabric.write_back(idx[off:off + n],
-                                            prios[off:off + n])
+                                            prios[off:off + n],
+                                            trace_id=tid)
                     off += n
                 self._bump(priority_updates=len(counts))
 
@@ -264,7 +275,7 @@ class ReplayGateway:
                     continue
                 msg_type, payload = got
                 if msg_type == wire.ADD_BLOCK:
-                    if self._route_block(cid, payload):
+                    if self._route_block(cid, payload, conn.last_trace_id):
                         conn.send(wire.ADD_ACK)
                     # else: dropped during shutdown — no ACK; the client is
                     # about to receive STOP anyway
@@ -273,7 +284,8 @@ class ReplayGateway:
                     apply_priorities()
                 elif msg_type == wire.PRIORITY_UPDATE:
                     pending_prio.append(
-                        wire.decode_priority_update(payload))
+                        (*wire.decode_priority_update(payload),
+                         conn.last_trace_id))
                     self._bump(priority_frames=1)
                 elif msg_type == wire.PARAM_PUSH:
                     _version, params = wire.decode_params(payload)
@@ -321,17 +333,28 @@ class ReplayGateway:
                 self._conns.pop(cid, None)
             conn.close()
 
-    def _route_block(self, cid: int, payload: memoryview) -> bool:
+    def _route_block(self, cid: int, payload: memoryview,
+                     trace_id: int = 0) -> bool:
         """Decode and push into the fabric, holding the client's ACK (and
         therefore its in-flight window) open while the shard queue is full.
         False only when the block was dropped because stop() interrupted
-        the retry loop."""
+        the retry loop. A traced block (nonzero wire-header id) records a
+        "gateway" span — decode plus route, including backpressure wait —
+        and hands its id to the fabric for the shard's add span."""
+        t0 = time.perf_counter()
         block = wire.decode_block(payload)
         n = int(block.priorities.shape[0])
-        while not self._fabric.add(block, timeout=self._add_timeout_s):
+        while not self._fabric.add(block, timeout=self._add_timeout_s,
+                                   trace_id=trace_id):
             self._bump(add_retries=1)
+            self._c_retries.inc()
             if self._stop.is_set():
                 return False
+        us = 1e6 * (time.perf_counter() - t0)
+        self._h_route.record(us)
+        self._c_blocks.inc()
+        if trace_id:
+            self._tel.tracer.record("gateway", trace_id, us)
         with self._lock:
             self.stats.blocks_in += 1
             self.stats.transitions_in += n
@@ -377,10 +400,14 @@ class ReplayGateway:
 
     def _serve_params(self, conn: transport_lib.Transport, have: int) -> None:
         snap = self._store.get()
+        # Bump before the reply ships: a client that has read the reply
+        # must see the stats already counted (tests and operators poll
+        # snapshot() right after a round trip).
         if snap.version > have:
-            conn.send(wire.PARAM, self._encoded_params(snap))
+            payload = self._encoded_params(snap)
             self._bump(param_pulls=1, param_sends=1)
+            conn.send(wire.PARAM, payload)
         else:
+            self._bump(param_pulls=1)
             conn.send(wire.PARAM_UNCHANGED,
                       wire.encode_json({"version": snap.version}))
-            self._bump(param_pulls=1)

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.sampling import LearnerBatch
 from repro.net import transport as transport_lib
 from repro.net import wire
+from repro.obs import Telemetry
 from repro.runtime.service import ServiceStats
 from repro.runtime.sources import SampleSource, SourceClosed, SourceStats
 
@@ -72,7 +73,8 @@ class RemoteFabricSource(SampleSource):
                  connect_timeout_s: float = 10.0, poll_s: float = 0.05,
                  ring_bytes: int = transport_lib.DEFAULT_RING_BYTES,
                  quantize_prios: bool = False,
-                 quantize_params: bool = False):
+                 quantize_params: bool = False,
+                 telemetry: Telemetry | None = None):
         self._addr = (host, int(port))
         self._kind = transport_lib.resolve_kind(transport, host) \
             if transport != "auto" else "auto"
@@ -84,9 +86,13 @@ class RemoteFabricSource(SampleSource):
         self._conn: transport_lib.Transport | None = None
         self._requested = False   # one SAMPLE_REQUEST may be outstanding
         self._closed = False
-        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
+        self._pending: list[tuple[np.ndarray, np.ndarray, int]] = []
         self._pending_lock = threading.Lock()
         self.stats = SourceStats()
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        self._h_get = self._tel.histogram("source/get_batch_us")
+        self._c_starved = self._tel.counter("source/starved_polls")
+        self.last_trace_id = 0
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -139,15 +145,19 @@ class RemoteFabricSource(SampleSource):
         if not pending:
             return
         if len(pending) == 1:
-            idx, prios = pending[0]
+            idx, prios, _ = pending[0]
         else:
             idx = np.concatenate([p[0] for p in pending])
             prios = np.concatenate([p[1] for p in pending])
         counts = [p[0].shape[0] for p in pending]
+        # A coalesced frame carries one header trace id; the most recent
+        # traced round wins (rounds are rarely coalesced at rates where
+        # tracing is on, so in practice this is "the" round's id).
+        tid = next((p[2] for p in reversed(pending) if p[2]), 0)
         try:
             self._conn.send(wire.PRIORITY_UPDATE, wire.encode_priority_update(
                 idx, prios, counts=counts,
-                quantize=self._quantize_prios))
+                quantize=self._quantize_prios), trace_id=tid)
         except (transport_lib.TransportClosed, OSError) as e:
             self._closed = True
             raise SourceClosed(
@@ -160,6 +170,7 @@ class RemoteFabricSource(SampleSource):
         next call resumes waiting instead of double-requesting."""
         if self._closed:
             raise SourceClosed("remote fabric connection is closed")
+        t0 = time.perf_counter()
         if not self._requested:
             self._flush_writebacks()
             self._conn.send(wire.SAMPLE_REQUEST)
@@ -174,6 +185,7 @@ class RemoteFabricSource(SampleSource):
             ) from e
         if got is None:
             self.stats.starved_polls += 1
+            self._c_starved.inc()
             return None
         msg_type, payload = got
         self._requested = False
@@ -186,17 +198,29 @@ class RemoteFabricSource(SampleSource):
                 f"unexpected message {msg_type} from gateway")
         if len(payload) == 0:   # fabric starved: poll again
             self.stats.starved_polls += 1
+            self._c_starved.inc()
             return None
         batch = wire.decode_sample_batch(payload)
+        us = 1e6 * (time.perf_counter() - t0)
+        self._h_get.record(us)
+        # A batch starts a fresh consume-plane trace client-side (the
+        # gateway's SAMPLE_BATCH header is untraced): the learner is the
+        # process whose sink records this run's spans.
+        tid = self._tel.tracer.sample()
+        if tid:
+            self._tel.tracer.record("sample", tid, us,
+                                    transport=self.transport_kind)
+        self.last_trace_id = tid
         self.stats.batches += 1
         return batch
 
-    def write_back(self, indices: Any, priorities: Any) -> None:
+    def write_back(self, indices: Any, priorities: Any,
+                   trace_id: int = 0) -> None:
         """Park one write-back round; it ships coalesced with the next
         sample request (or params push / shutdown flush)."""
-        pair = (np.asarray(indices), np.asarray(priorities))
+        row = (np.asarray(indices), np.asarray(priorities), trace_id)
         with self._pending_lock:
-            self._pending.append(pair)
+            self._pending.append(row)
         self.stats.writebacks += 1
 
     def publish_params(self, version: int, params: Any) -> None:

@@ -174,6 +174,11 @@ class Transport:
 
     kind = "?"
 
+    # Trace id from the most recent frame returned by recv (0 = untraced;
+    # see repro.obs). Exposed as an attribute, not in the recv return
+    # shape, so the existing (msg_type, payload) contract is untouched.
+    last_trace_id = 0
+
     @property
     def bytes_in(self) -> int:
         raise NotImplementedError
@@ -182,7 +187,8 @@ class Transport:
     def bytes_out(self) -> int:
         raise NotImplementedError
 
-    def send(self, msg_type: int, payload: Any = b"") -> int:
+    def send(self, msg_type: int, payload: Any = b"",
+             trace_id: int = 0) -> int:
         raise NotImplementedError
 
     def recv(self, timeout: float | None = None,
@@ -227,15 +233,22 @@ class TcpTransport(Transport):
     def bytes_out(self) -> int:
         return self._shm.bytes_out if self._shm is not None else self._sent
 
-    def send(self, msg_type: int, payload: Any = b"") -> int:
+    def send(self, msg_type: int, payload: Any = b"",
+             trace_id: int = 0) -> int:
         if self._shm is not None:
-            return self._shm.send(msg_type, payload)
-        segs = wire.frame_iov(msg_type, payload, self._max_payload)
+            return self._shm.send(msg_type, payload, trace_id)
+        segs = wire.frame_iov(msg_type, payload, self._max_payload,
+                              trace_id)
         n = wire.iov_len(segs)
         with self._send_lock:
             _sendmsg_all(self._sock, segs)
             self._sent += n
         return n
+
+    @property
+    def last_trace_id(self) -> int:  # type: ignore[override]
+        return self._shm.last_trace_id if self._shm is not None \
+            else self._reader.last_trace_id
 
     def recv(self, timeout: float | None = None,
              ) -> tuple[int, memoryview] | None:
@@ -388,6 +401,7 @@ class ShmRingTransport(Transport):
         self._ring_in = 0
         self._ring_out = 0
         self._ctrl_out = 0
+        self.last_trace_id = 0
 
     # -- establishment ------------------------------------------------------
 
@@ -446,10 +460,12 @@ class ShmRingTransport(Transport):
 
     # -- send ---------------------------------------------------------------
 
-    def send(self, msg_type: int, payload: Any = b"") -> int:
+    def send(self, msg_type: int, payload: Any = b"",
+             trace_id: int = 0) -> int:
         if self._closed:
             raise TransportClosed("transport is closed")
-        segs = wire.frame_iov(msg_type, payload, self._max_payload)
+        segs = wire.frame_iov(msg_type, payload, self._max_payload,
+                              trace_id)
         total = wire.iov_len(segs)
         if msg_type not in DATA_TYPES or total <= self._ring_min:
             with self._ctrl_lock:
@@ -521,7 +537,8 @@ class ShmRingTransport(Transport):
         if avail < wire.HEADER_SIZE:
             raise wire.WireError(f"torn ring frame: {avail} bytes committed")
         hdr = ring.read_out(0, wire.HEADER_SIZE)
-        magic, version, msg_type, length = wire._HEADER.unpack_from(hdr, 0)
+        magic, version, msg_type, length, trace_id = \
+            wire._HEADER.unpack_from(hdr, 0)
         wire.check_header(magic, version, length, self._max_payload)
         if avail < wire.HEADER_SIZE + length:
             raise wire.WireError(
@@ -531,6 +548,7 @@ class ShmRingTransport(Transport):
         payload = ring.read_out(wire.HEADER_SIZE, length)
         ring.consume(wire.HEADER_SIZE + length)
         self._ring_in += wire.HEADER_SIZE + length
+        self.last_trace_id = trace_id
         return msg_type, memoryview(payload)
 
     def recv(self, timeout: float | None = None,
@@ -563,6 +581,7 @@ class ShmRingTransport(Transport):
             if ctrl is None:
                 return None
             if ctrl[0] != wire.SHM_DOORBELL:
+                self.last_trace_id = self._reader.last_trace_id
                 return ctrl
             got = self._pop_ring()
             if got is None:

@@ -7,8 +7,8 @@ actor-side initial priorities — so the wire format is a serialization of
 that block, not a new abstraction. Three design rules:
 
 * **Framed and versioned.** Every message is ``MAGIC | version | type |
-  payload_len | payload``. A peer speaking a different protocol version is
-  rejected at the first frame instead of corrupting the replay.
+  payload_len | trace_id | payload``. A peer speaking a different protocol
+  version is rejected at the first frame instead of corrupting the replay.
 * **Arrays travel as raw bytes.** Payloads carrying tensors use a
   deterministic nested-dict codec (sorted key paths; per-leaf dtype/shape
   headers; C-order raw data). fp32 fields round-trip bit-identically —
@@ -70,6 +70,15 @@ experience.
 
 Protocol v2 adds the ``SHM_*`` handshake and the ``counts`` leaf in
 ``PRIORITY_UPDATE`` (v1 peers are rejected at the first frame, as always).
+
+Protocol v3 adds a fixed ``trace_id`` (u64) field to the frame header for
+end-to-end pipeline tracing (``repro.obs``): a sampled ``ADD_BLOCK`` carries
+its block's trace id from the actor process into the gateway, and a
+``SAMPLE_BATCH``/``PRIORITY_UPDATE`` carries the batch's id between learner
+and gateway. ``trace_id = 0`` means untraced — the common case — so the
+cost on every frame is 8 header bytes, nothing else. The id is header
+metadata, not payload: codecs are unchanged and fp32 leaves still travel
+bit-identically.
 """
 
 from __future__ import annotations
@@ -85,11 +94,12 @@ from repro.core import codec
 from repro.core.sampling import LearnerBatch
 from repro.runtime.phases import TransitionBlock
 
-PROTOCOL_VERSION = 2
+PROTOCOL_VERSION = 3
 MAGIC = b"APXW"
 
-# Frame header: magic, protocol version, message type, payload length.
-_HEADER = struct.Struct("<4sHHI")
+# Frame header: magic, protocol version, message type, payload length,
+# trace id (0 = untraced; see repro.obs.trace).
+_HEADER = struct.Struct("<4sHHIQ")
 HEADER_SIZE = _HEADER.size
 
 # Message types.
@@ -499,18 +509,19 @@ def decode_json(payload: bytes | memoryview) -> dict:
 # ---------------------------------------------------------------------------
 
 def frame(msg_type: int, payload: bytes = b"",
-          max_payload: int | None = None) -> bytes:
+          max_payload: int | None = None, trace_id: int = 0) -> bytes:
     """One wire frame: header + payload, ready for ``sendall``. Oversized
     payloads fail *here*, on the sender, with a clear error — the receiver
     would otherwise drop the whole connection on the length prefix.
     ``max_payload`` mirrors the ``FrameReader`` override: peers that agree
     on a larger bound raise it on both ends (sender here, receiver at the
-    reader); the default is the module cap."""
+    reader); the default is the module cap. ``trace_id`` stamps the v3
+    header field (0 = untraced)."""
     cap = MAX_PAYLOAD if max_payload is None else max_payload
     if len(payload) > cap:
         raise WireError(f"payload length {len(payload)} exceeds cap {cap}")
     return _HEADER.pack(MAGIC, PROTOCOL_VERSION, msg_type,
-                        len(payload)) + payload
+                        len(payload), trace_id) + payload
 
 
 def as_segments(payload: Any) -> list:
@@ -526,7 +537,7 @@ def as_segments(payload: Any) -> list:
 
 
 def frame_iov(msg_type: int, payload: Any = b"",
-              max_payload: int | None = None) -> list:
+              max_payload: int | None = None, trace_id: int = 0) -> list:
     """Scatter-gather twin of :func:`frame`: ``[header, *segments]`` ready
     for ``socket.sendmsg`` or ring-segment writes — the concatenation equals
     ``frame(msg_type, b"".join(segments))`` bitwise. Oversized payloads fail
@@ -536,12 +547,13 @@ def frame_iov(msg_type: int, payload: Any = b"",
     cap = MAX_PAYLOAD if max_payload is None else max_payload
     if total > cap:
         raise WireError(f"payload length {total} exceeds cap {cap}")
-    return [_HEADER.pack(MAGIC, PROTOCOL_VERSION, msg_type, total), *segs]
+    return [_HEADER.pack(MAGIC, PROTOCOL_VERSION, msg_type, total,
+                         trace_id), *segs]
 
 
 def send_frame(sock: socket.socket, msg_type: int, payload: bytes = b"",
-               max_payload: int | None = None) -> int:
-    buf = frame(msg_type, payload, max_payload)
+               max_payload: int | None = None, trace_id: int = 0) -> int:
+    buf = frame(msg_type, payload, max_payload, trace_id)
     sock.sendall(buf)
     return len(buf)
 
@@ -552,8 +564,11 @@ def check_header(magic: bytes, version: int, length: int,
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r}")
     if version != PROTOCOL_VERSION:
-        raise WireError(f"protocol version {version} != "
-                        f"{PROTOCOL_VERSION}")
+        raise WireError(
+            f"peer speaks protocol v{version}, this process speaks "
+            f"v{PROTOCOL_VERSION} (v3 added a trace-id header field for "
+            f"pipeline tracing) — upgrade the older peer; mixed versions "
+            f"cannot share a frame stream")
     if length > max_payload:
         # Reject before any payload-sized allocation: a corrupt/hostile
         # 4-byte prefix must not size the receive buffer.
@@ -587,8 +602,13 @@ class FrameReader:
         self._payload: bytearray | None = None
         self._pay_mv: memoryview | None = None
         self._pay_got = 0
+        self._trace_id = 0
         self.bytes_in = 0
         self.eof = False
+        # Trace id from the most recent frame *returned* by read_frame
+        # (0 = untraced). Header metadata, so the (msg_type, payload)
+        # return shape is unchanged for the many existing call sites.
+        self.last_trace_id = 0
 
     def _recv_some(self, mv: memoryview, timeout: float | None) -> int | None:
         """One ``recv_into``; None on timeout/would-block, raises
@@ -610,10 +630,12 @@ class FrameReader:
         return n
 
     def _parse_header(self) -> None:
-        magic, version, msg_type, length = _HEADER.unpack_from(self._hdr, 0)
+        magic, version, msg_type, length, trace_id = _HEADER.unpack_from(
+            self._hdr, 0)
         check_header(magic, version, length, self._max_payload)
         self._msg_type = msg_type
         self._length = length
+        self._trace_id = trace_id
         self._payload = bytearray(length)
         self._pay_mv = memoryview(self._payload)
         self._pay_got = 0
@@ -635,6 +657,7 @@ class FrameReader:
                 return None
             self._pay_got += n
         msg_type, payload = self._msg_type, self._payload
+        self.last_trace_id = self._trace_id
         self._payload = self._pay_mv = None
         self._hdr_got, self._length = 0, -1
         return msg_type, memoryview(payload)

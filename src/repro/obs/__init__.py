@@ -1,0 +1,81 @@
+"""One telemetry plane for the distributed runtime.
+
+``Telemetry`` bundles the three pieces every component needs — a
+:class:`~repro.obs.metrics.MetricsRegistry`, a
+:class:`~repro.obs.trace.Tracer`, and (optionally) a
+:class:`~repro.obs.sink.JsonlSink` — behind a single handle that is
+threaded through the fabric, gateway, sources, and inference server.
+
+The contract components follow:
+
+* accept ``telemetry=None`` and fall back to ``Telemetry.local()`` — a
+  private registry with tracing disabled and no sink. Instruments still
+  record (tests can assert on them); nothing is exported.
+* the *runner* builds exactly one ``Telemetry`` per run (with a sink
+  when ``--metrics-dir`` is set) and hands the same instance to every
+  plane, so the sink's snapshots see the whole pipeline.
+* instrument names are namespaced by plane (``shard0/add_us``,
+  ``gateway/blocks_in``, ``source/staged``) because the registry is
+  shared.
+"""
+
+from __future__ import annotations
+
+from . import log
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .sink import JsonlSink
+from .trace import Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "JsonlSink", "Tracer", "Telemetry", "log",
+]
+
+
+class Telemetry:
+    """Registry + tracer + optional sink, as one pass-around handle."""
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None,
+                 sink: JsonlSink | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(0.0)
+        self.sink = sink
+
+    @classmethod
+    def local(cls) -> "Telemetry":
+        """Private no-export telemetry — the default for components
+        constructed outside a run (unit tests, ad-hoc scripts)."""
+        return cls()
+
+    @classmethod
+    def for_run(cls, metrics_dir: str | None,
+                trace_sample_rate: float = 0.0,
+                flush_s: float = 1.0) -> "Telemetry":
+        """The runner's constructor: sink iff ``metrics_dir`` is set."""
+        registry = MetricsRegistry()
+        tracer = Tracer(trace_sample_rate)
+        sink = None
+        if metrics_dir:
+            sink = JsonlSink(metrics_dir, registry, tracer, flush_s=flush_s)
+        return cls(registry, tracer, sink)
+
+    # conveniences so call sites read `tel.counter("x")`, not
+    # `tel.registry.counter("x")`
+    def counter(self, name: str) -> Counter:
+        return self.registry.counter(name)
+
+    def gauge(self, name: str) -> Gauge:
+        return self.registry.gauge(name)
+
+    def histogram(self, name: str) -> Histogram:
+        return self.registry.histogram(name)
+
+    def start(self) -> "Telemetry":
+        if self.sink is not None:
+            self.sink.start()
+        return self
+
+    def stop(self) -> None:
+        if self.sink is not None:
+            self.sink.stop()

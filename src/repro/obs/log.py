@@ -1,0 +1,64 @@
+"""Structured one-line log emitter: human-readable, machine-parseable.
+
+Replaces the bare ``print`` progress/summary lines in
+``runtime/runner.py`` and ``launch/train.py``. Every line keeps the
+shape the prints had — ``[event] key=value key=value`` on stdout — but
+goes through the stdlib ``logging`` machinery (so operators can redirect
+or silence it) and every field is a bare ``key=value`` token, so a
+``dict(tok.split("=", 1) for tok in line.split()[1:])`` recovers the
+record without a regex.
+
+Usage::
+
+    from repro.obs import log
+    log.emit("async-progress", t=f"+{dt:.1f}s", generated=n, ...)
+    # -> [async-progress] t=+12.3s generated=4096 ...
+
+Values render compactly: floats to 1 decimal (latencies are µs — finer
+is noise), everything else via ``str``. Spaces inside values are
+replaced with ``_`` to keep the line splittable.
+"""
+
+from __future__ import annotations
+
+import logging
+import sys
+
+_LOGGER_NAME = "repro"
+_configured = False
+
+
+def get_logger() -> logging.Logger:
+    """The shared "repro" logger: stdout handler, message-only format,
+    no propagation (pytest and app root handlers stay clean)."""
+    global _configured
+    logger = logging.getLogger(_LOGGER_NAME)
+    if not _configured:
+        if not logger.handlers:
+            handler = logging.StreamHandler(sys.stdout)
+            handler.setFormatter(logging.Formatter("%(message)s"))
+            logger.addHandler(handler)
+        logger.setLevel(logging.INFO)
+        logger.propagate = False
+        _configured = True
+    return logger
+
+
+def _render(value) -> str:
+    if isinstance(value, float):
+        text = f"{value:.1f}"
+    else:
+        text = str(value)
+    return text.replace(" ", "_")
+
+
+def format_line(event: str, **fields) -> str:
+    """``[event] k=v k=v`` — exposed separately so tests can assert the
+    exact line without capturing log output."""
+    parts = [f"[{event}]"]
+    parts.extend(f"{k}={_render(v)}" for k, v in fields.items())
+    return " ".join(parts)
+
+
+def emit(event: str, **fields) -> None:
+    get_logger().info(format_line(event, **fields))

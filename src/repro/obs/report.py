@@ -1,0 +1,223 @@
+"""Run-report surface: ``python -m repro.obs.report <metrics-dir>``.
+
+Renders the JSONL a :class:`repro.obs.sink.JsonlSink` wrote during a run
+into a per-stage bottleneck table:
+
+* **stage table** — for each pipeline stage (actor, gateway, add,
+  sample, learn, writeback): span count, sustained rate over the
+  observed window, and p50/p95/p99 of the stage's own duration.
+* **inter-stage gaps** — wall-time between consecutive stages of the
+  same trace id (actor→gateway, gateway→add, sample→learn,
+  learn→writeback): this is where a bottleneck shows up as queue time
+  that no single stage's duration explains.
+* **queue depths** — last-seen gauge values (shard add/sample queues,
+  staged prefetch depth, replay size).
+* **stall counters** — starvation and backpressure totals (learner
+  starved polls, actor add-blocked, gateway add retries).
+
+The tool reads only what the sink wrote — run it offline, long after
+the run, on a copied directory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .sink import METRICS_FILE, SPANS_FILE
+
+# Canonical pipeline order; report rows render in this order with any
+# unknown stages appended (future planes report in without edits here).
+STAGE_ORDER = ["actor", "gateway", "add", "sample", "learn", "writeback"]
+
+# Consecutive same-trace-id stage pairs whose wall-time gap is queue
+# time between planes. (add → sample is NOT a pair: a block's add id and
+# a batch's sample id are different traces by design.)
+GAP_PAIRS = [("actor", "gateway"), ("gateway", "add"),
+             ("sample", "learn"), ("learn", "writeback")]
+
+_STALL_TOKENS = ("starved", "backpressure", "blocked", "retries", "dropped")
+
+
+def _read_jsonl(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # torn tail line from a crashed run
+    return out
+
+
+def _percentile(values: list[float], q: float) -> float:
+    """numpy-style 'linear' percentile on a raw sample, stdlib only."""
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    rank = (q / 100.0) * (len(vals) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(vals) - 1)
+    frac = rank - lo
+    return vals[lo] + frac * (vals[hi] - vals[lo])
+
+
+def load_report(directory: str) -> dict:
+    """Aggregate a metrics dir into the report's data model."""
+    metrics = _read_jsonl(os.path.join(directory, METRICS_FILE))
+    spans = _read_jsonl(os.path.join(directory, SPANS_FILE))
+
+    # --- stage table -----------------------------------------------------
+    by_stage: dict[str, list[dict]] = {}
+    for span in spans:
+        by_stage.setdefault(span.get("stage", "?"), []).append(span)
+    ts_all = [s["ts"] for s in spans if "ts" in s]
+    window_s = max(max(ts_all) - min(ts_all), 1e-9) if ts_all else 0.0
+    stages = {}
+    for stage, group in by_stage.items():
+        durs = [s["dur_us"] for s in group if "dur_us" in s]
+        stages[stage] = {
+            "count": len(group),
+            "rate_hz": len(group) / window_s if window_s else 0.0,
+            "p50_us": _percentile(durs, 50.0),
+            "p95_us": _percentile(durs, 95.0),
+            "p99_us": _percentile(durs, 99.0),
+        }
+
+    # --- inter-stage gaps ------------------------------------------------
+    by_tid: dict[int, dict[str, float]] = {}
+    for span in spans:
+        tid = span.get("trace_id")
+        if tid:
+            # first occurrence wins: the gap measures when the stage
+            # first touched this trace.
+            by_tid.setdefault(tid, {}).setdefault(
+                span.get("stage", "?"), span.get("ts", 0.0))
+    gaps = {}
+    for src, dst in GAP_PAIRS:
+        deltas = [(st[dst] - st[src]) * 1e6 for st in by_tid.values()
+                  if src in st and dst in st and st[dst] >= st[src]]
+        if deltas:
+            gaps[f"{src}->{dst}"] = {
+                "count": len(deltas),
+                "p50_us": _percentile(deltas, 50.0),
+                "p95_us": _percentile(deltas, 95.0),
+                "p99_us": _percentile(deltas, 99.0),
+            }
+
+    # --- last-seen gauges / stall counters -------------------------------
+    last = metrics[-1] if metrics else {}
+    gauges = dict(last.get("gauges", {}))
+    counters = dict(last.get("counters", {}))
+    stalls = {k: v for k, v in counters.items()
+              if any(tok in k for tok in _STALL_TOKENS)}
+
+    return {"directory": directory, "window_s": window_s,
+            "num_spans": len(spans), "num_snapshots": len(metrics),
+            "stages": stages, "gaps": gaps, "gauges": gauges,
+            "counters": counters, "stalls": stalls,
+            "histograms": dict(last.get("histograms", {}))}
+
+
+def _fmt_row(cols, widths):
+    return "  ".join(str(c).rjust(w) for c, w in zip(cols, widths))
+
+
+def render(report: dict) -> str:
+    lines = []
+    lines.append(f"run report: {report['directory']}")
+    lines.append(f"  spans={report['num_spans']}"
+                 f" snapshots={report['num_snapshots']}"
+                 f" window={report['window_s']:.2f}s")
+
+    stages = report["stages"]
+    if stages:
+        order = [s for s in STAGE_ORDER if s in stages]
+        order += sorted(s for s in stages if s not in STAGE_ORDER)
+        widths = (10, 8, 10, 10, 10, 10)
+        lines.append("")
+        lines.append("stage durations (traced spans)")
+        lines.append(_fmt_row(
+            ("stage", "count", "rate/s", "p50_us", "p95_us", "p99_us"),
+            widths))
+        for stage in order:
+            row = stages[stage]
+            lines.append(_fmt_row(
+                (stage, row["count"], f"{row['rate_hz']:.1f}",
+                 f"{row['p50_us']:.1f}", f"{row['p95_us']:.1f}",
+                 f"{row['p99_us']:.1f}"), widths))
+
+    gaps = report["gaps"]
+    if gaps:
+        widths = (18, 8, 12, 12, 12)
+        lines.append("")
+        lines.append("inter-stage gaps (same trace id, wall time)")
+        lines.append(_fmt_row(
+            ("edge", "count", "p50_us", "p95_us", "p99_us"), widths))
+        for edge, row in gaps.items():
+            lines.append(_fmt_row(
+                (edge, row["count"], f"{row['p50_us']:.1f}",
+                 f"{row['p95_us']:.1f}", f"{row['p99_us']:.1f}"), widths))
+
+    if report["gauges"]:
+        lines.append("")
+        lines.append("queue depths / levels (last snapshot)")
+        for name in sorted(report["gauges"]):
+            lines.append(f"  {name} = {report['gauges'][name]:g}")
+
+    if report["stalls"]:
+        lines.append("")
+        lines.append("starvation / backpressure counters")
+        for name in sorted(report["stalls"]):
+            lines.append(f"  {name} = {report['stalls'][name]}")
+
+    hists = report["histograms"]
+    if hists:
+        widths = (28, 8, 10, 10, 10, 10)
+        lines.append("")
+        lines.append("latency histograms (full run)")
+        lines.append(_fmt_row(
+            ("name", "count", "mean_us", "p50_us", "p95_us", "p99_us"),
+            widths))
+        for name in sorted(hists):
+            h = hists[name]
+            if not h.get("count"):
+                continue
+            lines.append(_fmt_row(
+                (name, h["count"], f"{h['mean']:.1f}", f"{h['p50']:.1f}",
+                 f"{h['p95']:.1f}", f"{h['p99']:.1f}"), widths))
+
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Render a run's metrics/span JSONL into a per-stage "
+                    "bottleneck table.")
+    ap.add_argument("metrics_dir",
+                    help="directory passed as --metrics-dir to the run")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the raw aggregated report as JSON")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.metrics_dir):
+        print(f"error: {args.metrics_dir} is not a directory",
+              file=sys.stderr)
+        return 2
+    report = load_report(args.metrics_dir)
+    if args.json:
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        print(render(report))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,111 @@
+"""Pipeline tracing: follow one transition block across the planes.
+
+A traced block picks up a compact 64-bit id at the actor, and every
+stage that touches it — gateway decode/route, shard add, sample refill,
+learner step, priority write-back — records a *span* (stage name, id,
+duration, wall time, a few fields) into a bounded in-process buffer.
+Between processes the id rides a dedicated header field in the v3 wire
+frame (:mod:`repro.net.wire`), so a block that crosses the gateway keeps
+its identity without payload changes; ``trace_id == 0`` means untraced
+and costs one integer compare on the hot path.
+
+Sampling is deterministic, not random: the id source keeps a sequence
+counter and traces every ``round(1/rate)``-th call. Determinism matters
+here — tests can set rate 1.0 and assert exact propagation, and two runs
+at the same rate trace the same block positions, making run-to-run span
+diffs meaningful.
+
+Span semantics per plane:
+
+* **ingest**: actor → gateway → add share one id (the block's), so
+  inter-stage gaps in :mod:`repro.obs.report` measure queue time between
+  planes.
+* **consume**: each sampled batch draws a fresh id at the sample stage;
+  learn and write-back inherit it via ``SampleSource.last_trace_id``, so
+  the sample → learn → writeback chain is linked per batch.
+
+Durations for jitted stages are honest only under a device sync; traced
+ops force ``block_until_ready`` (see ``ReplayShard._timed``), which is
+why the sample rate default is 0 and the overhead bench gates the
+enabled path at >= 0.98x disabled.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+
+# Bounded span buffer: at the default 1s sink flush interval even a
+# rate-1.0 smoke run produces a few thousand spans/s; 64k absorbs sink
+# stalls without unbounded growth. Overflow drops oldest (deque maxlen).
+_DEFAULT_BUFFER_CAP = 65536
+
+
+class Tracer:
+    """Deterministic-sampled trace-id source plus a bounded span buffer."""
+
+    def __init__(self, sample_rate: float = 0.0,
+                 buffer_cap: int = _DEFAULT_BUFFER_CAP):
+        if not 0.0 <= sample_rate <= 1.0:
+            raise ValueError(
+                f"trace sample rate must be in [0, 1], got {sample_rate}")
+        self.sample_rate = float(sample_rate)
+        # every N-th sample() call draws a real id; rate 0 disables.
+        self._period = 0 if sample_rate <= 0.0 else max(
+            1, round(1.0 / sample_rate))
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._next_id = 1
+        # pid in the top bits keeps ids unique across actor processes
+        # without coordination; 48 bits of counter is inexhaustible.
+        self._id_prefix = (os.getpid() & 0xFFFF) << 48
+        self._spans: deque[dict] = deque(maxlen=buffer_cap)
+
+    @property
+    def enabled(self) -> bool:
+        return self._period > 0
+
+    def new_id(self) -> int:
+        """A fresh nonzero trace id, unconditionally (no sampling)."""
+        with self._lock:
+            tid = self._id_prefix | self._next_id
+            self._next_id = (self._next_id + 1) & ((1 << 48) - 1) or 1
+        return tid
+
+    def sample(self) -> int:
+        """A trace id for this event if it is sampled, else 0."""
+        if self._period == 0:
+            return 0
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        if seq % self._period:
+            return 0
+        return self.new_id()
+
+    def record(self, stage: str, trace_id: int, dur_us: float,
+               **fields) -> None:
+        """Append one span. No-op for trace_id 0 so call sites can pass
+        the id through unconditionally."""
+        if not trace_id:
+            return
+        span = {"stage": stage, "trace_id": trace_id,
+                "dur_us": float(dur_us), "ts": time.time()}
+        if fields:
+            span.update(fields)
+        self._spans.append(span)  # deque.append is atomic under the GIL
+
+    def drain(self) -> list[dict]:
+        """Remove and return all buffered spans (sink flush path)."""
+        out = []
+        while True:
+            try:
+                out.append(self._spans.popleft())
+            except IndexError:
+                return out
+
+    def peek(self) -> list[dict]:
+        """Non-destructive copy of the buffer (test assertions)."""
+        return list(self._spans)

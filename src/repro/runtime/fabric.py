@@ -123,7 +123,7 @@ class ReplayFabric:
                  batch_size: int | None = None, add_queue_depth: int = 4,
                  sample_queue_depth: int = 2, seed: int = 0,
                  poll_s: float = 0.05, fns: ShardFns | None = None,
-                 ingest_staging: bool = False):
+                 ingest_staging: bool = False, telemetry=None):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         batch = batch_size or cfg.batch_size
@@ -153,7 +153,7 @@ class ReplayFabric:
                         add_queue_depth=add_queue_depth,
                         sample_queue_depth=sample_queue_depth,
                         seed=seed + k, shard_id=k, fns=fns, poll_s=poll_s,
-                        ingest_staging=ingest_staging)
+                        ingest_staging=ingest_staging, telemetry=telemetry)
             for k in range(num_shards)]
         self._poll_s = poll_s
         self._ticket = 0
@@ -196,8 +196,8 @@ class ReplayFabric:
         """Aggregated counters across shards, safe while running. Counters
         sum per-shard values (note ``updates_applied`` counts per-shard
         write-back applications: one learner step touches every shard);
-        the per-op latency EMAs (``*_us``) average over the shards that
-        have a measurement."""
+        the per-op latency means (``*_us``) average over the shards that
+        have a measurement, weighted by each shard's op count."""
         return ServiceStats.aggregate(self.shard_snapshots())
 
     def shard_snapshots(self) -> list[ServiceStats]:
@@ -210,10 +210,11 @@ class ReplayFabric:
     # -- actor side ---------------------------------------------------------
 
     def add(self, block: phases.TransitionBlock,
-            timeout: float | None = None) -> bool:
+            timeout: float | None = None, trace_id: int = 0) -> bool:
         """Route a block to the next shard in the rotation; False when that
         shard's bounded queue stayed full (backpressure — the rotation has
-        already advanced, so a retry lands on the next shard)."""
+        already advanced, so a retry lands on the next shard). A nonzero
+        ``trace_id`` follows the block to the owning shard's add span."""
         n = int(block.priorities.shape[0])
         if n > self.shard_capacity:
             raise ValueError(
@@ -224,7 +225,7 @@ class ReplayFabric:
         with self._ticket_lock:
             k = self._ticket % self.num_shards
             self._ticket += 1
-        return self.shards[k].add(block, timeout)
+        return self.shards[k].add(block, timeout, trace_id=trace_id)
 
     # -- learner side -------------------------------------------------------
 
@@ -245,9 +246,12 @@ class ReplayFabric:
             return subs[0]  # plain SampleBatch: key == slot, native weights
         return FabricBatch(*self._merge(subs))
 
-    def write_back(self, indices: jax.Array, priorities: jax.Array) -> None:
+    def write_back(self, indices: jax.Array, priorities: jax.Array,
+                   trace_id: int = 0) -> None:
         """Scatter learner priorities back to the owning shards by decoding
-        the global ``(shard, slot)`` keys (Alg. 2 l.8).
+        the global ``(shard, slot)`` keys (Alg. 2 l.8). A nonzero
+        ``trace_id`` marks every shard's segment apply as part of the same
+        batch trace (the batch fans out; the trace follows all of it).
 
         The keys are self-describing (``shard = key // shard_capacity``), so
         any subset/ordering of keys from batches this fabric assembled is
@@ -262,12 +266,14 @@ class ReplayFabric:
         see stable shapes and compile once.
         """
         if self.num_shards == 1:
-            self.shards[0].write_back(indices, priorities)
+            self.shards[0].write_back(indices, priorities,
+                                      trace_id=trace_id)
             return
         slots, prios, counts = self._part(indices, priorities)
         off = 0
         for k, n in enumerate(np.asarray(counts).tolist()):
             if n:
                 self.shards[k].write_back(slots[off:off + n],
-                                          prios[off:off + n])
+                                          prios[off:off + n],
+                                          trace_id=trace_id)
             off += n

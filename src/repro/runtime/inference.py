@@ -32,6 +32,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.obs import Telemetry
 from repro.runtime import phases
 from repro.runtime.params import ParamStore
 
@@ -59,8 +60,15 @@ class InferenceServer:
 
     def __init__(self, cfg, env, agent, store: ParamStore, *,
                  max_batch: int, param_sync_period: int | None = None,
-                 coalesce_s: float = 0.002):
+                 coalesce_s: float = 0.002,
+                 telemetry: Telemetry | None = None):
         self._cfg = cfg
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        # Wave *issue* latency (stack + jit dispatch, not synced — syncing
+        # would serialize the pipeline this server exists to keep full)
+        # and wave occupancy, for the obs report's inference row.
+        self._h_wave = self._tel.histogram("inference/wave_us")
+        self._g_wave = self._tel.gauge("inference/wave_size")
         self._store = store
         self._max_batch = max_batch
         self._sync_period = (param_sync_period if param_sync_period is not None
@@ -180,10 +188,13 @@ class InferenceServer:
             # (padding lanes recompute a duplicate rollout and are dropped).
             pad = self._max_batch - len(wave)
             reqs = wave + [wave[-1]] * pad
+            t0 = time.perf_counter()
             slices = jax.tree.map(lambda *xs: jnp.stack(xs),
                                   *[r.aslice for r in reqs])
             sids = jnp.asarray([r.shard_id for r in reqs], jnp.int32)
             out = self._fn(self._snap.params, slices, sids)
+            self._h_wave.record(1e6 * (time.perf_counter() - t0))
+            self._g_wave.set(len(wave))
             for i, req in enumerate(wave):
                 req.result = jax.tree.map(lambda x: x[i], out)
         except BaseException as e:  # noqa: BLE001

@@ -55,6 +55,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.obs import Telemetry
+from repro.obs import log as obslog
 from repro.runtime import phases
 from repro.runtime.fabric import ReplayFabric
 from repro.runtime.inference import InferenceServer, InferenceStats
@@ -138,6 +140,16 @@ class AsyncConfig:
     coalesce_s: float = 0.002        # inference-server wave-forming window
     progress_every_s: float | None = None  # log a fabric-snapshot line every
                                      # so many seconds (None: no progress log)
+    metrics_dir: str | None = None   # telemetry plane: write metrics.jsonl /
+                                     # spans.jsonl snapshots here (None: keep
+                                     # the registry in-process only). Render
+                                     # with `python -m repro.obs.report DIR`.
+    trace_sample_rate: float = 0.0   # fraction of transition blocks / learner
+                                     # batches that carry a pipeline trace id
+                                     # (0: tracing off; 1: every block). Traced
+                                     # ops force a device sync for honest
+                                     # stage durations — keep this small on
+                                     # hot runs.
     seed: int = 0
 
 
@@ -235,6 +247,10 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             f"add={acfg.add_queue_depth}, sample={acfg.sample_queue_depth})")
     if acfg.inference_batching and acfg.actor_threads < 1:
         raise ValueError("inference_batching needs in-process actor threads")
+    if not 0.0 <= acfg.trace_sample_rate <= 1.0:
+        raise ValueError(
+            "AsyncConfig.trace_sample_rate is a sampling fraction in "
+            f"[0, 1], got {acfg.trace_sample_rate}")
     cfg = _actor_geometry(cfg, acfg)
     rng = jax.random.key(acfg.seed) if rng is None else rng
     p_rng, _ = jax.random.split(rng)
@@ -254,14 +270,18 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     item = phases.item_example(env, obs0, cfg.compress_obs)
 
     store = ParamStore(params)
+    # One telemetry bundle for the whole run: every plane (fabric shards,
+    # gateway, sample source, inference server, the loops below) records
+    # into the same registry/tracer, and one sink thread flushes it.
+    tel = Telemetry.for_run(acfg.metrics_dir, acfg.trace_sample_rate)
     fabric = None if remote else ReplayFabric(
         cfg, item, num_shards=acfg.replay_shards,
         add_queue_depth=acfg.add_queue_depth,
         sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1,
-        ingest_staging=acfg.ingest_staging)
+        ingest_staging=acfg.ingest_staging, telemetry=tel)
     server = (InferenceServer(cfg, env, agent, store,
                               max_batch=acfg.actor_threads,
-                              coalesce_s=acfg.coalesce_s)
+                              coalesce_s=acfg.coalesce_s, telemetry=tel)
               if acfg.inference_batching else None)
     gateway = None
     if acfg.actor_procs > 0 or serving:
@@ -275,7 +295,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             # let each client negotiate (cross-host peers stay tcp anyway).
             accept_shm=acfg.transport != "tcp",
             ring_bytes=(acfg.transport_ring_bytes
-                        or transport_lib.DEFAULT_RING_BYTES))
+                        or transport_lib.DEFAULT_RING_BYTES),
+            telemetry=tel)
 
     # -- sample plane ------------------------------------------------------
     # The learner consumes a SampleSource and never reaches into fabric
@@ -293,11 +314,13 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 ring_bytes=(acfg.transport_ring_bytes
                             or transport_lib.DEFAULT_RING_BYTES),
                 quantize_prios=acfg.wire_quantize_prios,
-                quantize_params=acfg.wire_quantize_params)
+                quantize_params=acfg.wire_quantize_params,
+                telemetry=tel)
         else:
-            source = LocalFabricSource(fabric)
+            source = LocalFabricSource(fabric, telemetry=tel)
         if acfg.sample_staging:
-            source = StagedSource(source, poll_s=acfg.starve_timeout_s)
+            source = StagedSource(source, poll_s=acfg.starve_timeout_s,
+                                  telemetry=tel)
 
     act_fn = (jax.jit(lambda p, sl, sid: phases.act_phase(
                   cfg, env, agent, p, sl, sid))
@@ -377,7 +400,13 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         sid = jnp.int32(t)
         snap = store.get()
         rollouts = blocked = pushed = 0
+        tracer = tel.tracer
         while not stop.is_set():
+            # A traced rollout opens the block's pipeline trace: the same id
+            # rides the fabric add (and, for remote actors, the wire header)
+            # so the report can line stages up per block.
+            tid = tracer.sample()
+            t_roll = time.perf_counter() if tid else 0.0
             if server is not None:
                 # Batched inference: param refresh happens server-side.
                 res = server.act(sl, t)
@@ -388,8 +417,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 if rollouts % cfg.param_sync_period == 0:
                     snap = store.get()
                 sl, block, metrics = act_fn(snap.params, sl, sid)
+            if tid:
+                jax.block_until_ready(block)  # honest rollout duration
+                tracer.record("actor", tid,
+                              1e6 * (time.perf_counter() - t_roll), actor=t)
             while not stop.is_set():
-                if fabric.add(block, timeout=acfg.add_poll_s):
+                if fabric.add(block, timeout=acfg.add_poll_s, trace_id=tid):
                     pushed += 1
                     break
                 blocked += 1  # bounded queue full: actor is backpressured
@@ -413,9 +446,21 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 starved += 1  # replay below min-fill or prefetch lagging
                 continue
             if learn_k == 1:
+                # The source stamped this batch's consume-plane trace id
+                # when it drew it; the learn span and the priority
+                # write-back inherit it (k > 1 chunks stay untraced — one
+                # jitted call spans k batches, so a per-batch duration
+                # would be a lie).
+                tid = source.last_trace_id
+                t_learn = time.perf_counter() if tid else 0.0
                 lsl, new_prios, _ = learn_fn(lsl, batch.items,
                                              batch.is_weights)
-                source.write_back(batch.indices, new_prios)
+                if tid:
+                    jax.block_until_ready(new_prios)  # honest learn duration
+                    tel.tracer.record(
+                        "learn", tid,
+                        1e6 * (time.perf_counter() - t_learn), step=steps)
+                source.write_back(batch.indices, new_prios, trace_id=tid)
                 steps += 1
             else:
                 pending.append(batch)
@@ -480,16 +525,19 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             snap = (fabric.snapshot() if fabric is not None
                     else source.snapshot())
             dt = time.perf_counter() - t_start
-            print(f"[async +{dt:6.1f}s] generated={snap.transitions_added} "
-                  f"sampled_batches={snap.batches_sampled} "
-                  f"writebacks={snap.updates_applied} "
-                  f"replay_size~{snap.replay_size} "
-                  f"lat_us(add/sample/wb/h2d)={snap.add_us:.0f}/"
-                  f"{snap.sample_us:.0f}/{snap.writeback_us:.0f}/"
-                  f"{snap.h2d_us:.0f} "
-                  f"params_v{store.version}")
+            obslog.emit(
+                "async", t=round(dt, 1),
+                generated=snap.transitions_added,
+                sampled_batches=snap.batches_sampled,
+                writebacks=snap.updates_applied,
+                replay_size=snap.replay_size,
+                add_us=round(snap.add_us), sample_us=round(snap.sample_us),
+                writeback_us=round(snap.writeback_us),
+                h2d_us=round(snap.h2d_us),
+                params_v=store.version)
 
     # -- drive ------------------------------------------------------------
+    tel.start()  # sink flush thread (no-op without metrics_dir)
     if fabric is not None:
         fabric.start()
     if server is not None:
@@ -502,8 +550,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         if serving:
             # The learner host needs this address to attach; ephemeral
             # ports are only discoverable here.
-            print(f"[serve-sampling] replay gateway listening on "
-                  f"{gateway.host}:{gateway.port}")
+            obslog.emit("serve-sampling", listening=True,
+                        host=gateway.host, port=gateway.port)
         ctx = multiprocessing.get_context("spawn")  # never fork a jax parent
         # A wildcard bind serves remote peers; local subprocesses dial
         # loopback rather than the unroutable 0.0.0.0.
@@ -517,6 +565,7 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 max_inflight=acfg.ingest_max_inflight,
                 quantize_obs=acfg.wire_quantize_obs,
                 transport=acfg.transport,
+                trace_sample_rate=acfg.trace_sample_rate,
                 **({"ring_bytes": acfg.transport_ring_bytes}
                    if acfg.transport_ring_bytes else {}))
             p = ctx.Process(target=run_remote_actor, args=(spec,),
@@ -599,6 +648,10 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             # A shard may die after the learner's last call (e.g. during the
             # final drain) — no later add/get_batch would surface it.
             thread_errors.append(fabric.error)
+    # Final flush *after* every plane stopped, so the last metrics snapshot
+    # and the tail of the span buffer land in the JSONL (even on failure —
+    # a run that died is exactly the one worth reading the report of).
+    tel.stop()
     if thread_errors:
         raise RuntimeError(
             f"async runtime worker died after {dt:.1f}s") from thread_errors[0]

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import replay as replay_lib
+from repro.obs import Telemetry
 from repro.runtime import phases
 
 # Owner-loop ops between refreshes of the host-visible ``replay_size`` (each
@@ -47,12 +48,13 @@ from repro.runtime import phases
 _SIZE_REFRESH_OPS = 32
 
 # Per-op latency is *sampled*: every Nth op of each kind is synced
-# (block_until_ready) and timed, and the measurement folded into an EMA.
-# Sampling keeps the owner loop's async dispatch pipeline intact between
-# measurements; the sync makes the sampled number an honest applied latency
-# (it absorbs any backlog the op queued behind).
+# (block_until_ready) and timed, and the measurement recorded into the
+# shard's latency histogram (``repro.obs``). Sampling keeps the owner
+# loop's async dispatch pipeline intact between measurements; the sync
+# makes the sampled number an honest applied latency (it absorbs any
+# backlog the op queued behind). Ops carrying a trace id are always
+# synced — a traced span must be an honest duration.
 _LATENCY_SAMPLE_EVERY = 8
-_LATENCY_EMA_WEIGHT = 0.2
 
 
 @dataclasses.dataclass
@@ -68,10 +70,12 @@ class ServiceStats:
                                    # one learner step touches every shard)
     replay_size: int = 0           # live items (refreshed periodically while
                                    # running; exact after stop())
-    add_us: float = 0.0            # EMA applied-latency per op kind, in
-    sample_us: float = 0.0         # microseconds (0.0 until first sample;
-    writeback_us: float = 0.0      # fabric aggregation averages, not sums)
-    h2d_us: float = 0.0            # EMA *issue* latency of the ingest
+    add_us: float = 0.0            # mean applied-latency per op kind, in
+    sample_us: float = 0.0         # microseconds — a derived view of the
+    writeback_us: float = 0.0      # shard's obs histograms (0.0 until the
+                                   # first sampled measurement; fabric
+                                   # aggregation op-count-weights, not sums)
+    h2d_us: float = 0.0            # mean *issue* latency of the ingest
                                    # stager's async device_put (the DMA
                                    # itself overlaps the previous add; 0.0
                                    # when staging is off or passes through)
@@ -79,19 +83,36 @@ class ServiceStats:
                                    # by the ingest stager (0 on CPU, where
                                    # staging passes through)
 
+    # Which counter weights each latency field when shard snapshots are
+    # folded: a shard's mean only counts in proportion to the ops behind it.
+    _US_WEIGHTS = {"add_us": "blocks_added", "sample_us": "batches_sampled",
+                   "writeback_us": "updates_applied",
+                   "h2d_us": "blocks_staged"}
+
     @classmethod
     def aggregate(cls, snaps: "list[ServiceStats]") -> "ServiceStats":
         """Combine per-shard snapshots into one view: counters sum, the
-        per-op latency EMAs (``*_us``) average over the shards that have a
-        measurement. Lives with the dataclass so every holder of shard
-        snapshots (the fabric, sample sources, benches) folds them the same
-        way."""
+        per-op latency means (``*_us``) average weighted by each shard's
+        op count — an unweighted mean would let a nearly idle shard (one
+        measurement) drag the fabric view as hard as a hot one. Lives with
+        the dataclass so every holder of shard snapshots (the fabric,
+        sample sources, benches) folds them the same way."""
         agg = cls()
         for f in dataclasses.fields(cls):
             vals = [getattr(s, f.name) for s in snaps]
             if f.name.endswith("_us"):
-                nz = [v for v in vals if v > 0.0]
-                setattr(agg, f.name, sum(nz) / len(nz) if nz else 0.0)
+                wfield = cls._US_WEIGHTS[f.name]
+                pairs = [(v, getattr(s, wfield))
+                         for v, s in zip(vals, snaps) if v > 0.0]
+                wsum = sum(w for _, w in pairs)
+                if wsum > 0:
+                    setattr(agg, f.name,
+                            sum(v * w for v, w in pairs) / wsum)
+                elif pairs:
+                    # measurements exist but op counters are still zero
+                    # (snapshot raced the first _bump): plain mean.
+                    setattr(agg, f.name,
+                            sum(v for v, _ in pairs) / len(pairs))
             else:
                 setattr(agg, f.name, sum(vals))
         return agg
@@ -136,7 +157,8 @@ class ReplayShard:
                  sample_queue_depth: int = 2, seed: int = 0,
                  shard_id: int = 0, fns: ShardFns | None = None,
                  poll_s: float = 0.05, ingest_staging: bool = False,
-                 stager: "Any | None" = None):
+                 stager: "Any | None" = None,
+                 telemetry: Telemetry | None = None):
         self._cfg = cfg
         # Private copy: add/writeback *donate* the state into jit, deleting
         # its buffers. Copying here keeps the caller's reference readable
@@ -170,6 +192,20 @@ class ReplayShard:
         self.stats = ServiceStats()
         self.error: BaseException | None = None
 
+        # Telemetry: instruments live in the (possibly run-shared)
+        # registry under a per-shard namespace; the *_us histograms are
+        # the source of truth the ServiceStats *_us fields derive from.
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        pre = f"shard{shard_id}"
+        self._hists = {k: self._tel.histogram(f"{pre}/{k}_us")
+                       for k in ("add", "sample", "writeback", "h2d")}
+        self._g_add_q = self._tel.gauge(f"{pre}/add_queue_depth")
+        self._g_sample_q = self._tel.gauge(f"{pre}/sample_queue_depth")
+        self._g_update_q = self._tel.gauge(f"{pre}/update_queue_depth")
+        self._g_size = self._tel.gauge(f"{pre}/replay_size")
+        self._c_add_blocked = self._tel.counter(f"{pre}/add_backpressure")
+        self._c_starved = self._tel.counter(f"{pre}/get_batch_starved")
+
     @property
     def learner_steps(self) -> int:
         """Eviction-clock position: one applied write-back == one step."""
@@ -198,9 +234,15 @@ class ReplayShard:
         """Consistent copy of the running counters, safe to call from any
         thread at any time. ``replay_size`` is refreshed by the owner loop
         every ~``_SIZE_REFRESH_OPS`` applied ops (exact after ``stop()``);
-        the other counters are exact at the moment of the snapshot."""
+        the other counters are exact at the moment of the snapshot. The
+        ``*_us`` fields are derived views — the running mean of the
+        shard's latency histograms — kept on the dataclass so benches and
+        progress logs read one object."""
         with self._stats_lock:
-            return dataclasses.replace(self.stats)
+            snap = dataclasses.replace(self.stats)
+        for kind, hist in self._hists.items():
+            setattr(snap, f"{kind}_us", hist.mean)
+        return snap
 
     # -- actor side ---------------------------------------------------------
 
@@ -210,17 +252,21 @@ class ReplayShard:
                 f"replay shard {self.shard_id} died") from self.error
 
     def add(self, block: phases.TransitionBlock,
-            timeout: float | None = None) -> bool:
+            timeout: float | None = None, trace_id: int = 0) -> bool:
         """Enqueue a transition block; False when the bounded queue stayed
         full for ``timeout`` seconds (the caller is being backpressured).
         ``timeout=None`` uses the ``poll_s`` configured at construction
-        (the runner instead passes ``AsyncConfig.add_poll_s`` explicitly)."""
+        (the runner instead passes ``AsyncConfig.add_poll_s`` explicitly).
+        A nonzero ``trace_id`` rides the queue with the block and marks
+        its apply as a traced "add" span."""
         self._check_alive()
         try:
-            self._add_q.put(block, timeout=self._poll_s if timeout is None
+            self._add_q.put((block, trace_id),
+                            timeout=self._poll_s if timeout is None
                             else timeout)
             return True
         except queue.Full:
+            self._c_add_blocked.inc()
             return False
 
     # -- learner side -------------------------------------------------------
@@ -233,11 +279,15 @@ class ReplayShard:
             return self._sample_q.get(timeout=self._poll_s if timeout is None
                                       else timeout)
         except queue.Empty:
+            self._c_starved.inc()
             return None
 
-    def write_back(self, indices: jax.Array, priorities: jax.Array) -> None:
-        """Queue a priority write-back (Alg. 2 l.8); applied asynchronously."""
-        self._update_q.put((indices, priorities))
+    def write_back(self, indices: jax.Array, priorities: jax.Array,
+                   trace_id: int = 0) -> None:
+        """Queue a priority write-back (Alg. 2 l.8); applied asynchronously.
+        A nonzero ``trace_id`` marks the apply as a traced "writeback"
+        span, closing the batch's sample → learn → writeback chain."""
+        self._update_q.put((indices, priorities, trace_id))
 
     # -- owner loop ---------------------------------------------------------
 
@@ -255,31 +305,34 @@ class ReplayShard:
             size = int(self._state.size)
             with self._stats_lock:
                 self.stats.replay_size = size
+            self._g_size.set(size)
 
-    def _timed(self, kind: str, fn, *args):
+    def _timed(self, kind: str, fn, *args, trace_id: int = 0):
         """Dispatch an op; every ``_LATENCY_SAMPLE_EVERY``th call of each
-        kind is synced and timed into the ``<kind>_us`` EMA (hot-path
-        regressions surface in runner progress logs and bench counters)."""
+        kind — and every traced call — is synced and timed into the
+        shard's ``<kind>_us`` histogram (hot-path regressions surface in
+        runner progress logs, bench counters, and the obs report). Traced
+        calls additionally record a pipeline span under the op's stage
+        name so the block/batch chain stays linked across planes."""
         self._op_seq[kind] += 1
-        if self._op_seq[kind] % _LATENCY_SAMPLE_EVERY:
+        if self._op_seq[kind] % _LATENCY_SAMPLE_EVERY and not trace_id:
             return fn(*args)
         t0 = time.perf_counter()
         out = jax.block_until_ready(fn(*args))
         us = 1e6 * (time.perf_counter() - t0)
-        field = f"{kind}_us"
-        with self._stats_lock:
-            prev = getattr(self.stats, field)
-            setattr(self.stats, field,
-                    us if prev == 0.0
-                    else prev + _LATENCY_EMA_WEIGHT * (us - prev))
+        self._hists[kind].record(us)
+        if trace_id:
+            self._tel.tracer.record(kind, trace_id, us,
+                                    shard=self.shard_id)
         return out
 
     def _stage_block(self, block: phases.TransitionBlock):
         """Issue the async H2D put for a block (no-op without a stager).
 
-        The put's *issue* time feeds the ``h2d_us`` EMA — deliberately not
-        synced: the transfer itself is the thing being overlapped, so timing
-        its completion would serialize exactly what staging hides."""
+        The put's *issue* time feeds the ``h2d_us`` histogram —
+        deliberately not synced: the transfer itself is the thing being
+        overlapped, so timing its completion would serialize exactly what
+        staging hides."""
         if self._stager is None:
             return block
         before = self._stager.blocks_staged
@@ -290,13 +343,13 @@ class ReplayShard:
             return staged
         with self._stats_lock:
             self.stats.blocks_staged += 1
-            prev = self.stats.h2d_us
-            self.stats.h2d_us = (us if prev == 0.0
-                                 else prev + _LATENCY_EMA_WEIGHT * (us - prev))
+        self._hists["h2d"].record(us)
         return staged
 
-    def _apply_add(self, block: phases.TransitionBlock) -> None:
-        self._state = self._timed("add", self._fns.add, self._state, block)
+    def _apply_add(self, block: phases.TransitionBlock,
+                   trace_id: int = 0) -> None:
+        self._state = self._timed("add", self._fns.add, self._state, block,
+                                  trace_id=trace_id)
         self._bump(blocks_added=1,
                    transitions_added=int(block.priorities.shape[0]))
 
@@ -329,18 +382,25 @@ class ReplayShard:
     def _run(self) -> None:
         while True:
             progressed = False
+            # Queue-depth gauges once per loop pass: cheap (three qsize
+            # reads), and the interval sink turns them into the queue
+            # pressure row of the obs report.
+            self._g_add_q.set(self._add_q.qsize())
+            self._g_sample_q.set(self._sample_q.qsize())
+            self._g_update_q.set(self._update_q.qsize())
 
             # 1. Priority write-backs first: they advance the eviction clock
             # and keep the sampling distribution fresh (Alg. 2 l.8).
             while True:
                 try:
-                    idx, prios = self._update_q.get_nowait()
+                    idx, prios, tid = self._update_q.get_nowait()
                 except queue.Empty:
                     break
                 step = self.stats.updates_applied + 1
                 self._state = self._timed(
                     "writeback", self._fns.writeback,
-                    self._state, idx, prios, step, self._next_rng())
+                    self._state, idx, prios, step, self._next_rng(),
+                    trace_id=tid)
                 self._bump(updates_applied=1)
                 progressed = True
 
@@ -373,16 +433,16 @@ class ReplayShard:
             staged_prev = None
             for _ in range(self._add_q.maxsize or _SIZE_REFRESH_OPS):
                 try:
-                    block = self._add_q.get_nowait()
+                    block, tid = self._add_q.get_nowait()
                 except queue.Empty:
                     break
-                staged_next = self._stage_block(block)
+                staged_next = (self._stage_block(block), tid)
                 if staged_prev is not None:
-                    self._apply_add(staged_prev)
+                    self._apply_add(*staged_prev)
                 staged_prev = staged_next
                 progressed = True
             if staged_prev is not None:
-                self._apply_add(staged_prev)
+                self._apply_add(*staged_prev)
 
             if self._stop.is_set():
                 if self._add_q.empty() and self._update_q.empty():
@@ -391,16 +451,17 @@ class ReplayShard:
             if not progressed:
                 # Idle: park on the add queue so actors wake us immediately.
                 try:
-                    block = self._add_q.get(timeout=0.002)
+                    block, tid = self._add_q.get(timeout=0.002)
                 except queue.Empty:
                     continue
                 # A lone block has no overlap partner, but staging it still
                 # turns the in-jit transfer into an explicit counted put.
-                self._apply_add(self._stage_block(block))
+                self._apply_add(self._stage_block(block), tid)
 
         size = int(self._state.size)
         with self._stats_lock:
             self.stats.replay_size = size
+        self._g_size.set(size)
 
 
 # PR 1 name for the single-shard service; the owner loop is unchanged.

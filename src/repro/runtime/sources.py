@@ -41,9 +41,12 @@ import queue
 import threading
 from typing import Any
 
+import time
+
 import jax
 
 from repro.core.sampling import LearnerBatch
+from repro.obs import Telemetry
 from repro.runtime.fabric import ReplayFabric
 from repro.runtime.service import ServiceStats
 
@@ -118,9 +121,13 @@ class SampleSource:
 
     * ``get_batch(timeout)`` — next :class:`LearnerBatch`, or None while the
       source is starved (replay below min-fill, prefetch lagging, transport
-      idle). Single-consumer: one learner thread.
-    * ``write_back(indices, priorities)`` — asynchronous priority write-back
-      for previously sampled keys; any subset/ordering is valid.
+      idle). Single-consumer: one learner thread. After a batch is
+      returned, ``last_trace_id`` holds its pipeline trace id (0 =
+      untraced) — the learner passes it back via ``write_back`` so the
+      sample → learn → writeback chain stays linked (``repro.obs``).
+    * ``write_back(indices, priorities, trace_id=0)`` — asynchronous
+      priority write-back for previously sampled keys; any
+      subset/ordering is valid.
     * ``publish_params(version, params)`` — hook for transports that must
       ship fresh learner params upstream (a remote fabric's actors pull from
       *its* param store); in-process sources no-op.
@@ -130,6 +137,7 @@ class SampleSource:
     """
 
     stats: SourceStats
+    last_trace_id: int = 0
 
     def start(self) -> "SampleSource":
         return self
@@ -140,7 +148,8 @@ class SampleSource:
     def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
         raise NotImplementedError
 
-    def write_back(self, indices: Any, priorities: Any) -> None:
+    def write_back(self, indices: Any, priorities: Any,
+                   trace_id: int = 0) -> None:
         raise NotImplementedError
 
     def publish_params(self, version: int, params: Any) -> None:
@@ -168,10 +177,15 @@ class LocalFabricSource(SampleSource):
     runner keeps ownership because its actors share the same fabric.
     """
 
-    def __init__(self, fabric: ReplayFabric, *, own: bool = False):
+    def __init__(self, fabric: ReplayFabric, *, own: bool = False,
+                 telemetry: Telemetry | None = None):
         self._fabric = fabric
         self._own = own
         self.stats = SourceStats()
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        self._h_get = self._tel.histogram("source/get_batch_us")
+        self._c_starved = self._tel.counter("source/starved_polls")
+        self.last_trace_id = 0
 
     def start(self) -> "LocalFabricSource":
         if self._own:
@@ -183,15 +197,27 @@ class LocalFabricSource(SampleSource):
             self._fabric.stop()
 
     def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
+        t0 = time.perf_counter()
         b = self._fabric.get_batch(timeout=timeout)
         if b is None:
             self.stats.starved_polls += 1
+            self._c_starved.inc()
             return None
+        us = 1e6 * (time.perf_counter() - t0)
+        self._h_get.record(us)
+        # A sampled batch starts a fresh trace here: the consume plane
+        # traces *batches* (sample → learn → writeback), independent of
+        # the ingest plane's per-block traces.
+        tid = self._tel.tracer.sample()
+        if tid:
+            self._tel.tracer.record("sample", tid, us)
+        self.last_trace_id = tid
         self.stats.batches += 1
         return LearnerBatch(b.indices, b.items, b.is_weights)
 
-    def write_back(self, indices: Any, priorities: Any) -> None:
-        self._fabric.write_back(indices, priorities)
+    def write_back(self, indices: Any, priorities: Any,
+                   trace_id: int = 0) -> None:
+        self._fabric.write_back(indices, priorities, trace_id=trace_id)
         self.stats.writebacks += 1
 
     def snapshot(self) -> ServiceStats:
@@ -219,7 +245,8 @@ class StagedSource(SampleSource):
     """
 
     def __init__(self, inner: SampleSource, *, device: Any = None,
-                 depth: int = 1, poll_s: float = 0.02):
+                 depth: int = 1, poll_s: float = 0.02,
+                 telemetry: Telemetry | None = None):
         self._inner = inner
         self._device = device if device is not None else jax.devices()[0]
         # On a CPU "device" host and device memory are one address space and
@@ -239,6 +266,10 @@ class StagedSource(SampleSource):
         self._error: BaseException | None = None
         self._peer_closed = False
         self.stats = SourceStats()
+        self._tel = telemetry if telemetry is not None else Telemetry.local()
+        self._h_stage = self._tel.histogram("source/stage_us")
+        self._c_starved = self._tel.counter("source/staged_starved_polls")
+        self.last_trace_id = 0
 
     def start(self) -> "StagedSource":
         self._inner.start()
@@ -273,11 +304,17 @@ class StagedSource(SampleSource):
             if b is None:
                 self.stats.stage_idle += 1
                 continue
+            # The batch's trace id rides the staging queue with it, so the
+            # consumer-side last_trace_id is the staged batch's, not the
+            # most recently *fetched* one.
+            tid = getattr(self._inner, "last_trace_id", 0)
+            t0 = time.perf_counter()
             staged = self._stage(b)
+            self._h_stage.record(1e6 * (time.perf_counter() - t0))
             self.stats.staged += 1
             while not self._stop_evt.is_set():
                 try:
-                    self._q.put(staged, timeout=self._poll_s)
+                    self._q.put((staged, tid), timeout=self._poll_s)
                     break
                 except queue.Full:
                     continue
@@ -308,20 +345,23 @@ class StagedSource(SampleSource):
     def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
         self._check_alive()
         try:
-            b = self._q.get(timeout=self._poll_s if timeout is None
-                            else timeout)
+            b, tid = self._q.get(timeout=self._poll_s if timeout is None
+                                 else timeout)
         except queue.Empty:
             if self._peer_closed:
                 raise SourceClosed(
                     "upstream sample source closed and the staging queue "
                     "is drained") from None
             self.stats.starved_polls += 1
+            self._c_starved.inc()
             return None
+        self.last_trace_id = tid
         self.stats.batches += 1
         return b
 
-    def write_back(self, indices: Any, priorities: Any) -> None:
-        self._inner.write_back(indices, priorities)
+    def write_back(self, indices: Any, priorities: Any,
+                   trace_id: int = 0) -> None:
+        self._inner.write_back(indices, priorities, trace_id=trace_id)
         self.stats.writebacks += 1
 
     def publish_params(self, version: int, params: Any) -> None:

@@ -21,6 +21,10 @@ from repro.runtime.sources import BlockStager
 # with the pipelined ingest stager attached (pass-through puts on CPU, so
 # it exercises the stage-ahead ordering, not the DMA).
 INGEST_STAGING = bool(os.environ.get("REPRO_TEST_INGEST_STAGING"))
+# CI matrix leg: REPRO_TEST_METRICS_DIR=<dir> re-runs the end-to-end test
+# with the telemetry plane enabled (JSONL sink + full-rate tracing), and
+# CI uploads the resulting metrics/spans JSONL as a workflow artifact.
+METRICS_DIR = os.environ.get("REPRO_TEST_METRICS_DIR") or None
 
 
 # --- shared phases ----------------------------------------------------------
@@ -240,7 +244,8 @@ def test_staged_shard_matches_unstaged_and_reports_h2d():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     assert plain.stats.blocks_staged == 0
     assert staged.stats.blocks_staged == len(blocks)
-    assert staged.stats.h2d_us > 0.0
+    # h2d_us is a derived view (histogram mean) — read it via snapshot().
+    assert staged.snapshot().h2d_us > 0.0
 
 
 def test_run_async_staged_ingest_end_to_end():
@@ -264,10 +269,15 @@ def test_run_async_end_to_end():
     preset = tiny_preset()
     acfg = AsyncConfig(actor_threads=2, total_learner_steps=8,
                        max_seconds=60.0, seed=3,
-                       ingest_staging=INGEST_STAGING)
+                       ingest_staging=INGEST_STAGING,
+                       metrics_dir=METRICS_DIR,
+                       trace_sample_rate=1.0 if METRICS_DIR else 0.0)
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
                     preset.make_optimizer())
     s = res.stats
+    if METRICS_DIR:
+        assert os.path.exists(os.path.join(METRICS_DIR, "metrics.jsonl"))
+        assert os.path.exists(os.path.join(METRICS_DIR, "spans.jsonl"))
     assert s["learner_steps"] == 8
     assert int(res.learner.learner_step) == 8
     assert s["actor_transitions"] > 0

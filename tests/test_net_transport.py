@@ -357,7 +357,7 @@ def test_shm_teardown_surfaces_source_closed_like_the_socket_path():
         def get_batch(self, timeout=None):
             return None
 
-        def write_back(self, indices, priorities):
+        def write_back(self, indices, priorities, trace_id=0):
             pass
 
     gw = ReplayGateway(StarvedFabric(), ParamStore({}),
@@ -384,7 +384,7 @@ class RecordingFabric:
     def __init__(self):
         self.blocks = []
 
-    def add(self, block, timeout=None):
+    def add(self, block, timeout=None, trace_id=0):
         self.blocks.append(block)
         return True
 

@@ -167,7 +167,7 @@ def test_frame_reader_reassembles_split_frames():
 def test_frame_reader_rejects_bad_magic_and_version():
     a, reader, b = _socketpair_reader()
     try:
-        a.sendall(b"JUNKJUNKJUNK")
+        a.sendall(b"JUNK" * (wire._HEADER.size // 4))  # one full bad header
         with pytest.raises(wire.WireError, match="magic"):
             reader.read_frame(timeout=1.0)
     finally:
@@ -195,7 +195,7 @@ class FakeFabric:
         self.refusals_left = refuse_first
         self.refused = 0
 
-    def add(self, block, timeout=None):
+    def add(self, block, timeout=None, trace_id=0):
         if self.refusals_left > 0:
             self.refusals_left -= 1
             self.refused += 1
@@ -475,7 +475,7 @@ def test_frame_reader_rejects_oversized_length_prefix():
     try:
         reader = wire.FrameReader(b, max_payload=1024)
         a.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION,
-                                    wire.ADD_BLOCK, 1 << 30))
+                                    wire.ADD_BLOCK, 1 << 30, 0))
         with pytest.raises(wire.WireError, match="exceeds cap"):
             reader.read_frame(timeout=1.0)
         # and the sender-side guard fails fast with the same class
@@ -497,7 +497,7 @@ def test_version_mismatch_rejected_in_both_directions():
     try:
         newer.sendall(wire._HEADER.pack(wire.MAGIC,
                                         wire.PROTOCOL_VERSION + 1,
-                                        wire.HELLO, 0))
+                                        wire.HELLO, 0, 0))
         _await(lambda: gw.snapshot().wire_errors == 1)
         # gateway survives for well-versioned peers
         ok, reader = _client(gw)
@@ -519,13 +519,13 @@ def test_version_mismatch_rejected_in_both_directions():
     try:
         reader = wire.FrameReader(cli)
         srv.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION + 1,
-                                      wire.PARAM, 0))
+                                      wire.PARAM, 0, 0))
         with pytest.raises(wire.WireError, match="version"):
             reader.read_frame(timeout=1.0)
         # ... and an *older* server is equally rejected (no silent downgrade)
         reader2 = wire.FrameReader(cli)
         srv.sendall(wire._HEADER.pack(wire.MAGIC, wire.PROTOCOL_VERSION - 1,
-                                      wire.PARAM, 0))
+                                      wire.PARAM, 0, 0))
         with pytest.raises(wire.WireError, match="version"):
             reader2.read_frame(timeout=1.0)
     finally:

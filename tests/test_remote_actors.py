@@ -67,7 +67,7 @@ def test_remote_loop_blocks_on_full_inflight_window():
             self.release = threading.Event()
             self.blocks = []
 
-        def add(self, block, timeout=None):
+        def add(self, block, timeout=None, trace_id=0):
             if not self.release.is_set():
                 time.sleep(0.01)
                 return False

@@ -191,7 +191,7 @@ class ScriptedSource:
         except queue.Empty:
             return None
 
-    def write_back(self, indices, priorities):
+    def write_back(self, indices, priorities, trace_id=0):
         self.writebacks.append((indices, priorities))
 
     def publish_params(self, version, params):
@@ -286,7 +286,7 @@ class StarvedFabric:
     def get_batch(self, timeout=None):
         return None
 
-    def write_back(self, indices, priorities):
+    def write_back(self, indices, priorities, trace_id=0):
         pass
 
 

@@ -118,3 +118,29 @@ def test_scalar_bounds(capsys):
     assert_rejected(["--iterations", "0"], "--iterations", capsys)
     assert_rejected(["--runtime", "async", "--learn-batches", "0"],
                     "--learn-batches", capsys)
+
+
+def test_metrics_flags_accepted_under_async(tmp_path):
+    args = validate(["--runtime", "async",
+                     "--metrics-dir", str(tmp_path),
+                     "--trace-sample-rate", "0.25"])
+    assert args.metrics_dir == str(tmp_path)
+    assert args.trace_sample_rate == 0.25
+
+
+def test_metrics_flags_rejected_under_sync(capsys):
+    assert_rejected(["--metrics-dir", "/tmp/m"], "--runtime async", capsys)
+    assert_rejected(["--trace-sample-rate", "0.5"], "--runtime async",
+                    capsys)
+
+
+def test_trace_sample_rate_bounds(capsys):
+    assert_rejected(["--runtime", "async", "--metrics-dir", "/tmp/m",
+                     "--trace-sample-rate", "-0.1"], "[0, 1]", capsys)
+    assert_rejected(["--runtime", "async", "--metrics-dir", "/tmp/m",
+                     "--trace-sample-rate", "1.5"], "[0, 1]", capsys)
+
+
+def test_trace_sample_rate_requires_metrics_dir(capsys):
+    assert_rejected(["--runtime", "async", "--trace-sample-rate", "0.5"],
+                    "--metrics-dir", capsys)
