@@ -41,18 +41,54 @@ def _path_str(p) -> str:
 
 
 def save(path: str, tree: Any, step: int | None = None) -> str:
-    """Atomically write ``tree`` to ``path`` (a .npz file)."""
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    """Atomically write ``tree`` to ``path`` (a .npz file).
+
+    The ``.npz`` rename is the commit point: the JSON sidecar lands (itself
+    via tmp + ``os.replace``) *before* the array file is renamed into place,
+    so a crash at any instant leaves either a fully usable checkpoint or, at
+    worst, an orphan sidecar/tmp that ``latest()`` ignores and the next
+    ``save`` sweeps up. A failed ``np.savez`` never leaks its tmp file.
+    """
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    _sweep_stale_tmp(directory)
     flat = _flatten(tree)
     tmp = path + ".tmp"
-    np.savez(tmp, **flat)
     # np.savez appends .npz to names without it
     actual_tmp = tmp if tmp.endswith(".npz") else tmp + ".npz"
-    os.replace(actual_tmp, path)
-    meta = {"step": step, "keys": sorted(flat.keys())}
-    with open(path + ".json", "w") as f:
-        json.dump(meta, f)
+    try:
+        np.savez(tmp, **flat)
+        meta = {"step": step, "keys": sorted(flat.keys())}
+        meta_tmp = path + ".json.tmp"
+        with open(meta_tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(meta_tmp, path + ".json")
+        os.replace(actual_tmp, path)
+    except BaseException:
+        for leftover in (actual_tmp, path + ".json.tmp"):
+            try:
+                os.remove(leftover)
+            except OSError:
+                pass
+        raise
     return path
+
+
+def _sweep_stale_tmp(directory: str) -> None:
+    """Remove interrupted-save droppings (``*.tmp`` / ``*.tmp.npz``) left by
+    a previous process that died mid-write. Safe against concurrent savers
+    in the same directory only to the extent their tmp names differ (one
+    writer per checkpoint path is the supported regime)."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return
+    for name in names:
+        if name.endswith((".tmp", ".tmp.npz")):
+            try:
+                os.remove(os.path.join(directory, name))
+            except OSError:
+                pass
 
 
 def restore(path: str, example: Any) -> Any:

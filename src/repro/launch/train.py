@@ -76,7 +76,10 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    ingest_staging: bool = False,
                    add_queue_depth: int = 4, sample_queue_depth: int = 2,
                    metrics_dir: str | None = None,
-                   trace_sample_rate: float = 0.0):
+                   trace_sample_rate: float = 0.0,
+                   checkpoint_dir: str | None = None,
+                   checkpoint_every_s: float = 30.0,
+                   resume: bool = False):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
@@ -107,6 +110,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                        sample_queue_depth=sample_queue_depth,
                        metrics_dir=metrics_dir,
                        trace_sample_rate=trace_sample_rate,
+                       checkpoint_dir=checkpoint_dir,
+                       checkpoint_every_s=checkpoint_every_s,
+                       resume=resume,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -149,6 +155,13 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
         i = res.inference_stats
         obslog.emit("inference", requests=i.requests,
                     dispatches=i.dispatches, full_waves=i.full_waves)
+    if checkpoint_dir or s.get("actor_restarts") or s.get("source_reconnects"):
+        obslog.emit("fault-tolerance",
+                    resumed_from_step=int(s.get("resumed_from_step", 0)),
+                    snapshots=int(s.get("snapshots", 0)),
+                    actor_restarts=int(s.get("actor_restarts", 0)),
+                    actor_proc_exits=int(s.get("actor_proc_exits", 0)),
+                    source_reconnects=int(s.get("source_reconnects", 0)))
     if res.last_actor_metrics:
         obslog.emit(
             "actor-metrics",
@@ -289,6 +302,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "carrying an end-to-end pipeline trace id, in "
                          "[0, 1] (requires --metrics-dir; traced ops force "
                          "a device sync — keep small on hot runs)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="periodically snapshot the whole run — replay "
+                         "fabric contents + sum trees + clocks, learner "
+                         "slice, param version — as atomic ckpt_<step>.npz "
+                         "files in this directory (--runtime async; "
+                         "distinct from --ckpt-dir, which saves final "
+                         "params only)")
+    ap.add_argument("--checkpoint-every-s", type=float, default=30.0,
+                    help="seconds between periodic snapshots (requires "
+                         "--checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="cold-start from the newest snapshot in "
+                         "--checkpoint-dir and continue the interrupted "
+                         "run (an empty directory is a normal cold start)")
     return ap
 
 
@@ -318,6 +345,9 @@ def validate_args(ap: argparse.ArgumentParser,
                   ("--wire-quantize-params", args.wire_quantize_params),
                   ("--metrics-dir", args.metrics_dir is not None),
                   ("--trace-sample-rate", args.trace_sample_rate != 0.0),
+                  ("--checkpoint-dir", args.checkpoint_dir is not None),
+                  ("--checkpoint-every-s", args.checkpoint_every_s != 30.0),
+                  ("--resume", args.resume),
                   ("--actor-threads", args.actor_threads is not None)]
     if not is_async:
         used = [name for name, on in async_only if on]
@@ -354,6 +384,19 @@ def validate_args(ap: argparse.ArgumentParser,
                  "persist through the JSONL sink — add --metrics-dir DIR "
                  "(without it the spans would fill a ring buffer nobody "
                  "drains)")
+    if args.resume and args.checkpoint_dir is None:
+        ap.error("--resume loads checkpoint.latest() from --checkpoint-dir; "
+                 "there is nothing to resume from without it")
+    if args.checkpoint_every_s <= 0:
+        ap.error("--checkpoint-every-s must be > 0 seconds, got "
+                 f"{args.checkpoint_every_s}")
+    if args.checkpoint_dir is not None and (
+            args.learner_remote is not None or args.serve_sampling):
+        ap.error("--checkpoint-dir snapshots the replay fabric AND the "
+                 "learner together, so both must be local — a "
+                 "--learner-remote process has no fabric and a "
+                 "--serve-sampling process has no learner; run the "
+                 "snapshot service on a single-process topology")
 
     if args.learner_remote is not None:
         from repro.net.learner_client import parse_hostport
@@ -462,7 +505,9 @@ def main():
                            args.wire_quantize_params,
                            args.ingest_staging,
                            args.add_queue_depth, args.sample_queue_depth,
-                           args.metrics_dir, args.trace_sample_rate)
+                           args.metrics_dir, args.trace_sample_rate,
+                           args.checkpoint_dir, args.checkpoint_every_s,
+                           args.resume)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

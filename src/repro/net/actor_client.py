@@ -86,6 +86,13 @@ class RemoteActorSpec:
                                     # late (its handler is busy holding our
                                     # ACKs back) — that's congestion, not
                                     # death, so this bound is generous
+    reconnect: bool = True        # a severed transport mid-run (anything but
+                                  # an explicit STOP) reconnects with capped
+                                  # backoff instead of exiting; un-acked
+                                  # blocks are dropped (a temporary dip in
+                                  # ingest, the paper's tolerated loss)
+    reconnect_timeout_s: float = 20.0  # give up (clean exit) when the
+                                  # gateway stays away this long
     poll_s: float = 0.05          # wait granularity on a full window
     trace_sample_rate: float = 0.0  # fraction of blocks stamped with a
                                     # pipeline trace id in the ADD_BLOCK
@@ -124,8 +131,10 @@ class RemoteActorLoop:
         # host's tracer records the downstream spans (this process has no
         # sink — it only originates ids).
         self._tracer = Tracer(spec.trace_sample_rate)
+        self._conn: transport_lib.Transport | None = None
         self.stats = {"rollouts": 0, "pushed": 0, "blocked": 0,
                       "transitions": 0, "param_pulls": 0, "bytes_out": 0,
+                      "reconnects": 0, "inflight_dropped": 0,
                       "param_version": -1, "transport": ""}
 
     # -- frame plumbing -----------------------------------------------------
@@ -168,70 +177,140 @@ class RemoteActorLoop:
                 raise TimeoutError("gateway never answered PARAM_PULL")
             self._pump(conn, timeout=self.spec.poll_s)
 
+    # -- connection lifecycle -----------------------------------------------
+
+    def _handshake(self) -> None:
+        """HELLO + initial parameter pull on the current connection. The
+        reconnect count rides the HELLO so the gateway can account client
+        comebacks (priorities are idempotent LWW updates — re-sending after
+        a reconnect is safe by construction)."""
+        self._conn.send(wire.HELLO, wire.encode_json(
+            {"actor_id": self.spec.actor_id,
+             "protocol": wire.PROTOCOL_VERSION,
+             "reconnects": self.stats["reconnects"]}))
+        self._pull_params(self._conn)
+
+    def _retire_conn(self) -> None:
+        if self._conn is None:
+            return
+        self.stats["bytes_out"] += self._conn.bytes_out
+        try:
+            self._conn.close()
+        except OSError:
+            pass
+        self._conn = None
+
+    def _reconnect(self, cause: BaseException) -> None:
+        """A severed transport (anything but an explicit STOP): dial the
+        gateway again with capped backoff until ``reconnect_timeout_s``,
+        re-handshake, and resume acting. Un-acked blocks on the dead
+        connection are dropped (counted ``inflight_dropped``) — a temporary
+        ingest dip, the loss mode the paper's replay tolerates. Re-raises
+        ``cause`` on give-up so the caller's normal exit paths apply."""
+        spec = self.spec
+        if not spec.reconnect:
+            raise cause
+        self._retire_conn()
+        self.stats["inflight_dropped"] += self._in_flight
+        self._in_flight = 0
+        deadline = time.monotonic() + spec.reconnect_timeout_s
+        backoff = 0.05
+        while True:
+            if time.monotonic() >= deadline:
+                raise cause
+            time.sleep(min(backoff, max(0.0, deadline - time.monotonic())))
+            backoff = min(backoff * 2, 1.0)
+            try:
+                self._conn = transport_lib.connect(
+                    spec.host, spec.port, spec.transport,
+                    timeout=spec.connect_timeout_s,
+                    ring_bytes=spec.ring_bytes)
+            except (OSError, transport_lib.ShmUnavailable):
+                continue
+            self.stats["transport"] = self._conn.kind
+            self.stats["reconnects"] += 1
+            try:
+                self._handshake()
+            except (EOFError, transport_lib.TransportClosed, OSError,
+                    TimeoutError):
+                # Gateway flapped again mid-handshake: keep trying until
+                # the deadline (a STOP here propagates — clean exit).
+                self._retire_conn()
+                continue
+            return
+
     # -- main loop ----------------------------------------------------------
 
     def run(self) -> dict:
         """Act until the gateway stops us; returns client-side counters."""
         spec = self.spec
-        conn = transport_lib.connect(
+        self._conn = transport_lib.connect(
             spec.host, spec.port, spec.transport,
             timeout=spec.connect_timeout_s, ring_bytes=spec.ring_bytes)
-        self.stats["transport"] = conn.kind
+        self.stats["transport"] = self._conn.kind
         try:
-            conn.send(wire.HELLO, wire.encode_json(
-                {"actor_id": spec.actor_id,
-                 "protocol": wire.PROTOCOL_VERSION}))
-            self._pull_params(conn)
+            self._handshake()
 
             sl = initial_slice(spec.cfg, spec.env, spec.seed, spec.actor_id)
             sid = jnp.int32(spec.actor_id)
             next_send = None  # offered-rate pacing schedule
             while (spec.max_rollouts is None
                    or self.stats["rollouts"] < spec.max_rollouts):
-                if (self.stats["rollouts"] > 0
-                        and self.stats["rollouts"] % self._sync_period == 0):
-                    self._pull_params(conn)
-                sl, block, _metrics = self._act(self._params, sl, sid)
-                payload = wire.encode_block_iov(
-                    block, quantize_obs=spec.quantize_obs)
-                if spec.target_blocks_per_s:
-                    # Pace to the offered rate (no catch-up bursts: the
-                    # target is a strict upper bound), draining ACKs while
-                    # waiting out the slot. An overrun slot sends at once.
-                    period = 1.0 / spec.target_blocks_per_s
-                    now = time.monotonic()
-                    next_send = now if next_send is None else max(
-                        next_send + period, now)
-                    while True:
-                        remaining = next_send - time.monotonic()
-                        if remaining <= 0:
-                            break
-                        self._pump(conn, timeout=remaining)
-                # Bounded in-flight window: wait for ACKs when full — this
-                # is where gateway/fabric backpressure reaches the actor.
-                while self._in_flight >= spec.max_inflight:
-                    if not self._pump(conn, timeout=spec.poll_s):
-                        self.stats["blocked"] += 1
-                conn.send(wire.ADD_BLOCK, payload,
-                          trace_id=self._tracer.sample())
-                self._in_flight += 1
-                self.stats["rollouts"] += 1
-                self.stats["pushed"] += 1
-                self.stats["transitions"] += int(block.priorities.shape[0])
-                # opportunistically drain any ACKs already on the stream
-                while self._pump(conn, timeout=0.001):
-                    pass
+                try:
+                    if (self.stats["rollouts"] > 0
+                            and self.stats["rollouts"]
+                            % self._sync_period == 0):
+                        self._pull_params(self._conn)
+                    sl, block, _metrics = self._act(self._params, sl, sid)
+                    payload = wire.encode_block_iov(
+                        block, quantize_obs=spec.quantize_obs)
+                    if spec.target_blocks_per_s:
+                        # Pace to the offered rate (no catch-up bursts: the
+                        # target is a strict upper bound), draining ACKs
+                        # while waiting out the slot. An overrun slot sends
+                        # at once.
+                        period = 1.0 / spec.target_blocks_per_s
+                        now = time.monotonic()
+                        next_send = now if next_send is None else max(
+                            next_send + period, now)
+                        while True:
+                            remaining = next_send - time.monotonic()
+                            if remaining <= 0:
+                                break
+                            self._pump(self._conn, timeout=remaining)
+                    # Bounded in-flight window: wait for ACKs when full —
+                    # this is where gateway/fabric backpressure reaches the
+                    # actor.
+                    while self._in_flight >= spec.max_inflight:
+                        if not self._pump(self._conn, timeout=spec.poll_s):
+                            self.stats["blocked"] += 1
+                    self._conn.send(wire.ADD_BLOCK, payload,
+                                    trace_id=self._tracer.sample())
+                    self._in_flight += 1
+                    self.stats["rollouts"] += 1
+                    self.stats["pushed"] += 1
+                    self.stats["transitions"] += int(
+                        block.priorities.shape[0])
+                    # opportunistically drain ACKs already on the stream
+                    while self._pump(self._conn, timeout=0.001):
+                        pass
+                except (EOFError, transport_lib.TransportClosed,
+                        OSError) as e:
+                    # Severed transport mid-rollout (TimeoutError is an
+                    # OSError: a wedged gateway counts). STOP is _Stop and
+                    # never lands here.
+                    self._reconnect(e)
         except (_Stop, EOFError, transport_lib.TransportClosed):
             pass
         finally:
-            try:
-                conn.send(wire.BYE, wire.encode_json(
-                    {"rollouts": self.stats["rollouts"],
-                     "blocked": self.stats["blocked"]}))
-            except (OSError, wire.WireError):
-                pass
-            self.stats["bytes_out"] = conn.bytes_out
-            conn.close()
+            if self._conn is not None:
+                try:
+                    self._conn.send(wire.BYE, wire.encode_json(
+                        {"rollouts": self.stats["rollouts"],
+                         "blocked": self.stats["blocked"]}))
+                except (OSError, wire.WireError):
+                    pass
+                self._retire_conn()
         return self.stats
 
 

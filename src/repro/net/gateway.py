@@ -94,6 +94,14 @@ class GatewayStats:
                                 # carry)
     priority_frames: int = 0    # PRIORITY_UPDATE frames received
     param_pushes: int = 0       # PARAM_PUSH snapshots published locally
+    client_reconnects: int = 0  # HELLOs from clients that came back after
+                                # a severed transport (fault-tolerance
+                                # plane: safe because priority updates are
+                                # idempotent LWW and adds are append-only)
+    learner_byes: int = 0       # clean BYEs from sample-plane learner
+                                # clients — the serving runtime's end-of-run
+                                # signal when severed transports swallowed
+                                # some in-flight priority frames
 
 
 class ReplayGateway:
@@ -303,11 +311,17 @@ class ReplayGateway:
                         raise wire.WireError(
                             f"client protocol {hello.get('protocol')} != "
                             f"{wire.PROTOCOL_VERSION}")
+                    if hello.get("reconnects"):
+                        # A client that survived a severed transport and
+                        # dialed back in — count the comeback, not its
+                        # lifetime total (each HELLO reports cumulative).
+                        self._bump(client_reconnects=1)
                 elif msg_type == wire.BYE:
                     stats = wire.decode_json(payload)
                     self._bump(
                         client_rollouts=int(stats.get("rollouts", 0)),
-                        client_blocked=int(stats.get("blocked", 0)))
+                        client_blocked=int(stats.get("blocked", 0)),
+                        learner_byes=1 if stats.get("learner") else 0)
                     break
                 else:
                     raise wire.WireError(f"unexpected message {msg_type}")

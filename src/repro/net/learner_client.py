@@ -34,9 +34,18 @@ and its learner clock (``priority_updates``) keeps counting rounds.
 
 The byte-moving layer is ``repro.net.transport``: ``transport="tcp"`` dials
 the classic socket path, ``"shm"`` requires the same-host ring upgrade, and
-``"auto"`` (default) uses shm when the gateway host is loopback-local. A
-torn-down transport — either side may win the shutdown race — surfaces as
-:class:`SourceClosed` from ``get_batch`` on every path.
+``"auto"`` (default) uses shm when the gateway host is loopback-local.
+
+Fault tolerance: a *severed* transport (socket reset, gateway restart —
+anything but an explicit ``STOP``) does not kill the source. It reconnects
+with capped backoff (``reconnect_timeout_s``), re-handshakes, and resumes:
+the outstanding sample request is re-issued, parked write-backs re-ship
+(safe — priorities are idempotent last-writer-wins updates), and a param
+push retries once on the fresh transport. Only an explicit ``STOP``, a
+``stop()`` on this side, or a gateway that stays away past the deadline
+surfaces as :class:`SourceClosed` from ``get_batch``. Survived reconnects
+are counted in ``SourceStats.reconnects`` and the ``source/reconnects``
+telemetry counter.
 
 Thread contract: ``get_batch`` (and therefore the transport *reader*)
 belongs to one consumer thread (the learner, or the stager when wrapped);
@@ -74,6 +83,8 @@ class RemoteFabricSource(SampleSource):
                  ring_bytes: int = transport_lib.DEFAULT_RING_BYTES,
                  quantize_prios: bool = False,
                  quantize_params: bool = False,
+                 reconnect: bool = True,
+                 reconnect_timeout_s: float = 20.0,
                  telemetry: Telemetry | None = None):
         self._addr = (host, int(port))
         self._kind = transport_lib.resolve_kind(transport, host) \
@@ -83,6 +94,10 @@ class RemoteFabricSource(SampleSource):
         self._ring_bytes = ring_bytes
         self._quantize_prios = quantize_prios
         self._quantize_params = quantize_params
+        self._reconnect = reconnect
+        self._reconnect_timeout_s = reconnect_timeout_s
+        self._reconnect_lock = threading.Lock()
+        self._conn_gen = 0        # bumped per successful (re)connection
         self._conn: transport_lib.Transport | None = None
         self._requested = False   # one SAMPLE_REQUEST may be outstanding
         self._closed = False
@@ -92,42 +107,107 @@ class RemoteFabricSource(SampleSource):
         self._tel = telemetry if telemetry is not None else Telemetry.local()
         self._h_get = self._tel.histogram("source/get_batch_us")
         self._c_starved = self._tel.counter("source/starved_polls")
+        self._c_reconnects = self._tel.counter("source/reconnects")
         self.last_trace_id = 0
 
     # -- lifecycle ----------------------------------------------------------
+
+    def _dial(self, deadline: float, backoff: float = 0.1,
+              ) -> transport_lib.Transport:
+        """Connect with retries until ``deadline`` (monotonic seconds)."""
+        while True:
+            try:
+                return transport_lib.connect(
+                    *self._addr, self._kind,
+                    timeout=self._connect_timeout_s,
+                    ring_bytes=self._ring_bytes)
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 1.0)
+
+    def _hello(self, reconnects: int = 0) -> None:
+        self._conn.send(wire.HELLO, wire.encode_json(
+            {"actor_id": -1, "role": "learner",
+             "protocol": wire.PROTOCOL_VERSION,
+             "reconnects": reconnects}))
 
     def start(self) -> "RemoteFabricSource":
         """Connect and handshake. Connection attempts retry until the
         timeout — the serving runtime may still be binding its gateway when
         the learner host comes up."""
-        deadline = time.monotonic() + self._connect_timeout_s
-        while True:
-            try:
-                self._conn = transport_lib.connect(
-                    *self._addr, self._kind,
-                    timeout=self._connect_timeout_s,
-                    ring_bytes=self._ring_bytes)
-                break
-            except OSError:
-                if time.monotonic() >= deadline:
-                    raise
-                time.sleep(0.1)
-        self._conn.send(wire.HELLO, wire.encode_json(
-            {"actor_id": -1, "role": "learner",
-             "protocol": wire.PROTOCOL_VERSION}))
+        self._conn = self._dial(time.monotonic() + self._connect_timeout_s,
+                                backoff=0.1)
+        self._hello()
         return self
 
+    def _revive(self, cause: BaseException, what: str) -> None:
+        """Reconnect with capped backoff after a severed transport (never
+        after an explicit STOP — that is a shutdown, not a fault). Raises
+        :class:`SourceClosed` when reconnecting is disabled, the source is
+        stopping, or the gateway stays away past ``reconnect_timeout_s``.
+        Safe from both the consumer thread and the learner thread: the
+        first to arrive reconnects, late arrivals observe the already-fresh
+        connection generation and return."""
+        if not self._reconnect or self._closed:
+            self._closed = True
+            raise SourceClosed(
+                f"replay gateway went away {what}") from cause
+        gen = self._conn_gen
+        with self._reconnect_lock:
+            if self._closed:
+                raise SourceClosed(
+                    f"replay gateway went away {what}") from cause
+            if self._conn_gen != gen:
+                return  # the other thread already reconnected
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            try:
+                conn = self._dial(
+                    time.monotonic() + self._reconnect_timeout_s,
+                    backoff=0.05)
+            except OSError:
+                self._closed = True
+                raise SourceClosed(
+                    f"replay gateway went away {what} and did not come "
+                    f"back within {self._reconnect_timeout_s}s") from cause
+            self._conn = conn
+            # The request (if any) died with the old transport; the next
+            # get_batch re-requests. Parked write-backs re-ship on the new
+            # transport — priorities are idempotent LWW updates, so a
+            # re-send after reconnect is safe.
+            self._requested = False
+            self._conn_gen += 1
+            self.stats.reconnects += 1
+            self._c_reconnects.inc()
+            try:
+                self._hello(reconnects=self.stats.reconnects)
+            except (OSError, transport_lib.TransportClosed) as e:
+                self._closed = True
+                raise SourceClosed(
+                    f"replay gateway went away again during the reconnect "
+                    f"handshake ({what})") from e
+
     def stop(self) -> None:
+        self._closed = True  # no revive attempts during shutdown
         if self._conn is None:
             return
         try:
             self._flush_writebacks()
+            # "learner" marks this BYE as the sample-plane client leaving:
+            # a serving runtime treats it as end-of-run even when a severed
+            # transport swallowed some in-flight priority frames (bounded
+            # loss the replay tolerates), instead of waiting forever for a
+            # count that will never arrive.
             self._conn.send(wire.BYE, wire.encode_json(
-                {"rollouts": 0, "blocked": self.stats.starved_polls}))
+                {"rollouts": 0, "blocked": self.stats.starved_polls,
+                 "learner": True, "writebacks": self.stats.writebacks}))
         except (OSError, SourceClosed):
             pass
         self._conn.close()
-        self._closed = True
 
     @property
     def transport_kind(self) -> str:
@@ -159,9 +239,13 @@ class RemoteFabricSource(SampleSource):
                 idx, prios, counts=counts,
                 quantize=self._quantize_prios), trace_id=tid)
         except (transport_lib.TransportClosed, OSError) as e:
-            self._closed = True
-            raise SourceClosed(
-                "replay gateway went away during priority write-back") from e
+            # Re-park the rounds first (priorities are idempotent LWW
+            # updates — re-sending after a reconnect is safe), then revive
+            # the transport; they ship with the next flush.
+            with self._pending_lock:
+                self._pending = pending + self._pending
+            self._revive(e, "during priority write-back")
+            return
         self.stats.writeback_frames += 1
 
     def get_batch(self, timeout: float | None = None) -> LearnerBatch | None:
@@ -173,16 +257,26 @@ class RemoteFabricSource(SampleSource):
         t0 = time.perf_counter()
         if not self._requested:
             self._flush_writebacks()
-            self._conn.send(wire.SAMPLE_REQUEST)
+            try:
+                self._conn.send(wire.SAMPLE_REQUEST)
+            except (transport_lib.TransportClosed, OSError) as e:
+                self._revive(e, "while requesting a sample")
+                self.stats.starved_polls += 1
+                self._c_starved.inc()
+                return None
             self._requested = True
         try:
             got = self._conn.recv(
                 timeout=self._poll_s if timeout is None else timeout)
         except (EOFError, transport_lib.TransportClosed) as e:
-            self._closed = True
-            raise SourceClosed(
-                "replay gateway went away while the learner was sampling"
-            ) from e
+            # Severed mid-reply: the outstanding request (and possibly a
+            # sampled batch) died with the transport — an accepted loss,
+            # the replay tolerates unreturned batches. Reconnect and let
+            # the next call re-request.
+            self._revive(e, "while the learner was sampling")
+            self.stats.starved_polls += 1
+            self._c_starved.inc()
+            return None
         if got is None:
             self.stats.starved_polls += 1
             self._c_starved.inc()
@@ -228,8 +322,16 @@ class RemoteFabricSource(SampleSource):
         into *its* ParamStore — the one the fabric-side actors pull from —
         closing the acting↔learning loop across the machine boundary."""
         self._flush_writebacks()
-        self._conn.send(wire.PARAM_PUSH, wire.encode_params_iov(
-            version, params, quantize=self._quantize_params))
+        payload = wire.encode_params_iov(
+            version, params, quantize=self._quantize_params)
+        try:
+            self._conn.send(wire.PARAM_PUSH, payload)
+        except (transport_lib.TransportClosed, OSError) as e:
+            self._revive(e, "during param push")
+            # One retry on the fresh transport: a param snapshot is an
+            # idempotent publish, and actors need a current one after the
+            # gateway came back.
+            self._conn.send(wire.PARAM_PUSH, payload)
         self.stats.param_pushes += 1
 
     def snapshot(self) -> ServiceStats:

@@ -14,6 +14,9 @@ into a per-stage bottleneck table:
   staged prefetch depth, replay size).
 * **stall counters** — starvation and backpressure totals (learner
   starved polls, actor add-blocked, gateway add retries).
+* **recovery events** — the fault-tolerance plane's counters (actor
+  restarts, transport reconnects, snapshots saved): a run that survived
+  faults shows its scars here.
 
 The tool reads only what the sink wrote — run it offline, long after
 the run, on a copied directory.
@@ -39,6 +42,10 @@ GAP_PAIRS = [("actor", "gateway"), ("gateway", "add"),
              ("sample", "learn"), ("learn", "writeback")]
 
 _STALL_TOKENS = ("starved", "backpressure", "blocked", "retries", "dropped")
+
+# Counters whose names carry these tokens are recovery events: the
+# fault-tolerance plane reporting restarts, reconnects, and snapshots.
+_RECOVERY_TOKENS = ("restart", "reconnect", "snapshot", "proc_exits")
 
 
 def _read_jsonl(path: str) -> list[dict]:
@@ -118,11 +125,18 @@ def load_report(directory: str) -> dict:
     counters = dict(last.get("counters", {}))
     stalls = {k: v for k, v in counters.items()
               if any(tok in k for tok in _STALL_TOKENS)}
+    recovery = {k: v for k, v in counters.items()
+                if any(tok in k for tok in _RECOVERY_TOKENS)}
+    # snapshot/last_step is a gauge, but it belongs with the recovery
+    # story (what a resume would continue from).
+    for name, val in gauges.items():
+        if any(tok in name for tok in _RECOVERY_TOKENS):
+            recovery[name] = val
 
     return {"directory": directory, "window_s": window_s,
             "num_spans": len(spans), "num_snapshots": len(metrics),
             "stages": stages, "gaps": gaps, "gauges": gauges,
-            "counters": counters, "stalls": stalls,
+            "counters": counters, "stalls": stalls, "recovery": recovery,
             "histograms": dict(last.get("histograms", {}))}
 
 
@@ -177,6 +191,12 @@ def render(report: dict) -> str:
         lines.append("starvation / backpressure counters")
         for name in sorted(report["stalls"]):
             lines.append(f"  {name} = {report['stalls'][name]}")
+
+    if report.get("recovery"):
+        lines.append("")
+        lines.append("recovery events (restarts / reconnects / snapshots)")
+        for name in sorted(report["recovery"]):
+            lines.append(f"  {name} = {report['recovery'][name]:g}")
 
     hists = report["histograms"]
     if hists:

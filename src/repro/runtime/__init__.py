@@ -53,9 +53,11 @@ from repro.runtime.params import ParamSnapshot, ParamStore
 from repro.runtime.phases import (ActorSlice, LearnerSlice, TransitionBlock,
                                   act_phase, lane_epsilons, learn_phase,
                                   priority_writeback, replay_add)
-from repro.runtime.runner import AsyncConfig, RuntimeResult, run_async
+from repro.runtime.runner import (AsyncConfig, RuntimeHandles, RuntimeResult,
+                                  run_async)
 from repro.runtime.service import (ReplayService, ReplayShard, ServiceStats,
                                    ShardFns, make_shard_fns)
+from repro.runtime.snapshot import SnapshotService, restore_run
 from repro.runtime.sources import (LocalFabricSource, SampleSource,
                                    SourceClosed, SourceStats, StagedSource)
 
@@ -63,8 +65,9 @@ __all__ = [
     "ActorSlice", "AsyncConfig", "FabricBatch", "InferenceServer",
     "InferenceStats", "LearnerSlice", "LocalFabricSource", "ParamSnapshot",
     "ParamStore", "ReplayFabric", "ReplayService", "ReplayShard",
-    "RuntimeResult", "SampleSource", "ServiceStats", "ShardFns", "SourceClosed",
-    "SourceStats", "StagedSource", "TransitionBlock", "act_phase",
-    "lane_epsilons", "learn_phase", "make_shard_fns", "priority_writeback",
-    "replay_add", "run_async", "shard_replay_config",
+    "RuntimeHandles", "RuntimeResult", "SampleSource", "ServiceStats",
+    "ShardFns", "SnapshotService", "SourceClosed", "SourceStats",
+    "StagedSource", "TransitionBlock", "act_phase", "lane_epsilons",
+    "learn_phase", "make_shard_fns", "priority_writeback", "replay_add",
+    "restore_run", "run_async", "shard_replay_config",
 ]

@@ -190,6 +190,24 @@ class ReplayFabric:
         """Final per-shard states; only meaningful after ``stop()``."""
         return [sh.replay_state for sh in self.shards]
 
+    # -- checkpoint / restore ------------------------------------------------
+
+    def checkpoint_shards(self) -> list[dict]:
+        """Consistent host-side captures of every shard (safe while hot:
+        each owner thread answers between ops). The list is the fabric's
+        contribution to a run snapshot — restore into a same-geometry
+        fabric with :meth:`restore_shards` before ``start()``."""
+        return [sh.checkpoint_state() for sh in self.shards]
+
+    def restore_shards(self, ckpts: list) -> None:
+        if len(ckpts) != self.num_shards:
+            raise ValueError(
+                f"checkpoint has {len(ckpts)} shards, fabric has "
+                f"{self.num_shards}: resume requires the same "
+                f"replay_shards geometry the snapshot was taken with")
+        for sh, ckpt in zip(self.shards, ckpts):
+            sh.restore(ckpt)
+
     # -- observability ------------------------------------------------------
 
     def snapshot(self) -> ServiceStats:

@@ -26,8 +26,11 @@ class ParamSnapshot(NamedTuple):
 class ParamStore:
     """Single-writer (learner) / many-reader (actors) snapshot store."""
 
-    def __init__(self, params: Any):
-        self._snap = ParamSnapshot(0, params)
+    def __init__(self, params: Any, version: int = 0):
+        # ``version`` seeds the counter when a run resumes from a snapshot:
+        # actors compare versions monotonically, so a restarted learner must
+        # not restart numbering from 0 or every cached pull looks fresh.
+        self._snap = ParamSnapshot(version, params)
 
     def publish(self, params: Any) -> int:
         """Publish a new snapshot; returns its version. Single writer only —

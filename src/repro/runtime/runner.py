@@ -58,12 +58,18 @@ import jax.numpy as jnp
 from repro.obs import Telemetry
 from repro.obs import log as obslog
 from repro.runtime import phases
+from repro.runtime import snapshot as snapshot_lib
 from repro.runtime.fabric import ReplayFabric
 from repro.runtime.inference import InferenceServer, InferenceStats
 from repro.runtime.params import ParamStore
 from repro.runtime.service import ServiceStats
 from repro.runtime.sources import (LocalFabricSource, SampleSource,
                                    SourceStats, StagedSource)
+
+# Supervised actor restarts back off exponentially per slot: base * 2^k,
+# capped — a crash-looping actor binary must not busy-spin the spawner.
+_RESTART_BACKOFF_BASE_S = 0.25
+_RESTART_BACKOFF_CAP_S = 5.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +156,32 @@ class AsyncConfig:
                                      # ops force a device sync for honest
                                      # stage durations — keep this small on
                                      # hot runs.
+    checkpoint_dir: str | None = None  # snapshot service: periodically save
+                                     # fabric + learner + ParamStore version
+                                     # as atomic ckpt_<step>.npz files here
+                                     # (None: no periodic checkpoints).
+                                     # Requires the fabric AND learner to be
+                                     # local (not learner_remote/serve_
+                                     # sampling).
+    checkpoint_every_s: float = 30.0 # seconds between periodic snapshots
+    resume: bool = False             # cold-start from checkpoint.latest() in
+                                     # checkpoint_dir: replay contents, sum
+                                     # trees, eviction clocks, learner slice
+                                     # and param version all continue where
+                                     # the snapshot left them (an empty
+                                     # directory is a normal cold start)
+    supervise_actors: bool = True    # respawn dead actor processes with
+                                     # capped exponential backoff (actors are
+                                     # pure functions of (seed, actor_id) +
+                                     # params, so a respawn rebuilds the same
+                                     # ladder slot); False: deaths are only
+                                     # detected/logged
+    actor_restart_limit: int = 5     # supervised respawns per actor slot
+                                     # before the slot is declared dead
+    reconnect_timeout_s: float = 20.0  # how long remote actors / the remote
+                                     # learner source retry (with backoff)
+                                     # after a severed transport before
+                                     # giving up
     seed: int = 0
 
 
@@ -166,6 +198,27 @@ class RuntimeResult:
                                      # counters (None in serve mode)
 
 
+@dataclasses.dataclass
+class RuntimeHandles:
+    """Live internals of a running ``run_async``, handed to its
+    ``on_handles`` callback once every plane has started. This is the
+    surface the fault-injection harness (``repro.testing.chaos``) reaches
+    through to kill processes, sever transports, and freeze shard owners —
+    deliberately raw, not a stable public API."""
+
+    stop: threading.Event            # the run's stop event
+    fabric: Any                      # ReplayFabric | None (learner_remote)
+    gateway: Any                     # net.ReplayGateway | None
+    source: Any                      # learner SampleSource | None (serve)
+    store: Any                       # ParamStore
+    procs: list                      # live actor processes (slot-indexed;
+                                     # the supervisor swaps entries in place)
+    procs_lock: Any                  # guards ``procs`` slot swaps
+    snapshots: Any                   # SnapshotService | None
+    learner_box: dict                # {"steps", "lslice", "live"}
+    counters: dict                   # the run's shared counters dict
+
+
 def _actor_geometry(cfg, acfg: AsyncConfig):
     """Each actor (thread t in [0, actor_threads), process j at
     actor_threads + j) takes one ladder shard: actor a plays global lanes
@@ -178,7 +231,8 @@ def _actor_geometry(cfg, acfg: AsyncConfig):
 
 
 def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
-              rng: jax.Array | None = None) -> RuntimeResult:
+              rng: jax.Array | None = None,
+              on_handles: Any = None) -> RuntimeResult:
     """Run the decoupled runtime until the learner consumed
     ``total_learner_steps`` batches (or ``max_seconds`` elapsed). With
     ``learn_batches_per_step = k > 1`` the learner consumes in chunks of k
@@ -187,7 +241,10 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     ``rng`` seeds parameter init only; actor slices always derive from
     ``AsyncConfig.seed`` via ``phases.initial_actor_slice`` so that remote
     actor processes can reproduce their slice from ``(seed, actor_id)``
-    alone."""
+    alone.
+
+    ``on_handles``, if given, is called once with a :class:`RuntimeHandles`
+    after every plane has started — the fault-injection hook."""
     remote = acfg.learner_remote is not None
     serving = acfg.serve_sampling
     if remote and serving:
@@ -251,6 +308,27 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         raise ValueError(
             "AsyncConfig.trace_sample_rate is a sampling fraction in "
             f"[0, 1], got {acfg.trace_sample_rate}")
+    if acfg.resume and not acfg.checkpoint_dir:
+        raise ValueError(
+            "AsyncConfig.resume needs checkpoint_dir: resuming means "
+            "loading checkpoint.latest() from somewhere")
+    if acfg.checkpoint_dir and (remote or serving):
+        raise ValueError(
+            "AsyncConfig.checkpoint_dir snapshots the replay fabric AND the "
+            "learner slice together, so both must be local — a "
+            "learner_remote process has no fabric and a serve_sampling "
+            "process has no learner. Run the snapshot service on a "
+            "single-process topology (got "
+            f"learner_remote={acfg.learner_remote!r}, "
+            f"serve_sampling={acfg.serve_sampling})")
+    if acfg.checkpoint_dir and acfg.checkpoint_every_s <= 0:
+        raise ValueError(
+            "AsyncConfig.checkpoint_every_s must be > 0 seconds, got "
+            f"{acfg.checkpoint_every_s}")
+    if acfg.actor_restart_limit < 0:
+        raise ValueError(
+            "AsyncConfig.actor_restart_limit must be >= 0, got "
+            f"{acfg.actor_restart_limit}")
     cfg = _actor_geometry(cfg, acfg)
     rng = jax.random.key(acfg.seed) if rng is None else rng
     p_rng, _ = jax.random.split(rng)
@@ -269,7 +347,6 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         learner_step=jnp.zeros((), jnp.int32))
     item = phases.item_example(env, obs0, cfg.compress_obs)
 
-    store = ParamStore(params)
     # One telemetry bundle for the whole run: every plane (fabric shards,
     # gateway, sample source, inference server, the loops below) records
     # into the same registry/tracer, and one sink thread flushes it.
@@ -279,6 +356,30 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         add_queue_depth=acfg.add_queue_depth,
         sample_queue_depth=acfg.sample_queue_depth, seed=acfg.seed + 1,
         ingest_staging=acfg.ingest_staging, telemetry=tel)
+    # -- resume (Appendix F): cold-start from the newest snapshot ----------
+    # The fresh fabric/slice above provide the example structure; restoring
+    # swaps their contents for the checkpointed ones before any thread
+    # starts, so the first op after resume continues the interrupted run.
+    resume_steps = 0
+    store_version = 0
+    if acfg.resume:
+        restored = snapshot_lib.restore_run(acfg.checkpoint_dir, fabric,
+                                            lslice)
+        if restored is not None:
+            fabric.restore_shards(restored["shards"])
+            lrn = restored["learner"]
+            lslice = phases.LearnerSlice(
+                params=jax.tree.map(jnp.asarray, lrn["params"]),
+                target_params=jax.tree.map(jnp.asarray,
+                                           lrn["target_params"]),
+                opt_state=jax.tree.map(jnp.asarray, lrn["opt_state"]),
+                learner_step=jnp.asarray(lrn["learner_step"]))
+            params = lslice.params
+            resume_steps = int(restored["steps"])
+            store_version = int(restored["param_version"])
+            obslog.emit("resume", path=restored["path"], step=resume_steps,
+                        params_v=store_version)
+    store = ParamStore(params, version=store_version)
     server = (InferenceServer(cfg, env, agent, store,
                               max_batch=acfg.actor_threads,
                               coalesce_s=acfg.coalesce_s, telemetry=tel)
@@ -378,7 +479,8 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 jnp.ones((learn_k, cfg.batch_size), jnp.float32)))
     stop = threading.Event()
     counters = {"actor_transitions": 0, "actor_blocked": 0,
-                "learner_starved": 0, "rollouts": 0}
+                "learner_starved": 0, "rollouts": 0, "actor_restarts": 0,
+                "actor_proc_exits": 0}
     counter_lock = threading.Lock()
     last_metrics: list[Any] = [None]
     thread_errors: list[BaseException] = []
@@ -434,11 +536,16 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             counters["rollouts"] += rollouts
 
     # -- learner thread ---------------------------------------------------
-    learner_box = {"lslice": lslice, "steps": 0}
+    # "live" is the snapshot service's view: one atomic (steps, lslice)
+    # rebind per learner step, so a periodic checkpoint never captures a
+    # torn step-count/params pair.
+    learner_box = {"lslice": lslice, "steps": resume_steps,
+                   "live": (resume_steps, lslice)}
 
     def learner_loop() -> None:
         lsl = learner_box["lslice"]
-        steps = starved = 0
+        steps = resume_steps
+        starved = 0
         pending: list = []  # gathered batches for one k-sized jitted call
         while steps < acfg.total_learner_steps and not stop.is_set():
             batch = source.get_batch(timeout=acfg.starve_timeout_s)
@@ -477,6 +584,7 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                     source.write_back(b.indices, prios_k[i])
                 pending = []
                 steps += learn_k
+            learner_box["live"] = (steps, lsl)
             if steps % acfg.publish_every < learn_k:
                 version = store.publish(lsl.params)
                 # Remote transports also ship the snapshot upstream, so the
@@ -492,29 +600,93 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         """Serve-sampling mode: no local learner. The learner clock is the
         remote learner's PRIORITY_UPDATE stream observed at the gateway;
         the run ends when it reaches ``total_learner_steps`` (or
-        ``max_seconds``/a worker death stops it first)."""
+        ``max_seconds``/a worker death stops it first).
+
+        A learner-marked BYE also ends the run: the remote learner's own
+        step clock is authoritative, and a severed-then-reconnected
+        transport can swallow priority frames that were in flight when
+        the socket died (bounded loss the replay tolerates — priorities
+        are idempotent LWW hints), so the observed count may stall just
+        short of the target a frame or two forever."""
         while not stop.wait(timeout=0.1):
-            if gateway.snapshot().priority_updates >= acfg.total_learner_steps:
+            snap = gateway.snapshot()
+            if snap.priority_updates >= acfg.total_learner_steps:
+                break
+            if snap.learner_byes > 0 and snap.priority_updates > 0:
                 break
         learner_box["steps"] = gateway.snapshot().priority_updates
 
-    # -- remote-ingest liveness -------------------------------------------
+    # -- actor-process supervision ----------------------------------------
     # In-process workers propagate death through guarded()/_check_alive;
-    # the socket path needs its own watchdog. Individual actor-process
-    # failures are tolerated (the paper's actors are expendable), but a
-    # dead gateway — or every experience source gone — must stop the
-    # runtime instead of letting the learner starve forever.
-    def gateway_monitor(procs: list) -> None:
-        while not stop.wait(timeout=0.5):
+    # the socket path needs its own watchdog. The supervisor tracks every
+    # actor-process *slot* independently of local threads (a dead proc is
+    # detected even when actor_threads > 0) and — because actors are pure
+    # functions of (seed, actor_id) + the latest params — respawns dead
+    # processes with capped exponential backoff, the paper's
+    # restartable-actor model. A dead gateway, or every experience source
+    # permanently gone, still stops the runtime instead of letting the
+    # learner starve forever.
+    procs: list = []
+    proc_specs: list = []
+    procs_lock = threading.Lock()
+    spawn_actor: Any = None  # bound below once the spawn ctx exists
+    c_restarts = tel.counter("supervisor/actor_restarts")
+    c_proc_exits = tel.counter("supervisor/actor_proc_exits")
+
+    def supervisor() -> None:
+        n = len(procs)
+        restarts = [0] * n          # respawns burned per slot
+        retry_at = [0.0] * n        # scheduled respawn time (0 = none)
+        dead = [False] * n          # slot exhausted / unsupervised death
+        while not stop.wait(timeout=0.25):
             if gateway.error is not None:
                 thread_errors.append(gateway.error)
                 stop.set()
                 return
-            if (acfg.actor_threads == 0
-                    and all(not p.is_alive() for p in procs)):
+            now = time.monotonic()
+            for j in range(n):
+                with procs_lock:
+                    p = procs[j]
+                if p.is_alive() or dead[j]:
+                    continue
+                if retry_at[j] == 0.0:
+                    # First observation of this death.
+                    with counter_lock:
+                        counters["actor_proc_exits"] += 1
+                    c_proc_exits.inc()
+                    if (not acfg.supervise_actors
+                            or restarts[j] >= acfg.actor_restart_limit):
+                        dead[j] = True
+                        obslog.emit("actor-proc-down", slot=j,
+                                    exitcode=p.exitcode,
+                                    restarts=restarts[j],
+                                    supervised=acfg.supervise_actors)
+                        continue
+                    backoff = min(
+                        _RESTART_BACKOFF_BASE_S * (2 ** restarts[j]),
+                        _RESTART_BACKOFF_CAP_S)
+                    retry_at[j] = now + backoff
+                    obslog.emit("actor-proc-exited", slot=j,
+                                exitcode=p.exitcode,
+                                retry_in_s=round(backoff, 2))
+                    continue
+                if now < retry_at[j]:
+                    continue
+                restarts[j] += 1
+                retry_at[j] = 0.0
+                with procs_lock:
+                    procs[j] = spawn_actor(j)
+                with counter_lock:
+                    counters["actor_restarts"] += 1
+                c_restarts.inc()
+                obslog.emit("actor-restart", slot=j, attempt=restarts[j])
+            if acfg.actor_threads == 0 and n and all(dead):
                 thread_errors.append(RuntimeError(
-                    "every remote actor process exited before the learner "
-                    "finished; no experience source remains"))
+                    "every remote actor process exited"
+                    + (" and exhausted its restart budget"
+                       if acfg.supervise_actors else "")
+                    + " before the learner finished; no experience source "
+                      "remains"))
                 stop.set()
                 return
 
@@ -542,7 +714,6 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         fabric.start()
     if server is not None:
         server.start()
-    procs: list = []
     if gateway is not None:
         from repro.net import RemoteActorSpec
         from repro.net.actor_client import run_remote_actor
@@ -558,7 +729,7 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         dial_host = ("127.0.0.1" if gateway.host in ("0.0.0.0", "::")
                      else gateway.host)
         for j in range(acfg.actor_procs):
-            spec = RemoteActorSpec(
+            proc_specs.append(RemoteActorSpec(
                 cfg=cfg, env=env, agent=agent,
                 host=dial_host, port=gateway.port,
                 actor_id=acfg.actor_threads + j, seed=acfg.seed,
@@ -566,18 +737,29 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
                 quantize_obs=acfg.wire_quantize_obs,
                 transport=acfg.transport,
                 trace_sample_rate=acfg.trace_sample_rate,
+                reconnect_timeout_s=acfg.reconnect_timeout_s,
                 **({"ring_bytes": acfg.transport_ring_bytes}
-                   if acfg.transport_ring_bytes else {}))
-            p = ctx.Process(target=run_remote_actor, args=(spec,),
+                   if acfg.transport_ring_bytes else {})))
+
+        def spawn_actor(j: int):
+            p = ctx.Process(target=run_remote_actor, args=(proc_specs[j],),
                             daemon=True, name=f"actor-proc-{j}")
             p.start()
-            procs.append(p)
-        threading.Thread(target=gateway_monitor, args=(procs,),
-                         daemon=True, name="gateway-monitor").start()
+            return p
+
+        for j in range(acfg.actor_procs):
+            procs.append(spawn_actor(j))
+        threading.Thread(target=supervisor, daemon=True,
+                         name="actor-supervisor").start()
     if source is not None:
         # Connect/spin up the sample plane before the clock starts (the
         # remote transport retries while the serving host finishes binding).
         source.start()
+    snapshots = None
+    if acfg.checkpoint_dir:
+        snapshots = snapshot_lib.SnapshotService(
+            acfg.checkpoint_dir, fabric, learner_box, store,
+            every_s=acfg.checkpoint_every_s, telemetry=tel).start()
     actors = [threading.Thread(target=guarded(actor_loop), args=(t,),
                                daemon=True, name=f"actor-{t}")
               for t in range(acfg.actor_threads)]
@@ -593,6 +775,12 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     learner.start()
     if progress is not None:
         progress.start()
+    if on_handles is not None:
+        on_handles(RuntimeHandles(
+            stop=stop, fabric=fabric, gateway=gateway, source=source,
+            store=store, procs=procs, procs_lock=procs_lock,
+            snapshots=snapshots, learner_box=learner_box,
+            counters=counters))
     learner.join(timeout=acfg.max_seconds)
     stop.set()
     if server is not None:
@@ -613,15 +801,25 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         # in-flight blocks land and their BYE counters merge, then the
         # processes exit on their own. Stubborn ones are terminated.
         gateway.stop()
-        for p in procs:
+        with procs_lock:
+            final_procs = list(procs)
+        for p in final_procs:
             p.join(timeout=30.0)
-        for p in procs:
+        for p in final_procs:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=5.0)
             elif p.exitcode not in (0, None):
-                thread_errors.append(RuntimeError(
-                    f"actor process {p.name} exited with {p.exitcode}"))
+                if acfg.supervise_actors:
+                    # A supervised run already absorbed (and possibly
+                    # replaced) crashing actors mid-run; a crash in the
+                    # shutdown window is the same tolerated event, not a
+                    # run failure.
+                    obslog.emit("actor-proc-down", slot=p.name,
+                                exitcode=p.exitcode, at="shutdown")
+                else:
+                    thread_errors.append(RuntimeError(
+                        f"actor process {p.name} exited with {p.exitcode}"))
         if gateway.error is not None:
             thread_errors.append(gateway.error)
         gw_snap = gateway.snapshot()
@@ -648,6 +846,14 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             # A shard may die after the learner's last call (e.g. during the
             # final drain) — no later add/get_batch would surface it.
             thread_errors.append(fabric.error)
+    if snapshots is not None:
+        # After fabric.stop(): the shards have drained their queues, so the
+        # final snapshot is the complete end-of-run state — a clean
+        # shutdown resumes from its very end. Skip it when the run is
+        # already failing (a dead shard cannot be captured).
+        snapshots.stop(final_save=not thread_errors)
+        if snapshots.error is not None:
+            thread_errors.append(snapshots.error)
     # Final flush *after* every plane stopped, so the last metrics snapshot
     # and the tail of the span buffer land in the JSONL (even on failure —
     # a run that died is exactly the one worth reading the report of).
@@ -673,7 +879,14 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         "replay_size": float(agg.replay_size),
         "replay_shards": float(acfg.replay_shards),
         "actor_procs": float(acfg.actor_procs),
+        "actor_restarts": float(counters["actor_restarts"]),
+        "actor_proc_exits": float(counters["actor_proc_exits"]),
+        "resumed_from_step": float(resume_steps),
     }
+    if snapshots is not None:
+        stats["snapshots"] = float(snapshots.saves)
+    if source is not None:
+        stats["source_reconnects"] = float(source.reconnect_count)
     if gw_snap is not None:
         stats["gateway_transitions"] = float(gw_snap.transitions_in)
         stats["gateway_param_sends"] = float(gw_snap.param_sends)

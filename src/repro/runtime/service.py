@@ -38,6 +38,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import replay as replay_lib
 from repro.obs import Telemetry
@@ -183,6 +184,11 @@ class ReplayShard:
         self._add_q: queue.Queue = queue.Queue(maxsize=add_queue_depth)
         self._sample_q: queue.Queue = queue.Queue(maxsize=sample_queue_depth)
         self._update_q: queue.Queue = queue.Queue()
+        # Checkpoint requests (boxes awaiting a consistent host-side capture)
+        # and the chaos harness's freeze hook: a paused owner loop models a
+        # stalled shard (GC pause, wedged device) without killing it.
+        self._ckpt_q: queue.Queue = queue.Queue()
+        self._paused = threading.Event()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run_guarded, daemon=True,
                                         name=f"replay-shard-{shard_id}")
@@ -227,6 +233,85 @@ class ReplayShard:
     def replay_state(self) -> replay_lib.ReplayState:
         """Final replay state; only meaningful after ``stop()``."""
         return self._state
+
+    # -- checkpoint / restore ------------------------------------------------
+
+    # Everything the paper's Appendix F asks a stateful part to save:
+    # replay contents + sum tree, the shard's rng stream, and the counters
+    # that drive behavior — ``updates_applied`` is the eviction clock
+    # (write-backs pass ``updates_applied + 1`` as the step) and
+    # ``transitions_added`` feeds the min-fill short-circuit. Restoring
+    # all of them makes post-restore sampling math bit-identical to a run
+    # that never stopped.
+    _CKPT_COUNTERS = ("blocks_added", "transitions_added", "batches_sampled",
+                      "updates_applied")
+
+    def _capture(self) -> dict:
+        st = jax.device_get(self._state)
+        return {
+            "replay": {"storage": st.storage, "tree": st.tree,
+                       "write_pos": st.write_pos, "size": st.size,
+                       "total_added": st.total_added},
+            "rng": jax.device_get(jax.random.key_data(self._rng)),
+            "counters": {k: np.int64(getattr(self.stats, k))
+                         for k in self._CKPT_COUNTERS},
+        }
+
+    def checkpoint_state(self, timeout_s: float = 60.0) -> dict:
+        """Consistent host-side snapshot of everything needed to rebuild
+        this shard (plain numpy pytree, ready for ``checkpoint.save``).
+
+        The mutating ops donate ``ReplayState`` into jit, so only the owner
+        thread may observe it: a live shard services the request *between*
+        ops at its next loop pass; a stopped (or not yet started) shard is
+        captured directly. Safe to call from any thread."""
+        self._check_alive()
+        if not self._thread.is_alive():
+            return self._capture()
+        box: queue.Queue = queue.Queue(maxsize=1)
+        self._ckpt_q.put(box)
+        try:
+            return box.get(timeout=timeout_s)
+        except queue.Empty:
+            self._check_alive()
+            if not self._thread.is_alive():
+                return self._capture()
+            raise RuntimeError(
+                f"replay shard {self.shard_id} did not answer a checkpoint "
+                f"request within {timeout_s}s") from None
+
+    def restore(self, ckpt: dict) -> None:
+        """Adopt a ``checkpoint_state`` capture. Must be called before
+        ``start()`` (the owner thread is the state's only holder once it
+        runs). Restores the replay pytree, the rng stream, and the
+        behavioral counters, so the first op after restore continues the
+        interrupted run bit-for-bit."""
+        if self._thread.is_alive():
+            raise RuntimeError("restore() must run before start()")
+        rep = ckpt["replay"]
+        self._state = replay_lib.ReplayState(
+            storage=jax.tree.map(jnp.asarray, rep["storage"]),
+            tree=jnp.asarray(rep["tree"]),
+            write_pos=jnp.asarray(rep["write_pos"]),
+            size=jnp.asarray(rep["size"]),
+            total_added=jnp.asarray(rep["total_added"]))
+        self._rng = jax.random.wrap_key_data(jnp.asarray(ckpt["rng"]))
+        with self._stats_lock:
+            for k in self._CKPT_COUNTERS:
+                setattr(self.stats, k, int(ckpt["counters"][k]))
+            self.stats.replay_size = int(rep["size"])
+        self._ready = False  # re-derived from the restored state on demand
+
+    # -- chaos hooks ---------------------------------------------------------
+
+    def pause(self) -> None:
+        """Freeze the owner loop (fault injection: a stalled shard owner).
+        Queues keep filling — callers see backpressure/starvation exactly as
+        they would behind a wedged thread — until :meth:`unpause`."""
+        self._paused.set()
+
+    def unpause(self) -> None:
+        self._paused.clear()
 
     # -- observability ------------------------------------------------------
 
@@ -379,8 +464,21 @@ class ReplayShard:
         except BaseException as e:  # noqa: BLE001
             self.error = e
 
+    def _serve_checkpoints(self) -> None:
+        """Answer pending checkpoint requests (owner thread only): between
+        ops the state is quiescent, so the capture is consistent."""
+        while True:
+            try:
+                box = self._ckpt_q.get_nowait()
+            except queue.Empty:
+                return
+            box.put(self._capture())
+
     def _run(self) -> None:
         while True:
+            while self._paused.is_set() and not self._stop.is_set():
+                time.sleep(0.001)  # frozen by fault injection
+            self._serve_checkpoints()
             progressed = False
             # Queue-depth gauges once per loop pass: cheap (three qsize
             # reads), and the interval sink turns them into the queue
@@ -462,6 +560,9 @@ class ReplayShard:
         with self._stats_lock:
             self.stats.replay_size = size
         self._g_size.set(size)
+        # A checkpoint request racing the exit would otherwise hang its
+        # caller until the timeout; serve it here, the state is final.
+        self._serve_checkpoints()
 
 
 # PR 1 name for the single-shard service; the owner loop is unchanged.

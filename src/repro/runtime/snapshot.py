@@ -1,0 +1,147 @@
+"""Snapshot service: periodic atomic run-state checkpoints (Appendix F).
+
+"All stateful parts of the system must periodically save their work and be
+able to resume": for this runtime the stateful parts are the replay fabric
+(per-shard storage pytree + sum tree + write/eviction clocks + rng streams)
+and the learner (params, target params, optimizer state, step counter,
+ParamStore version). Actors are deliberately *not* saved — they are pure
+functions of ``(seed, actor_id)`` and the latest params, rebuilt on restart
+with only a temporary dip in ingest rate.
+
+:class:`SnapshotService` is a thread that every ``every_s`` seconds captures
+
+* every shard, via ``ReplayShard.checkpoint_state`` (the owner thread
+  answers between ops, so the capture is consistent even while hot);
+* the learner's live slice — the learner loop publishes ``(steps, lslice)``
+  into a shared box as one atomic rebind each step, so the pair is never
+  torn;
+* the ``ParamStore`` version (a resumed learner must keep version numbers
+  monotone for the actors comparing them),
+
+and writes them as one ``ckpt_<learner_steps>.npz`` through
+``repro.checkpoint.save`` (tmp + rename: the file is atomic; ``latest()``
+never sees a half-written checkpoint). ``restore_run`` is the inverse used
+by ``run_async(resume=True)``.
+
+Recovery telemetry lands in the shared bundle: ``snapshot/saves`` counter,
+``snapshot/last_step`` gauge, ``snapshot/save_us`` latency histogram.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.obs import Telemetry
+from repro.obs import log as obslog
+
+CKPT_PREFIX = "ckpt_"
+
+
+def _run_tree(shards: list, steps: int, lslice: Any, version: int) -> dict:
+    return {
+        "shards": shards,
+        "learner": {"params": lslice.params,
+                    "target_params": lslice.target_params,
+                    "opt_state": lslice.opt_state,
+                    "learner_step": lslice.learner_step},
+        "steps": np.int64(steps),
+        "param_version": np.int64(version),
+    }
+
+
+class SnapshotService:
+    """Periodic checkpoints of fabric + learner into one directory."""
+
+    def __init__(self, directory: str, fabric: Any, learner_box: dict,
+                 store: Any, *, every_s: float = 30.0,
+                 telemetry: Telemetry | None = None):
+        if every_s <= 0:
+            raise ValueError(f"checkpoint interval must be > 0s, got "
+                             f"{every_s}")
+        self._dir = directory
+        self._fabric = fabric
+        self._box = learner_box
+        self._store = store
+        self._every_s = every_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="snapshot-service")
+        tel = telemetry if telemetry is not None else Telemetry.local()
+        self._c_saves = tel.counter("snapshot/saves")
+        self._g_last = tel.gauge("snapshot/last_step")
+        self._h_save = tel.histogram("snapshot/save_us")
+        self.saves = 0
+        self.last_step = -1
+        self.error: BaseException | None = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "SnapshotService":
+        self._thread.start()
+        return self
+
+    def stop(self, final_save: bool = True) -> None:
+        """Stop the periodic thread; by default take one last snapshot so a
+        clean shutdown resumes from its very end (a crash resumes from the
+        last periodic one). Never raises — a failed final save records the
+        error for the runner to surface."""
+        self._stop.set()
+        if self._thread.is_alive():
+            self._thread.join()
+        if final_save:
+            try:
+                self.save_now()
+            except BaseException as e:  # noqa: BLE001
+                if self.error is None:
+                    self.error = e
+
+    # -- capture ------------------------------------------------------------
+
+    def save_now(self) -> str:
+        """One atomic full-run checkpoint; returns its path. Same-step saves
+        overwrite (the rename is atomic, so readers see old or new)."""
+        t0 = time.perf_counter()
+        steps, lslice = self._box["live"]
+        tree = _run_tree(self._fabric.checkpoint_shards(), steps, lslice,
+                         self._store.version)
+        path = os.path.join(self._dir, f"{CKPT_PREFIX}{steps}.npz")
+        ckpt_lib.save(path, tree, step=steps)
+        us = 1e6 * (time.perf_counter() - t0)
+        self._h_save.record(us)
+        self._c_saves.inc()
+        self._g_last.set(steps)
+        self.saves += 1
+        self.last_step = steps
+        obslog.emit("snapshot", step=steps, path=path, us=round(us))
+        return path
+
+    def _run(self) -> None:
+        while not self._stop.wait(timeout=self._every_s):
+            try:
+                self.save_now()
+            except BaseException as e:  # noqa: BLE001
+                # A failing snapshot must not kill the run it is meant to
+                # protect; record and keep trying (disk may free up).
+                self.error = e
+
+
+def restore_run(directory: str, fabric: Any, lslice: Any) -> dict | None:
+    """Load the newest run checkpoint in ``directory`` into the structure of
+    a freshly built (same-geometry) fabric + learner slice. Returns the
+    restored tree (``shards`` / ``learner`` / ``steps`` / ``param_version``)
+    or None when the directory holds no checkpoint yet — a resume against an
+    empty directory is a cold start, not an error (first launch of a
+    supervised job)."""
+    path = ckpt_lib.latest(directory, prefix=CKPT_PREFIX)
+    if path is None:
+        return None
+    example = _run_tree(fabric.checkpoint_shards(), 0, lslice, 0)
+    tree = ckpt_lib.restore(path, example)
+    tree["path"] = path
+    return tree

@@ -112,6 +112,9 @@ class SourceStats:
     param_pushes: int = 0     # params shipped upstream (remote transports)
     staged: int = 0           # batches staged ahead (StagedSource)
     stage_idle: int = 0       # stager polls that found the inner source dry
+    reconnects: int = 0       # transport reconnects survived (remote
+                              # transports; each one is a severed socket the
+                              # source recovered from instead of dying)
 
 
 class SampleSource:
@@ -161,6 +164,12 @@ class SampleSource:
     @property
     def error(self) -> BaseException | None:
         return None
+
+    @property
+    def reconnect_count(self) -> int:
+        """Transport reconnects survived (0 for in-process sources);
+        decorators forward to the transport-owning inner source."""
+        return self.stats.reconnects
 
 
 class LocalFabricSource(SampleSource):
@@ -373,3 +382,7 @@ class StagedSource(SampleSource):
     @property
     def error(self) -> BaseException | None:
         return self._error if self._error is not None else self._inner.error
+
+    @property
+    def reconnect_count(self) -> int:
+        return self._inner.reconnect_count

@@ -1,0 +1,19 @@
+"""Test-support plane: fault injection for the async runtime.
+
+``repro.testing.chaos`` drives a live ``run_async`` through failures —
+killed actor processes, severed transports, frozen/killed shard owners —
+via the ``RuntimeHandles`` hook, so the fault-tolerance claims (supervised
+restarts, reconnecting transports, snapshot/resume) are *tested* behavior,
+not documentation.
+"""
+
+from repro.testing.chaos import (ChaosMonkey, Fault, freeze_shard,
+                                 kill_actor_proc, kill_shard_owner,
+                                 sever_gateway_transports,
+                                 sever_source_transport)
+
+__all__ = [
+    "ChaosMonkey", "Fault", "freeze_shard", "kill_actor_proc",
+    "kill_shard_owner", "sever_gateway_transports",
+    "sever_source_transport",
+]

@@ -1,0 +1,182 @@
+"""Fault-injection harness for the async runtime (the chaos plane).
+
+The paper's fault model (Appendix F) is concrete: actors are pure
+functions of ``(seed, actor_id)`` + the latest parameters and may die and
+restart at will; replay and learner state checkpoint periodically;
+priority updates are idempotent last-writer-wins, so re-sent frames after
+a reconnect are harmless. This module turns each of those claims into an
+injectable fault against a *live* ``run_async``:
+
+* :func:`kill_actor_proc` — SIGKILL an actor process mid-stream; the
+  runner's supervisor must respawn it (capped exponential backoff).
+* :func:`sever_gateway_transports` — hard-shutdown the gateway side of
+  every live connection mid-frame; remote actors and the remote learner
+  source must reconnect, re-handshake, and resume.
+* :func:`sever_source_transport` — the client-side mirror: tear the
+  learner's ``RemoteFabricSource`` socket out from under it.
+* :func:`freeze_shard` — pause a shard owner thread for a while (a stalled
+  worker, not a dead one); backpressure must hold and the run complete.
+* :func:`kill_shard_owner` — poison a shard's add queue so the owner
+  thread dies; the runtime must *fail loudly* (a dead shard is state loss,
+  the one fault the plane does not absorb).
+
+A :class:`ChaosMonkey` schedules a plan of timed faults and plugs into
+``run_async(..., on_handles=monkey.on_handles)``; faults fire on their own
+thread once every plane is up. Reaching into ``RuntimeHandles`` internals
+(process objects, gateway connection registry, raw sockets) is the point:
+the harness breaks the runtime the way the world would, below every API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from repro.obs import log as obslog
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: ``apply(handles)`` fires ``at_s`` seconds
+    after the runtime hands over its internals."""
+
+    at_s: float
+    name: str
+    apply: Callable[[Any], None]
+
+
+# -- fault factories --------------------------------------------------------
+
+def kill_actor_proc(at_s: float, slot: int = 0) -> Fault:
+    """SIGKILL actor process ``slot`` (no cleanup, no BYE — the real
+    crash). The supervisor owns the respawn."""
+    def apply(h: Any) -> None:
+        with h.procs_lock:
+            p = h.procs[slot]
+        p.kill()
+        p.join(timeout=10.0)
+    return Fault(at_s, f"kill_actor_proc[{slot}]", apply)
+
+
+def _sever(conn: Any) -> bool:
+    """Hard-shutdown a Transport's underlying socket (both directions, no
+    FIN handshake semantics the peer could mistake for a clean close — the
+    next read/write on either side raises). An shm-upgraded transport is
+    severed at its doorbell socket, which its ring protocol treats the
+    same as a torn TCP stream."""
+    t = getattr(conn, "_shm", None) or conn
+    sock = getattr(t, "_sock", None)
+    if sock is None:
+        return False
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass  # already dead — severed either way
+    return True
+
+
+def sever_gateway_transports(at_s: float) -> Fault:
+    """Shutdown the gateway side of every live client connection (actors
+    and/or a remote learner) mid-whatever-frame-was-in-flight."""
+    def apply(h: Any) -> None:
+        with h.gateway._lock:
+            conns = list(h.gateway._conns.values())
+        severed = sum(_sever(c) for c in conns)
+        obslog.emit("chaos-severed", side="gateway", conns=severed)
+    return Fault(at_s, "sever_gateway_transports", apply)
+
+
+def sever_source_transport(at_s: float) -> Fault:
+    """Shutdown the learner-side socket of the run's ``SampleSource``
+    (``RemoteFabricSource``, possibly wrapped in ``StagedSource``)."""
+    def apply(h: Any) -> None:
+        src = h.source
+        src = getattr(src, "_inner", src)  # unwrap StagedSource
+        _sever(getattr(src, "_conn", None))
+    return Fault(at_s, "sever_source_transport", apply)
+
+
+def freeze_shard(at_s: float, shard: int = 0, for_s: float = 0.5) -> Fault:
+    """Pause shard ``shard``'s owner thread for ``for_s`` seconds: adds and
+    write-backs pile up in its bounded queues (backpressure), then drain.
+    The fault thread itself waits out the freeze."""
+    def apply(h: Any) -> None:
+        sh = h.fabric.shards[shard]
+        sh.pause()
+        try:
+            time.sleep(for_s)
+        finally:
+            sh.unpause()
+    return Fault(at_s, f"freeze_shard[{shard}]", apply)
+
+
+class _Poison:
+    """Not a TransitionBlock: the shard owner's dispatch chokes on it."""
+
+    def __getattr__(self, name: str) -> Any:
+        raise RuntimeError("chaos: poisoned shard add queue")
+
+
+def kill_shard_owner(at_s: float, shard: int = 0) -> Fault:
+    """Feed a shard's add queue an object its owner thread cannot digest.
+    Replay state is storage — a dead shard must FAIL the run (the runtime
+    absorbs actor and transport loss, never silent state loss)."""
+    def apply(h: Any) -> None:
+        h.fabric.shards[shard]._add_q.put((_Poison(), 0))
+    return Fault(at_s, f"kill_shard_owner[{shard}]", apply)
+
+
+# -- the monkey -------------------------------------------------------------
+
+class ChaosMonkey:
+    """Applies a plan of timed :class:`Fault`\\ s to a live runtime.
+
+    Usage::
+
+        monkey = ChaosMonkey([kill_actor_proc(0.5), kill_actor_proc(1.5)])
+        result = run_async(cfg, acfg, env, agent, opt,
+                           on_handles=monkey.on_handles)
+        monkey.join()
+        assert monkey.applied and not monkey.errors
+
+    The clock starts when ``run_async`` hands over its handles (every
+    plane already up), so ``at_s`` measures into the *steady* run. A fault
+    raising is recorded in ``errors``, never propagated into the runtime.
+    The plan stops early when the run does.
+    """
+
+    def __init__(self, plan: Sequence[Fault]):
+        self.plan = sorted(plan, key=lambda f: f.at_s)
+        self.applied: list[str] = []
+        self.errors: list[tuple[str, BaseException]] = []
+        self._handles: Any = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="chaos-monkey")
+
+    def on_handles(self, handles: Any) -> None:
+        """The ``run_async(on_handles=...)`` hook: arms the plan."""
+        self._handles = handles
+        self._thread.start()
+
+    def join(self, timeout: float | None = 30.0) -> None:
+        if self._thread.ident is not None:
+            self._thread.join(timeout=timeout)
+
+    def _run(self) -> None:
+        h = self._handles
+        t0 = time.monotonic()
+        for fault in self.plan:
+            delay = t0 + fault.at_s - time.monotonic()
+            if delay > 0 and h.stop.wait(timeout=delay):
+                return  # run ended before this fault's time came
+            if h.stop.is_set():
+                return
+            obslog.emit("chaos", fault=fault.name, at_s=fault.at_s)
+            try:
+                fault.apply(h)
+                self.applied.append(fault.name)
+            except BaseException as e:  # noqa: BLE001 — never hurt the run
+                self.errors.append((fault.name, e))

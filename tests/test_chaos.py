@@ -1,0 +1,230 @@
+"""Chaos harness: mechanics units (always on) and the full crash-recovery
+acceptance scenarios (gated behind ``REPRO_TEST_CHAOS=1`` — a CI matrix
+leg runs them and uploads the recovered runs' telemetry JSONL).
+
+Scenarios, each gating on *full recovery* (the run still reaches
+``total_learner_steps``):
+
+a. an actor process is SIGKILLed mid-stream → the supervisor respawns it;
+b. the remote learner's transport is severed mid-frame → the source
+   reconnects and the serve+learn pair completes;
+c. a checkpointing learner process is SIGKILLed → a ``resume=True`` run
+   continues from its latest snapshot to completion.
+
+Plus the one fault the plane must NOT absorb: a dead replay shard owner
+fails the run loudly (replay is state — losing it silently would corrupt
+the experiment).
+"""
+
+import multiprocessing
+import os
+import socket
+import threading
+import time
+
+import pytest
+from _apex_helpers import tiny_preset
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.runtime import AsyncConfig, run_async
+from repro.testing import chaos
+
+CHAOS = bool(os.environ.get("REPRO_TEST_CHAOS"))
+needs_chaos = pytest.mark.skipif(
+    not CHAOS, reason="chaos scenarios run on the REPRO_TEST_CHAOS CI leg")
+# The chaos CI leg points this at a directory it uploads as an artifact:
+# the *recovered* runs write their metrics/spans JSONL here.
+METRICS_ROOT = os.environ.get("REPRO_TEST_CHAOS_METRICS_DIR") or None
+
+
+def _metrics_dir(scenario: str) -> str | None:
+    if METRICS_ROOT is None:
+        return None
+    d = os.path.join(METRICS_ROOT, scenario)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+# Trace every block/step in the recovered runs so the uploaded artifact
+# carries spans.jsonl alongside metrics.jsonl (tiny runs — cheap).
+_TRACE_RATE = 1.0 if METRICS_ROOT else 0.0
+
+
+# --- mechanics (ungated) ---------------------------------------------------
+
+class _FakeHandles:
+    def __init__(self):
+        self.stop = threading.Event()
+
+
+def test_monkey_applies_plan_in_order_and_records_errors():
+    h = _FakeHandles()
+    order = []
+    plan = [
+        chaos.Fault(0.02, "second", lambda _: order.append("second")),
+        chaos.Fault(0.0, "first", lambda _: order.append("first")),
+        chaos.Fault(0.03, "boom",
+                    lambda _: (_ for _ in ()).throw(OSError("nope"))),
+    ]
+    monkey = chaos.ChaosMonkey(plan)
+    monkey.on_handles(h)
+    monkey.join()
+    assert order == ["first", "second"]
+    assert monkey.applied == ["first", "second"]
+    assert [name for name, _ in monkey.errors] == ["boom"]
+
+
+def test_monkey_stops_with_the_run():
+    h = _FakeHandles()
+    fired = []
+    monkey = chaos.ChaosMonkey(
+        [chaos.Fault(30.0, "late", lambda _: fired.append(1))])
+    monkey.on_handles(h)
+    h.stop.set()                       # run ended before the fault's time
+    monkey.join()
+    assert not monkey._thread.is_alive()
+    assert fired == [] and monkey.applied == []
+
+
+def test_dead_shard_owner_fails_the_run_loudly():
+    """Actors and transports are expendable; replay state is not. A poisoned
+    shard owner must surface as a runtime error, never a silent hang or a
+    quietly-wrong result."""
+    preset = tiny_preset()
+    monkey = chaos.ChaosMonkey([chaos.kill_shard_owner(0.05, shard=0)])
+    with pytest.raises(RuntimeError, match="worker died"):
+        run_async(
+            preset.apex,
+            AsyncConfig(actor_threads=1, total_learner_steps=1_000_000,
+                        max_seconds=60, seed=2),
+            preset.env, preset.agent, preset.make_optimizer(),
+            on_handles=monkey.on_handles)
+    monkey.join()
+    assert monkey.applied == ["kill_shard_owner[0]"], monkey.errors
+
+
+# --- scenario (a): killed actor process, supervised respawn ---------------
+
+@needs_chaos
+def test_chaos_killed_actor_proc_run_recovers():
+    preset = tiny_preset()
+    monkey = chaos.ChaosMonkey([chaos.kill_actor_proc(0.5, slot=0)])
+    res = run_async(
+        preset.apex,
+        AsyncConfig(actor_threads=0, actor_procs=2, total_learner_steps=20,
+                    max_seconds=300, seed=21,
+                    metrics_dir=_metrics_dir("killed-actor"),
+                    trace_sample_rate=_TRACE_RATE),
+        preset.env, preset.agent, preset.make_optimizer(),
+        on_handles=monkey.on_handles)
+    monkey.join()
+    assert monkey.applied == ["kill_actor_proc[0]"], monkey.errors
+    assert res.stats["learner_steps"] == 20       # full recovery
+    assert res.stats["actor_proc_exits"] >= 1
+    assert res.stats["actor_restarts"] >= 1
+
+
+# --- scenario (b): severed learner transport, reconnect -------------------
+
+@needs_chaos
+def test_chaos_severed_learner_transport_run_recovers():
+    preset = tiny_preset()
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    steps = 400
+    serve_out = {}
+
+    # Gateway-side sever, triggered deterministically once 50 of the
+    # learner's write-backs are through (no wall-clock race).
+    def serve_handles(h):
+        def cut():
+            while (h.gateway.snapshot().priority_updates < 50
+                   and not h.stop.is_set()):
+                time.sleep(0.001)
+            if not h.stop.is_set():
+                chaos.sever_gateway_transports(0.0).apply(h)
+        threading.Thread(target=cut, daemon=True).start()
+
+    def serve():
+        serve_out["res"] = run_async(
+            preset.apex,
+            AsyncConfig(actor_threads=1, serve_sampling=True,
+                        gateway_port=port, total_learner_steps=steps,
+                        transport="tcp", max_seconds=300),
+            preset.env, preset.agent, preset.make_optimizer(),
+            on_handles=serve_handles)
+
+    th = threading.Thread(target=serve, daemon=True)
+    th.start()
+    res = run_async(
+        preset.apex,
+        AsyncConfig(actor_threads=0, learner_remote=f"127.0.0.1:{port}",
+                    total_learner_steps=steps, transport="tcp",
+                    max_seconds=300,
+                    metrics_dir=_metrics_dir("severed-learner"),
+                    trace_sample_rate=_TRACE_RATE),
+        preset.env, preset.agent, preset.make_optimizer())
+    th.join(timeout=300)
+    assert not th.is_alive()
+    assert res.stats["learner_steps"] == steps    # full recovery
+    assert res.stats["source_reconnects"] >= 1
+    # Gateway-side sever can swallow in-flight priority frames; the
+    # learner's BYE ends the serve run even so (tolerated-loss mode).
+    assert serve_out["res"].stats["learner_steps"] >= steps - 50
+
+
+# --- scenario (c): SIGKILLed checkpointing run, resumed -------------------
+
+def _ckpt_run_child(ckpt_dir: str) -> None:
+    """Spawn target: a checkpointing run that never finishes on its own —
+    the parent SIGKILLs it mid-stride."""
+    preset = tiny_preset()
+    run_async(
+        preset.apex,
+        AsyncConfig(actor_threads=2, total_learner_steps=1_000_000,
+                    checkpoint_dir=ckpt_dir, checkpoint_every_s=0.2,
+                    max_seconds=300, seed=7),
+        preset.env, preset.agent, preset.make_optimizer())
+
+
+@needs_chaos
+def test_chaos_sigkilled_learner_resumes_from_snapshot(tmp_path):
+    preset = tiny_preset()
+    ckpt_dir = str(tmp_path / "snaps")
+    ctx = multiprocessing.get_context("spawn")
+    p = ctx.Process(target=_ckpt_run_child, args=(ckpt_dir,), daemon=True)
+    p.start()
+    def _latest_step():
+        newest = ckpt_lib.latest(ckpt_dir)
+        if newest is None:
+            return -1
+        return int(os.path.basename(newest)[len("ckpt_"):-len(".npz")])
+
+    try:
+        # Wait for a snapshot of real progress (step >= 1), not just the
+        # early ones taken while the learner was still behind min-fill.
+        deadline = time.monotonic() + 240.0
+        while _latest_step() < 1:
+            assert time.monotonic() < deadline, "no snapshot ever landed"
+            assert p.is_alive(), "checkpointing run died on its own"
+            time.sleep(0.05)
+    finally:
+        p.kill()                 # SIGKILL: no finally blocks, no final save
+        p.join(timeout=30.0)
+    step = _latest_step()
+    assert step >= 1
+
+    res = run_async(
+        preset.apex,
+        AsyncConfig(actor_threads=2, total_learner_steps=step + 20,
+                    checkpoint_dir=ckpt_dir, checkpoint_every_s=30.0,
+                    resume=True, max_seconds=300, seed=7,
+                    metrics_dir=_metrics_dir("resumed-learner"),
+                    trace_sample_rate=_TRACE_RATE),
+        preset.env, preset.agent, preset.make_optimizer())
+    assert res.stats["resumed_from_step"] == step
+    assert res.stats["learner_steps"] == step + 20      # full recovery
+    assert int(res.learner.learner_step) == step + 20
+    assert res.stats["snapshots"] >= 1

@@ -1,0 +1,174 @@
+"""Checkpoint plane unit coverage (Appendix F's save/resume substrate).
+
+The snapshot service and every resume path stand on three promises made
+by ``repro.checkpoint.checkpoint``:
+
+* ``save``/``restore`` round-trip arbitrary pytrees bit-exactly;
+* ``latest`` picks the numerically newest ``<prefix><step>.npz`` and
+  ignores everything else (sidecars, tmp droppings, foreign prefixes);
+* ``save`` is atomic — a crash at any instant leaves either a fully
+  usable checkpoint or garbage that ``latest`` ignores and the next
+  ``save`` sweeps up.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree(rng: np.random.Generator) -> dict:
+    return {
+        "params": {
+            "w": rng.standard_normal((3, 4)).astype(np.float32),
+            "b": rng.standard_normal((4,)).astype(np.float64),
+        },
+        "counters": np.int64(rng.integers(0, 2**40)),
+        "stack": [rng.integers(0, 255, (2, 2), dtype=np.uint8),
+                  (np.float32(rng.random()), np.int32(7))],
+    }
+
+
+def _assert_tree_equal(a, b):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(x, y)
+
+
+# -- round trip -------------------------------------------------------------
+
+def test_round_trip_bit_exact(tmp_path):
+    for seed in range(5):
+        tree = _tree(np.random.default_rng(seed))
+        path = ckpt.save(str(tmp_path / f"ckpt_{seed}.npz"), tree, step=seed)
+        _assert_tree_equal(ckpt.restore(path, tree), tree)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_round_trip_property(seed):
+    import tempfile
+    tree = _tree(np.random.default_rng(seed))
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save(os.path.join(d, "ckpt_0.npz"), tree, step=0)
+        _assert_tree_equal(ckpt.restore(path, tree), tree)
+
+
+def test_sidecar_records_step_and_keys(tmp_path):
+    tree = {"a": np.ones(2, np.float32)}
+    path = ckpt.save(str(tmp_path / "ckpt_7.npz"), tree, step=7)
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    assert meta["step"] == 7
+    assert meta["keys"] == ["a"]
+
+
+# -- latest() ---------------------------------------------------------------
+
+def test_latest_orders_numerically_not_lexically(tmp_path):
+    tree = {"x": np.zeros(1, np.float32)}
+    for step in (2, 10, 9):  # lexically "9" > "10"
+        ckpt.save(str(tmp_path / f"ckpt_{step}.npz"), tree, step=step)
+    assert ckpt.latest(str(tmp_path)).endswith("ckpt_10.npz")
+
+
+def test_latest_respects_prefix_and_ignores_noise(tmp_path):
+    tree = {"x": np.zeros(1, np.float32)}
+    ckpt.save(str(tmp_path / "ckpt_3.npz"), tree, step=3)
+    ckpt.save(str(tmp_path / "other_9.npz"), tree, step=9)
+    (tmp_path / "ckpt_99.npz.tmp.npz").write_bytes(b"torn")
+    (tmp_path / "ckpt_notanumber.npz").write_bytes(b"junk")
+    assert ckpt.latest(str(tmp_path)).endswith("ckpt_3.npz")
+    assert ckpt.latest(str(tmp_path), prefix="other_").endswith("other_9.npz")
+
+
+def test_latest_missing_or_empty_dir_is_none(tmp_path):
+    assert ckpt.latest(str(tmp_path / "nope")) is None
+    assert ckpt.latest(str(tmp_path)) is None
+
+
+# -- restore errors ---------------------------------------------------------
+
+def test_restore_missing_key_raises(tmp_path):
+    path = ckpt.save(str(tmp_path / "ckpt_0.npz"),
+                     {"a": np.ones(2, np.float32)}, step=0)
+    with pytest.raises(KeyError, match="missing key"):
+        ckpt.restore(path, {"a": np.ones(2, np.float32),
+                            "b": np.ones(3, np.float32)})
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    path = ckpt.save(str(tmp_path / "ckpt_0.npz"),
+                     {"a": np.ones((2, 3), np.float32)}, step=0)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(path, {"a": np.ones((3, 2), np.float32)})
+
+
+# -- atomicity --------------------------------------------------------------
+
+def test_interrupted_savez_leaks_nothing(tmp_path, monkeypatch):
+    """A crash inside np.savez must leave no tmp file and no sidecar — and
+    must not disturb the previous good checkpoint."""
+    tree = {"a": np.ones(4, np.float32)}
+    good = ckpt.save(str(tmp_path / "ckpt_1.npz"), tree, step=1)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError, match="disk full"):
+        ckpt.save(str(tmp_path / "ckpt_2.npz"), tree, step=2)
+    leftovers = [n for n in os.listdir(tmp_path)
+                 if ".tmp" in n or n.startswith("ckpt_2")]
+    assert leftovers == []
+    assert ckpt.latest(str(tmp_path)) == good
+    _assert_tree_equal(ckpt.restore(good, tree), tree)
+
+
+def test_crash_between_sidecar_and_rename_is_invisible(tmp_path,
+                                                       monkeypatch):
+    """The npz rename is the commit point: dying right before it leaves a
+    sidecar + tmp that latest() ignores and the next save sweeps."""
+    tree = {"a": np.arange(3, dtype=np.float32)}
+    real_replace = os.replace
+
+    def crashing_replace(src, dst):
+        if dst.endswith(".npz") and not dst.endswith(".json"):
+            raise KeyboardInterrupt  # simulated SIGINT mid-commit
+        return real_replace(src, dst)
+    monkeypatch.setattr(os, "replace", crashing_replace)
+    with pytest.raises(KeyboardInterrupt):
+        ckpt.save(str(tmp_path / "ckpt_5.npz"), tree, step=5)
+    monkeypatch.setattr(os, "replace", real_replace)
+    assert ckpt.latest(str(tmp_path)) is None
+
+    # The next save in the directory sweeps any stale tmp droppings.
+    (tmp_path / "ckpt_9.npz.tmp.npz").write_bytes(b"orphan")
+    ckpt.save(str(tmp_path / "ckpt_6.npz"), tree, step=6)
+    names = set(os.listdir(tmp_path))
+    assert not any(".tmp" in n for n in names)
+    assert ckpt.latest(str(tmp_path)).endswith("ckpt_6.npz")
+
+
+def test_sidecar_never_dangles_ahead_of_npz(tmp_path, monkeypatch):
+    """Ordering inside save(): the sidecar lands before the npz rename, so
+    observing ckpt_N.npz implies its sidecar exists (the reader's
+    invariant); a torn save may leave neither, never npz-without-meta."""
+    tree = {"a": np.zeros(1, np.float32)}
+    order = []
+    real_replace = os.replace
+
+    def recording_replace(src, dst):
+        order.append(os.path.basename(dst))
+        return real_replace(src, dst)
+    monkeypatch.setattr(os, "replace", recording_replace)
+    ckpt.save(str(tmp_path / "ckpt_0.npz"), tree, step=0)
+    assert order == ["ckpt_0.npz.json", "ckpt_0.npz"]

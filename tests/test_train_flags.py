@@ -144,3 +144,40 @@ def test_trace_sample_rate_bounds(capsys):
 def test_trace_sample_rate_requires_metrics_dir(capsys):
     assert_rejected(["--runtime", "async", "--trace-sample-rate", "0.5"],
                     "--metrics-dir", capsys)
+
+
+def test_checkpoint_flags_accepted_under_async(tmp_path):
+    args = validate(["--runtime", "async",
+                     "--checkpoint-dir", str(tmp_path),
+                     "--checkpoint-every-s", "5", "--resume"])
+    assert args.checkpoint_dir == str(tmp_path)
+    assert args.checkpoint_every_s == 5.0
+    assert args.resume
+
+
+def test_checkpoint_flags_rejected_under_sync(capsys):
+    assert_rejected(["--checkpoint-dir", "/tmp/c"], "--runtime async",
+                    capsys)
+    assert_rejected(["--checkpoint-every-s", "5"], "--runtime async",
+                    capsys)
+    assert_rejected(["--resume"], "--runtime async", capsys)
+
+
+def test_resume_requires_checkpoint_dir(capsys):
+    assert_rejected(["--runtime", "async", "--resume"],
+                    "--checkpoint-dir", capsys)
+
+
+def test_checkpoint_interval_must_be_positive(capsys):
+    assert_rejected(["--runtime", "async", "--checkpoint-dir", "/tmp/c",
+                     "--checkpoint-every-s", "0"],
+                    "--checkpoint-every-s", capsys)
+
+
+def test_checkpoint_dir_needs_local_fabric_and_learner(capsys):
+    assert_rejected(["--runtime", "async", "--checkpoint-dir", "/tmp/c",
+                     "--learner-remote", "h:1"],
+                    "single-process topology", capsys)
+    assert_rejected(["--runtime", "async", "--checkpoint-dir", "/tmp/c",
+                     "--serve-sampling"],
+                    "single-process topology", capsys)
