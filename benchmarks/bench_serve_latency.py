@@ -1,0 +1,356 @@
+"""Serving-plane latency/throughput — continuous batching vs wave
+coalescing, and open-loop fixed-QPS policy serving through the gateway.
+
+The inference plane's claim (ROADMAP item 4, after the paper's §4.1 FPS
+economics) is that slot scheduling removes two taxes the wave path pays
+under ragged request streams: the batch-wide barrier (every wave quantizes
+to its slowest member) and the coalesce-window admission delay. This bench
+measures both halves of the plane end to end.
+
+Leg 1 — ragged-stream token throughput (deterministic): the same ragged
+request set (ragged prompt lengths x ragged per-request new-token budgets)
+through ``ContinuousBatcher`` and the ``WaveBatcher`` baseline. Both run
+the identical compiled step, chunked prefill, and masked resets — only the
+admission policy differs — and both emit the *identical tokens* (asserted),
+so tokens/step is a pure scheduling measurement immune to container noise.
+The headline ratio is steps_wave / steps_continuous == relative token
+throughput at equal work; the gate (``--check``) requires >= 1.2x. Wall
+tokens/s for both schedulers ride along for the perf trajectory.
+
+Leg 2 — open-loop policy serving (offered load, not a machine race,
+exactly like ``bench_remote_ingest``): K ``PolicyClient`` threads dial a
+policy-only ``ReplayGateway`` backed by a slots-mode ``InferenceServer``
+and submit rollout requests on a *fixed schedule* (offered QPS chosen at
+~0.6x the measured closed-loop capacity, so the gate detects serving
+stalls, not container speed). Latency is measured from each request's
+*scheduled* send time, so queueing delay from a stalled engine lands in
+p99 instead of silently shifting the schedule. Gates: achieved/offered
+>= 0.9, and p99 is recorded (the trajectory number) at the gated QPS.
+
+Emitted rows (benchmarks/common.py CSV convention):
+  serve_latency/cont_steps, serve_latency/wave_steps
+  serve_latency/cont_vs_wave_ratio
+  serve_latency/closed_loop_qps
+  serve_latency/offered_qps, serve_latency/achieved_qps
+  serve_latency/p50_ms, serve_latency/p99_ms
+
+JSON result set: ``benchmarks/artifacts/BENCH_serve_latency.json`` plus the
+committed repo-root twin ``BENCH_serve_latency.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit, write_artifact  # noqa: E402
+from repro.configs import apex_dqn  # noqa: E402
+from repro.core import apex, replay as replay_lib  # noqa: E402
+from repro.core.agents import DQNAgent  # noqa: E402
+from repro.envs.synthetic import ChainWorld  # noqa: E402
+from repro.launch.serve import ContinuousBatcher, WaveBatcher  # noqa: E402
+from repro.models import registry, transformer  # noqa: E402
+from repro.models.qnetworks import DuelingDQN  # noqa: E402
+from repro.net import PolicyClient, ReplayGateway  # noqa: E402
+from repro.runtime import InferenceServer, ParamStore, phases  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# Leg 1: continuous vs wave on a ragged stream (deterministic steps)
+# --------------------------------------------------------------------------
+
+def ragged_stream(cfg, requests: int, max_new: int, seed: int = 7):
+    """Ragged prompts (4..8 tokens) x ragged budgets (1..max_new): the
+    workload shape where a batch-wide barrier hurts most — E[max] of a
+    wave's budgets vs E[mean] under slot scheduling."""
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab_size, size=rng.randint(2, 5))
+               for _ in range(requests)]
+    budgets = [int(rng.randint(1, max_new + 1)) for _ in range(requests)]
+    return prompts, budgets
+
+
+def bench_schedulers(arch: str, requests: int, slots: int,
+                     max_new: int) -> dict:
+    cfg = registry.get_config(arch).reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    prompts, budgets = ragged_stream(cfg, requests, max_new)
+    max_len = 8 + max_new + 1
+    cont = ContinuousBatcher(cfg, params, slots=slots, max_len=max_len,
+                             max_new_tokens=max_new)
+    wave = WaveBatcher(cfg, params, slots=slots, max_len=max_len,
+                       max_new_tokens=max_new)
+    # warm run compiles both engines' step/chunk/reset fns off the clock
+    warm_p, warm_b = prompts[:slots], budgets[:slots]
+    cont.run(warm_p, new_tokens=warm_b)
+    wave.run(warm_p, new_tokens=warm_b)
+    cont.steps = wave.steps = 0
+
+    t0 = time.perf_counter()
+    out_c = cont.run(prompts, new_tokens=budgets)
+    dt_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_w = wave.run(prompts, new_tokens=budgets)
+    dt_w = time.perf_counter() - t0
+    if out_c != out_w:
+        raise RuntimeError("schedulers emitted different tokens — the "
+                           "throughput ratio would be meaningless")
+    tokens = sum(len(v) for v in out_c.values())
+    return {
+        "mode": "schedulers", "arch": arch, "requests": requests,
+        "slots": slots, "max_new_tokens": max_new, "tokens": tokens,
+        "cont_steps": cont.steps, "wave_steps": wave.steps,
+        # tokens are identical, so relative throughput == inverse step ratio
+        "cont_vs_wave_ratio": wave.steps / max(cont.steps, 1),
+        "cont_wall_tps": tokens / dt_c if dt_c > 0 else 0.0,
+        "wave_wall_tps": tokens / dt_w if dt_w > 0 else 0.0,
+    }
+
+
+# --------------------------------------------------------------------------
+# Leg 2: open-loop fixed-QPS serving through the policy gateway
+# --------------------------------------------------------------------------
+
+def serve_preset(lanes: int = 4, rollout: int = 4,
+                 hidden: int = 32) -> apex_dqn.ApexDQNPreset:
+    """Small actor geometry: short rollouts, so the open-loop window
+    collects many latency samples in seconds."""
+    env = ChainWorld(length=8, max_steps=32)
+    agent = DQNAgent(net=DuelingDQN(num_actions=env.num_actions,
+                                    mlp_hidden=(hidden, hidden),
+                                    head_hidden=hidden),
+                     grad_clip=40.0)
+    cfg = apex.ApexConfig(
+        replay=replay_lib.ReplayConfig(capacity=4096, min_fill=256),
+        lanes_per_shard=lanes, num_shards=4, rollout_len=rollout, n_step=2,
+        batch_size=32, learner_steps_per_iter=1, param_sync_period=2,
+        target_update_period=100, evict_interval=50,
+        eps_base=0.4, eps_alpha=7.0)
+    return apex_dqn.ApexDQNPreset(apex=cfg, env=env, agent=agent,
+                                  learning_rate=1e-3)
+
+
+class _ServeStack:
+    """Slots-mode engine + policy-only gateway + K connected clients."""
+
+    def __init__(self, clients: int):
+        preset = serve_preset()
+        self.cfg, env, agent = preset.apex, preset.env, preset.agent
+        self.slices = [phases.initial_actor_slice(self.cfg, env, seed=7,
+                                                  actor_id=t)
+                       for t in range(clients)]
+        params = agent.init(jax.random.key(0), self.slices[0].obs[:1])
+        store = ParamStore(params)
+        self.server = InferenceServer(self.cfg, env, agent, store,
+                                      max_batch=clients, mode="slots")
+        self.server.warm(self.slices[0])
+        self.server.start()
+        self.gateway = ReplayGateway(None, store, inference=self.server,
+                                     act_example=self.slices[0]).start()
+        self.clients = [PolicyClient(self.gateway.host, self.gateway.port,
+                                     example=self.slices[0], transport="tcp")
+                        for _ in range(clients)]
+        # one throwaway act per client: the first dispatch through the full
+        # wire path pays one-time lazy-compile costs (~seconds) that would
+        # otherwise swallow the calibration window
+        for t, c in enumerate(self.clients):
+            assert c.act(self.slices[t], t) is not None
+
+    def close(self):
+        for c in self.clients:
+            c.close()
+        self.gateway.stop()
+        self.server.stop()
+        if self.gateway.error is not None:
+            raise RuntimeError("gateway died mid-bench") from self.gateway.error
+        if self.server.error is not None:
+            raise RuntimeError("engine died mid-bench") from self.server.error
+
+
+def closed_loop_qps(stack: _ServeStack, seconds: float) -> float:
+    """Back-to-back clients: the serving plane's capacity on this host."""
+    counts = [0] * len(stack.clients)
+    stop = time.perf_counter() + seconds
+
+    def worker(t):
+        sl = stack.slices[t]
+        while time.perf_counter() < stop:
+            out = stack.clients[t].act(sl, t)
+            assert out is not None
+            sl = out[0]
+            counts[t] += 1
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(len(stack.clients))]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=seconds + 120.0)
+        assert not th.is_alive()
+    dt = time.perf_counter() - t0
+    return sum(counts) / dt if dt > 0 else 0.0
+
+
+def open_loop(stack: _ServeStack, offered_qps: float,
+              seconds: float) -> dict:
+    """Fixed-schedule submission: client t fires at t0 + k*K/offered (its
+    1/K share of the offered rate). Latency is measured from the scheduled
+    time, so a stalled engine shows up as queueing delay in p99 — and a
+    client that falls behind schedule drags achieved below offered, which
+    is what the gate detects."""
+    K = len(stack.clients)
+    interval = K / offered_qps
+    latencies_ms: list[float] = []
+    done_at = [0.0]
+    served = [0] * K
+    lock = threading.Lock()
+    t0 = time.perf_counter() + 0.2  # common epoch, clients armed first
+
+    def worker(t):
+        sl = stack.slices[t]
+        k = 0
+        while True:
+            sched = t0 + (t / K) * interval + k * interval
+            if sched > t0 + seconds:
+                break
+            now = time.perf_counter()
+            if sched > now:
+                time.sleep(sched - now)
+            out = stack.clients[t].act(sl, t)
+            assert out is not None
+            sl = out[0]
+            done = time.perf_counter()
+            with lock:
+                latencies_ms.append(1e3 * (done - sched))
+                done_at[0] = max(done_at[0], done)
+            served[t] = k = k + 1
+
+    threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+               for t in range(K)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=seconds + 120.0)
+        assert not th.is_alive()
+    # Blocking clients never drop requests, so "achieved" is the rate at
+    # which the fixed schedule actually completed: total served over the
+    # span from the epoch to the last completion. A plane that keeps up
+    # finishes ~one service time after the window; one that stalls
+    # stretches the span and drags this ratio down.
+    span = max(done_at[0] - t0, 1e-9)
+    achieved = sum(served) / span
+    lat = sorted(latencies_ms)
+    pick = lambda q: lat[min(len(lat) - 1, int(q * len(lat)))]  # noqa: E731
+    return {
+        "mode": "open_loop", "clients": K, "seconds": seconds,
+        "offered_qps": offered_qps, "achieved_qps": achieved,
+        "achieved_ratio": achieved / offered_qps,
+        "requests": sum(served), "span_s": span,
+        "p50_ms": pick(0.50), "p90_ms": pick(0.90), "p99_ms": pick(0.99),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests, short windows")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless continuous >= --min-ratio x wave "
+                         "and achieved >= 0.9x offered QPS")
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="ragged requests for the scheduler leg")
+    ap.add_argument("--max-new", type=int, default=24,
+                    help="per-request budgets drawn from 1..max-new")
+    ap.add_argument("--clients", type=int, default=3,
+                    help="PolicyClient threads for the serving leg")
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="open-loop measurement window")
+    ap.add_argument("--load-factor", type=float, default=0.6,
+                    help="offered QPS as a fraction of closed-loop capacity")
+    ap.add_argument("--min-ratio", type=float, default=1.2,
+                    help="gate: continuous/wave token-throughput ratio")
+    ap.add_argument("--min-achieved", type=float, default=0.9,
+                    help="gate: achieved/offered QPS at the fixed schedule")
+    ap.add_argument("--skip-serving-leg", action="store_true",
+                    help="scheduler leg only (no sockets)")
+    ap.add_argument("--json", default=None,
+                    help="override the artifact path")
+    args = ap.parse_args()
+
+    requests = args.requests or (16 if args.smoke else 24)
+    seconds = args.seconds or (2.0 if args.smoke else 8.0)
+    calib_s = 1.0 if args.smoke else 3.0
+
+    sched = bench_schedulers(args.arch, requests, args.slots, args.max_new)
+    emit("serve_latency/cont_steps", 0.0, sched["cont_steps"])
+    emit("serve_latency/wave_steps", 0.0, sched["wave_steps"])
+    emit("serve_latency/cont_vs_wave_ratio", 0.0,
+         f"{sched['cont_vs_wave_ratio']:.2f}")
+    emit("serve_latency/cont_wall_tps", 0.0,
+         f"{sched['cont_wall_tps']:.1f}")
+    emit("serve_latency/wave_wall_tps", 0.0,
+         f"{sched['wave_wall_tps']:.1f}")
+
+    serving = None
+    if not args.skip_serving_leg:
+        stack = _ServeStack(args.clients)
+        try:
+            capacity = closed_loop_qps(stack, calib_s)
+            offered = max(args.load_factor * capacity, 1.0)
+            serving = open_loop(stack, offered, seconds)
+            serving["closed_loop_qps"] = capacity
+            serving["load_factor"] = args.load_factor
+        finally:
+            stack.close()
+        emit("serve_latency/closed_loop_qps", calib_s * 1e6,
+             f"{capacity:.1f}")
+        emit("serve_latency/offered_qps", seconds * 1e6, f"{offered:.1f}")
+        emit("serve_latency/achieved_qps", seconds * 1e6,
+             f"{serving['achieved_qps']:.1f}")
+        emit("serve_latency/p50_ms", seconds * 1e6,
+             f"{serving['p50_ms']:.1f}")
+        emit("serve_latency/p99_ms", seconds * 1e6,
+             f"{serving['p99_ms']:.1f}")
+
+    write_artifact("serve_latency", {
+        "bench": "serve_latency",
+        "unix_time": time.time(),
+        "cpu_count": os.cpu_count(),
+        "smoke": args.smoke,
+        "min_ratio": args.min_ratio,
+        "min_achieved": args.min_achieved,
+        "schedulers": sched,
+        "serving": serving,
+    }, args.json)
+
+    if args.check:
+        if sched["cont_vs_wave_ratio"] < args.min_ratio:
+            print(f"FAIL: continuous only {sched['cont_vs_wave_ratio']:.2f}x "
+                  f"the wave scheduler's token throughput on the ragged "
+                  f"stream (need >= {args.min_ratio:.2f}x)", file=sys.stderr)
+            return 1
+        if serving is not None and (serving["achieved_ratio"]
+                                    < args.min_achieved):
+            print(f"FAIL: achieved only {serving['achieved_ratio']:.2f}x the "
+                  f"offered QPS (need >= {args.min_achieved:.2f}x — the "
+                  f"serving plane fell behind its fixed schedule)",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,34 @@
 """Serving launcher: batched greedy decode (prefill + decode-step loop — the
-shape lowered by the decode dry-runs) and a continuous-batching scheduler
-(per-row decode positions: requests are admitted into free slots as earlier
-ones finish, no batch-wide synchronization).
+shape lowered by the decode dry-runs) and a slot-scheduled continuous-batching
+engine (per-row decode positions: requests are admitted into free slots as
+earlier ones finish, no batch-wide synchronization).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
       --batch 4 --prompt-len 16 --new-tokens 24
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --continuous
+
+The ``ContinuousBatcher`` is the decode-side half of the inference plane
+(ROADMAP item 4): one compiled decode step over ``slots`` batch rows, each
+row carrying its own position, requests admitted from a deque the step a
+slot frees. Prompts are consumed by *chunked prefill* — ``prefill_chunk``
+writes C prompt tokens per call at a shared start offset, with a per-row
+validity mask restoring the cache of non-participating rows — instead of
+feeding the prompt one token at a time through the decode step. The tail
+(< C tokens plus the last prompt token) still rides the decode path, so a
+prompt of length P costs ``(P-1)//C`` chunk calls + ``P - C*((P-1)//C)``
+decode steps rather than P decode steps.
+
+Param hot-swap drains: when the versioned ``ParamStore`` publishes, the
+batcher stops admitting, finishes every in-flight request on the params it
+was admitted under, swaps, and resumes — zero requests dropped, and the
+admission/completion version of every request is recorded so tests can
+assert the contract under version churn.
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -22,78 +40,180 @@ from repro.models import registry, transformer
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching over per-row decode positions.
+    """Slot-scheduled continuous batching over per-row decode positions.
 
     Each of ``slots`` batch rows carries its own position; finished rows are
-    immediately re-filled with the next queued request (its prompt is fed
-    token-by-token through the same decode path — "prefill as decode", which
-    keeps a single compiled step). Attention rows mask themselves by their
-    own valid length, so rows never see each other's cache.
+    immediately re-filled with the next queued request. Attention rows mask
+    themselves by their own valid length, so rows never see each other's
+    cache; recurrent (SSM/WKV) state is zeroed by one batched masked reset
+    per step covering every slot admitted that step.
+
+    ``param_store`` (optional) wires hot-swap: a version change drains the
+    in-flight slots on their admission-time params before the swap is taken.
+    ``on_step(step)`` runs after every decode step — tests use it to publish
+    new versions at deterministic points in the schedule.
     """
 
     def __init__(self, cfg, params, *, slots: int, max_len: int,
-                 max_new_tokens: int):
+                 max_new_tokens: int, param_store=None,
+                 prefill_chunk: int = 8, on_step=None):
         if cfg.encoder_only:
             raise ValueError("encoder-only arch has no decode step")
-        self.cfg, self.params = cfg, params
+        self.cfg = cfg
         self.slots, self.max_len = slots, max_len
         self.max_new = max_new_tokens
+        self.on_step = on_step
+        self._store = param_store
+        if param_store is not None:
+            snap = param_store.get()
+            self.params, self._version = snap.params, snap.version
+        else:
+            self.params, self._version = params, 0
+        # The ring cache's S>1 write path cannot exceed the ring, so chunked
+        # prefill is only safe on the full-length cache layout.
+        self._chunk = (prefill_chunk
+                       if prefill_chunk and prefill_chunk > 1
+                       and not getattr(cfg, "swa_ring_cache", False) else 0)
+        self.swaps = 0                  # drain-and-swap cycles taken
+        self.steps = 0                  # decode steps issued
+        self.admission_version: dict[int, int] = {}
+        self.completion_version: dict[int, int] = {}
         self.step_fn = jax.jit(
             lambda p, c, t, pos: transformer.decode_step(
                 p, t, pos, cfg=cfg, cache=c))
+        # One masked reset per step for ALL slots admitted that step
+        # (attention rows are masked by length anyway, but SSM/WKV recurrent
+        # state must not leak across requests). Cache leaves carry batch at
+        # axis 1, so the slot mask broadcasts as (1, slots, 1, ...).
+        self.reset_fn = jax.jit(lambda c, mask: jax.tree.map(
+            lambda a: jnp.where(mask.reshape((1, -1) + (1,) * (a.ndim - 2)),
+                                jnp.zeros_like(a), a), c))
 
-    def run(self, prompts: list[np.ndarray]) -> dict[int, list[int]]:
+        def masked_chunk(p, c, toks, start, mask):
+            _, new = transformer.prefill_chunk(p, toks, start, cfg=cfg,
+                                               cache=c)
+            # Rows not prefilling this chunk keep their old cache verbatim.
+            return jax.tree.map(
+                lambda old, fresh: jnp.where(
+                    mask.reshape((1, -1) + (1,) * (fresh.ndim - 2)),
+                    fresh, old), c, new)
+
+        self.chunk_fn = jax.jit(masked_chunk)
+
+    # -- scheduling policy ---------------------------------------------------
+
+    def _admissible(self, active: np.ndarray) -> list[int]:
+        """Slots the scheduler may fill this step (continuous: any free
+        slot, immediately)."""
+        return [s for s in range(self.slots) if not active[s]]
+
+    # -- engine --------------------------------------------------------------
+
+    def run(self, prompts: list[np.ndarray],
+            new_tokens: list[int] | None = None) -> dict[int, list[int]]:
+        """Serve every prompt to completion; returns request id -> emitted
+        greedy tokens. ``new_tokens`` optionally caps each request's budget
+        individually (a ragged stream); defaults to ``max_new_tokens``."""
         cfg = self.cfg
+        budgets = (list(new_tokens) if new_tokens is not None
+                   else [self.max_new] * len(prompts))
         cache = transformer.init_cache(cfg, self.slots, self.max_len)
-        queue = list(enumerate(prompts))
+        queue = collections.deque(enumerate(prompts))
         slot_req = [-1] * self.slots          # request id per slot
         slot_prompt: list[np.ndarray | None] = [None] * self.slots
         pos = np.zeros(self.slots, np.int64)  # next write position per slot
         emitted: dict[int, list[int]] = {}
         next_tok = np.zeros((self.slots, 1), np.int64)
         active = np.zeros(self.slots, bool)
+        draining = False
 
-        reset_slot = jax.jit(lambda c, s: jax.tree.map(
-            lambda a: a.at[:, s].set(jnp.zeros_like(a[:, s])), c))
-
-        def admit(s, cache):
-            if not queue:
-                active[s] = False
+        def admit(cache):
+            admitted = []
+            for s in self._admissible(active):
+                if not queue:
+                    break
+                rid, prompt = queue.popleft()
+                slot_req[s], slot_prompt[s] = rid, prompt
+                emitted[rid] = []
+                self.admission_version[rid] = self._version
+                active[s] = True
+                admitted.append(s)
+            if not admitted:
                 return cache
-            rid, prompt = queue.pop(0)
-            slot_req[s], slot_prompt[s] = rid, prompt
-            pos[s] = 0
-            next_tok[s, 0] = prompt[0]
-            emitted[rid] = []
-            active[s] = True
-            # zero the slot's cache rows: attention rows are masked anyway,
-            # but SSM/WKV recurrent state must not leak across requests
-            return reset_slot(cache, s)
+            mask = np.zeros(self.slots, bool)
+            mask[admitted] = True
+            cache = self.reset_fn(cache, jnp.asarray(mask))
+            C = self._chunk
+            nfull = {s: ((len(slot_prompt[s]) - 1) // C if C else 0)
+                     for s in admitted}
+            for k in range(max(nfull.values(), default=0)):
+                rows = [s for s in admitted if nfull[s] > k]
+                toks = np.zeros((self.slots, C), np.int64)
+                for s in rows:
+                    toks[s] = slot_prompt[s][k * C:(k + 1) * C]
+                cmask = np.zeros(self.slots, bool)
+                cmask[rows] = True
+                # Same-step admissions share chunk starts (all begin at 0),
+                # so chunk k is ONE batched call at offset k*C.
+                cache = self.chunk_fn(self.params, cache,
+                                      jnp.asarray(toks, jnp.int32),
+                                      jnp.asarray(k * C, jnp.int32),
+                                      jnp.asarray(cmask))
+            for s in admitted:
+                pos[s] = nfull[s] * C
+                next_tok[s, 0] = slot_prompt[s][pos[s]]
+            return cache
 
-        for s in range(self.slots):
-            cache = admit(s, cache)
+        while queue or active.any():
+            if self._store is not None and self._store.version != self._version:
+                draining = True     # stop admitting, finish in-flight slots
+            if draining and not active.any():
+                snap = self._store.get()
+                self.params, self._version = snap.params, snap.version
+                self.swaps += 1
+                draining = False
+            if not draining:
+                cache = admit(cache)
+            if not active.any():
+                continue            # drained (or queue raced empty)
 
-        while any(active):
             tok = jnp.asarray(next_tok, jnp.int32)
             step_pos = jnp.asarray(pos, jnp.int32)
             logits, cache = self.step_fn(self.params, cache, tok, step_pos)
             greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            self.steps += 1
             for s in range(self.slots):
                 if not active[s]:
                     continue
                 rid, prompt = slot_req[s], slot_prompt[s]
                 pos[s] += 1
-                if pos[s] < len(prompt):          # still prefilling
+                if pos[s] < len(prompt):          # prompt tail as decode
                     next_tok[s, 0] = prompt[pos[s]]
                     continue
                 emitted[rid].append(int(greedy[s]))
-                done = (len(emitted[rid]) >= self.max_new
+                done = (len(emitted[rid]) >= budgets[rid]
                         or pos[s] + 1 >= self.max_len)
                 if done:
-                    cache = admit(s, cache)
+                    self.completion_version[rid] = self._version
+                    active[s] = False
                 else:
                     next_tok[s, 0] = greedy[s]
+            if self.on_step is not None:
+                self.on_step(self.steps)
         return emitted
+
+
+class WaveBatcher(ContinuousBatcher):
+    """Wave-coalescing baseline on the same engine: admission waits for the
+    batch-wide barrier (every slot free), so each wave quantizes to its
+    slowest member. Exists to isolate the *scheduling* difference for
+    ``bench_serve_latency`` — chunked prefill, masked resets, and the
+    compiled step are identical to :class:`ContinuousBatcher`."""
+
+    def _admissible(self, active: np.ndarray) -> list[int]:
+        if active.any():
+            return []               # the barrier: no refills mid-wave
+        return list(range(self.slots))
 
 
 def serve(arch: str, batch: int, prompt_len: int, new_tokens: int,
@@ -145,7 +265,7 @@ def serve_continuous(arch: str, requests: int = 8, slots: int = 4,
     dt = time.time() - t0
     total = sum(len(v) for v in out.values())
     print(f"[serve-cb] {arch}: {requests} ragged requests on {slots} slots "
-          f"-> {total} tokens in {dt:.2f}s")
+          f"-> {total} tokens in {dt:.2f}s ({batcher.steps} steps)")
     return out
 
 

@@ -79,7 +79,9 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                    trace_sample_rate: float = 0.0,
                    checkpoint_dir: str | None = None,
                    checkpoint_every_s: float = 30.0,
-                   resume: bool = False):
+                   resume: bool = False,
+                   inference_mode: str = "wave",
+                   serve_policy: str | None = None):
     """Decoupled runtime: actors, replay fabric shards, and learner on their
     own clocks; reports generate/consume transitions-per-second separately.
     ``actor_procs`` actors run as separate OS processes streaming blocks
@@ -113,6 +115,8 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                        checkpoint_dir=checkpoint_dir,
                        checkpoint_every_s=checkpoint_every_s,
                        resume=resume,
+                       inference_mode=inference_mode,
+                       serve_policy=serve_policy,
                        total_learner_steps=learner_steps)
     t0 = time.time()
     res = run_async(preset.apex, acfg, preset.env, preset.agent,
@@ -153,8 +157,14 @@ def run_apex_async(preset, learner_steps: int, actor_threads: int,
                     idle_polls=ss.stage_idle)
     if res.inference_stats is not None:
         i = res.inference_stats
-        obslog.emit("inference", requests=i.requests,
-                    dispatches=i.dispatches, full_waves=i.full_waves)
+        obslog.emit("inference", mode=inference_mode, requests=i.requests,
+                    dispatches=i.dispatches, full_waves=i.full_waves,
+                    hot_swaps=i.hot_swaps)
+    if res.policy_stats is not None:
+        p = res.policy_stats
+        obslog.emit("policy-plane", conns=p.connections,
+                    acts=p.act_requests,
+                    mb_out=round(p.bytes_out / 1e6, 1))
     if checkpoint_dir or s.get("actor_restarts") or s.get("source_reconnects"):
         obslog.emit("fault-tolerance",
                     resumed_from_step=int(s.get("resumed_from_step", 0)),
@@ -235,6 +245,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--inference-batching", action="store_true",
                     help="share one batched act dispatch across all actor "
                          "threads (--runtime async)")
+    ap.add_argument("--inference-mode", choices=("wave", "slots"),
+                    default="wave",
+                    help="scheduling inside the shared inference engine: "
+                         "wave = coalesce up to 2 ms and pad short waves; "
+                         "slots = continuous batching — pending requests "
+                         "are admitted into free slots the moment the "
+                         "previous dispatch returns, params hot-swap at "
+                         "dispatch boundaries (requires "
+                         "--inference-batching)")
+    ap.add_argument("--serve-policy", metavar="HOST:PORT", default=None,
+                    help="also serve the shared inference engine over the "
+                         "transport plane: a policy-only gateway at "
+                         "HOST:PORT answers ACT_REQUEST frames, actor "
+                         "processes become thin clients that ship their "
+                         "slice per rollout instead of pulling params, and "
+                         "external open-loop clients may attach (requires "
+                         "--inference-batching)")
     ap.add_argument("--actor-procs", type=int, default=0,
                     help="spawn this many actor OS processes streaming "
                          "experience through the replay gateway socket "
@@ -330,6 +357,8 @@ def validate_args(ap: argparse.ArgumentParser,
     async_only = [("--actor-procs", args.actor_procs != 0),
                   ("--replay-shards", args.replay_shards != 1),
                   ("--inference-batching", args.inference_batching),
+                  ("--inference-mode", args.inference_mode != "wave"),
+                  ("--serve-policy", args.serve_policy is not None),
                   ("--learn-batches", args.learn_batches != 1),
                   ("--wire-quantize-obs", args.wire_quantize_obs),
                   ("--sample-staging", args.sample_staging),
@@ -412,6 +441,8 @@ def validate_args(ap: argparse.ArgumentParser,
                      ("--actor-procs", args.actor_procs != 0),
                      ("--replay-shards", args.replay_shards != 1),
                      ("--inference-batching", args.inference_batching),
+                     ("--inference-mode", args.inference_mode != "wave"),
+                     ("--serve-policy", args.serve_policy is not None),
                      ("--wire-quantize-obs", args.wire_quantize_obs),
                      ("--ingest-staging", args.ingest_staging),
                      ("--add-queue-depth", args.add_queue_depth != 4),
@@ -473,10 +504,25 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error("--actor-threads 0 leaves the run with no experience "
                  "source: add --actor-procs N (actors as OS processes) or "
                  "run actor threads (the learner would starve forever)")
-    if args.inference_batching and args.actor_threads == 0:
+    if args.serve_policy is not None:
+        from repro.net.learner_client import parse_hostport
+        try:
+            # port 0 = ephemeral bind (logged at startup), like --gateway-port
+            parse_hostport(args.serve_policy, allow_ephemeral=True)
+        except ValueError as e:
+            ap.error(f"--serve-policy: {e}")
+        if not args.inference_batching:
+            ap.error("--serve-policy serves the shared inference engine; "
+                     "there is no engine without --inference-batching")
+    if args.inference_mode != "wave" and not args.inference_batching:
+        ap.error("--inference-mode selects the shared engine's scheduler; "
+                 "it requires --inference-batching")
+    if (args.inference_batching and args.actor_threads == 0
+            and args.serve_policy is None):
         ap.error("--inference-batching batches *in-process* actor threads; "
                  "with --actor-threads 0 there is nothing to batch (actor "
-                 "processes run their own jitted rollouts)")
+                 "processes run their own jitted rollouts) — unless "
+                 "--serve-policy feeds the engine from remote clients")
     if args.serve_sampling and args.gateway_port == 0:
         obslog.emit("note", serve_sampling=True, gateway_port="ephemeral",
                     hint="the learner host needs the port logged at "
@@ -507,7 +553,8 @@ def main():
                            args.add_queue_depth, args.sample_queue_depth,
                            args.metrics_dir, args.trace_sample_rate,
                            args.checkpoint_dir, args.checkpoint_every_s,
-                           args.resume)
+                           args.resume, args.inference_mode,
+                           args.serve_policy)
         else:
             run_apex(preset, args.iterations, args.log_every, args.ckpt_dir)
 

@@ -402,6 +402,22 @@ def prefill(params, tokens=None, *, cfg, cache, embeddings=None,
     return _head(cfg, params, x), cache
 
 
+def prefill_chunk(params, tokens, start, *, cfg, cache, impl=None):
+    """Chunked prefill: write ``tokens`` (B, C) into the cache segment at
+    absolute offset ``start`` (a traced scalar — one shared start across
+    rows, which is what the S>1 cache-write path supports). Positions are
+    ``start + arange(C)`` and the valid length after the chunk is
+    ``start + C``, so a prompt split into chunks reproduces
+    :func:`prefill` of the concatenation. Returns (logits, cache)."""
+    x = _embed_inputs(cfg, params, tokens, None, None)
+    S = x.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(S, dtype=jnp.int32)
+    x, cache, _ = _forward(cfg, params, x, positions, cache=cache,
+                           cache_len=start + S, impl=impl)
+    return _head(cfg, params, x), cache
+
+
 def decode_step(params, token, pos, *, cfg, cache, impl=None):
     """One-token step: token (B, 1) int32; pos is either a scalar int32
     (all rows at the same position) or a (B,) vector of per-row positions

@@ -20,6 +20,11 @@
   in-flight window; ``python -m repro.net.actor_client`` runs it against a
   remote gateway (the multi-host path), ``launch/train.py --actor-procs N``
   spawns local subprocesses (the single-machine proof).
+* ``policy_client`` — ``PolicyClient``: the *policy plane* — a thin
+  client shipping its ``ActorSlice`` per ``ACT_REQUEST`` to a
+  ``--serve-policy`` gateway, whose shared slot-scheduled
+  ``InferenceServer`` runs the rollout and replies ``ACT_RESULT``
+  (bit-identical to an in-process rollout; the client never holds params).
 * ``learner_client`` — ``RemoteFabricSource``: the *sample plane* — a
   ``repro.runtime.sources.SampleSource`` speaking ``SAMPLE_REQUEST`` /
   ``SAMPLE_BATCH`` / ``PRIORITY_UPDATE`` (coalesced, one frame per sample
@@ -33,6 +38,7 @@ from repro.net.actor_client import (RemoteActorLoop, RemoteActorSpec,
                                     initial_slice, run_remote_actor)
 from repro.net.gateway import GatewayStats, ReplayGateway
 from repro.net.learner_client import RemoteFabricSource, parse_hostport
+from repro.net.policy_client import PolicyClient
 from repro.net.transport import (Listener, ShmRingTransport, ShmUnavailable,
                                  TcpTransport, Transport, TransportClosed,
                                  connect, is_local_host, listen, resolve_kind)
@@ -45,8 +51,8 @@ from repro.net.wire import (FrameReader, WireError, decode_block,
                             encode_tree, encode_tree_iov)
 
 __all__ = [
-    "FrameReader", "GatewayStats", "Listener", "RemoteActorLoop",
-    "RemoteActorSpec", "RemoteFabricSource", "ReplayGateway",
+    "FrameReader", "GatewayStats", "Listener", "PolicyClient",
+    "RemoteActorLoop", "RemoteActorSpec", "RemoteFabricSource", "ReplayGateway",
     "ShmRingTransport", "ShmUnavailable", "TcpTransport", "Transport",
     "TransportClosed", "WireError", "connect", "decode_block",
     "decode_params", "decode_priority_update", "decode_sample_batch",

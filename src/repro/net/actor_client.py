@@ -99,6 +99,12 @@ class RemoteActorSpec:
                                     # header (repro.obs); spans are
                                     # recorded on the gateway host, whose
                                     # sink owns the run's JSONL
+    policy: str | None = None     # HOST:PORT of a --serve-policy gateway.
+                                  # Set -> thin-client mode: rollouts run
+                                  # server-side in the shared slot-scheduled
+                                  # engine (this process ships its slice per
+                                  # ACT_REQUEST and never holds params);
+                                  # unset -> classic local jitted act_phase
 
 
 class _Stop(Exception):
@@ -132,10 +138,12 @@ class RemoteActorLoop:
         # sink — it only originates ids).
         self._tracer = Tracer(spec.trace_sample_rate)
         self._conn: transport_lib.Transport | None = None
+        self._policy = None  # PolicyClient in thin-client mode
         self.stats = {"rollouts": 0, "pushed": 0, "blocked": 0,
                       "transitions": 0, "param_pulls": 0, "bytes_out": 0,
                       "reconnects": 0, "inflight_dropped": 0,
-                      "param_version": -1, "transport": ""}
+                      "param_version": -1, "transport": "",
+                      "policy_acts": 0}
 
     # -- frame plumbing -----------------------------------------------------
 
@@ -188,7 +196,10 @@ class RemoteActorLoop:
             {"actor_id": self.spec.actor_id,
              "protocol": wire.PROTOCOL_VERSION,
              "reconnects": self.stats["reconnects"]}))
-        self._pull_params(self._conn)
+        if self.spec.policy is None:
+            self._pull_params(self._conn)
+        # thin-client mode never pulls: the policy gateway's engine holds
+        # (and hot-swaps) the parameters
 
     def _retire_conn(self) -> None:
         if self._conn is None:
@@ -239,6 +250,27 @@ class RemoteActorLoop:
                 continue
             return
 
+    # -- rollout dispatch ----------------------------------------------------
+
+    def _rollout(self, sl, sid):
+        """One rollout: local jitted act_phase, or — thin-client mode — an
+        ACT_REQUEST round trip into the policy gateway's shared engine. The
+        two are bit-identical per actor (the wire codec round-trips every
+        leaf exactly), so moving an actor behind the policy plane does not
+        change its stream."""
+        if self._policy is None:
+            return self._act(self._params, sl, sid)
+        try:
+            res = self._policy.act(sl, int(sid))
+        except (EOFError, transport_lib.TransportClosed, OSError) as e:
+            # The policy plane lives with the runner; it going away IS the
+            # end of the run for a thin client (no params to act with).
+            raise _Stop from e
+        if res is None:
+            raise _Stop  # STOP reply: runtime shutting down
+        self.stats["policy_acts"] += 1
+        return res
+
     # -- main loop ----------------------------------------------------------
 
     def run(self) -> dict:
@@ -250,6 +282,17 @@ class RemoteActorLoop:
         self.stats["transport"] = self._conn.kind
         try:
             self._handshake()
+            if spec.policy is not None:
+                from repro.net.learner_client import parse_hostport
+                from repro.net.policy_client import PolicyClient
+                ph, pp = parse_hostport(spec.policy)
+                self._policy = PolicyClient(
+                    ph, pp,
+                    example=initial_slice(spec.cfg, spec.env, spec.seed,
+                                          spec.actor_id),
+                    transport=spec.transport,
+                    connect_timeout_s=spec.connect_timeout_s,
+                    act_timeout_s=spec.param_timeout_s)
 
             sl = initial_slice(spec.cfg, spec.env, spec.seed, spec.actor_id)
             sid = jnp.int32(spec.actor_id)
@@ -257,11 +300,12 @@ class RemoteActorLoop:
             while (spec.max_rollouts is None
                    or self.stats["rollouts"] < spec.max_rollouts):
                 try:
-                    if (self.stats["rollouts"] > 0
+                    if (self._policy is None
+                            and self.stats["rollouts"] > 0
                             and self.stats["rollouts"]
                             % self._sync_period == 0):
                         self._pull_params(self._conn)
-                    sl, block, _metrics = self._act(self._params, sl, sid)
+                    sl, block, _metrics = self._rollout(sl, sid)
                     payload = wire.encode_block_iov(
                         block, quantize_obs=spec.quantize_obs)
                     if spec.target_blocks_per_s:
@@ -303,6 +347,8 @@ class RemoteActorLoop:
         except (_Stop, EOFError, transport_lib.TransportClosed):
             pass
         finally:
+            if self._policy is not None:
+                self._policy.close()
             if self._conn is not None:
                 try:
                     self._conn.send(wire.BYE, wire.encode_json(

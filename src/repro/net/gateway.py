@@ -49,6 +49,18 @@ path it is on, it just calls ``conn.recv()``/``conn.send()``.
   should be attached at a time (a second one would consume from the same
   logical replay — replay replication, not an error, but not a fan-out).
 
+* **Policy plane (``--serve-policy``).** A gateway built with
+  ``inference=`` (an ``InferenceServer``) and ``act_example=`` (a local
+  ``ActorSlice`` fixing the wire geometry) serves ``ACT_REQUEST`` frames:
+  each is one rollout request admitted into the shared slot-scheduled
+  engine alongside the in-process actors, answered with ``ACT_RESULT``
+  (advanced slice + ``TransitionBlock`` + metrics) or ``STOP`` when the
+  runtime is shutting down. Concurrency across connections is what fills
+  the engine's slots — each handler thread blocks in ``engine.act`` while
+  the engine batches every blocked handler into one compiled dispatch. A
+  policy-only gateway passes ``fabric=None``; fabric-plane frames on such
+  a gateway are a protocol error.
+
 ``stop()`` sends ``STOP`` to every live client (best effort), closes the
 listener, and joins the handlers; a handler that dies on malformed traffic
 records the error and drops that one connection, never the gateway.
@@ -102,6 +114,8 @@ class GatewayStats:
                                 # clients — the serving runtime's end-of-run
                                 # signal when severed transports swallowed
                                 # some in-flight priority frames
+    act_requests: int = 0       # policy-plane rollouts served (ACT_RESULT
+                                # replies; a STOP answer is not counted)
 
 
 class ReplayGateway:
@@ -113,9 +127,18 @@ class ReplayGateway:
                  poll_s: float = 0.2, drain_grace_s: float = 1.0,
                  backlog: int = 64, accept_shm: bool = True,
                  ring_bytes: int = transport_lib.DEFAULT_RING_BYTES,
+                 inference: Any = None, act_example: Any = None,
                  telemetry: Telemetry | None = None):
+        if fabric is None and inference is None:
+            raise ValueError("gateway needs a fabric, an inference engine, "
+                             "or both — got neither")
+        if inference is not None and act_example is None:
+            raise ValueError("policy serving needs act_example (a local "
+                             "ActorSlice fixing the wire geometry)")
         self._fabric = fabric
         self._store = store
+        self._inference = inference
+        self._act_example = act_example
         self._tel = telemetry if telemetry is not None else Telemetry.local()
         # decode + fabric-route latency per ADD_BLOCK; the retries counter
         # mirrors GatewayStats.add_retries into the obs registry so the
@@ -123,6 +146,8 @@ class ReplayGateway:
         self._h_route = self._tel.histogram("gateway/route_us")
         self._c_retries = self._tel.counter("gateway/add_retries")
         self._c_blocks = self._tel.counter("gateway/blocks_in")
+        # policy plane: decode + engine dispatch + encode per ACT_REQUEST
+        self._h_act = self._tel.histogram("gateway/act_us")
         self._add_timeout_s = add_timeout_s
         self._sample_timeout_s = sample_timeout_s
         # fabric.get_batch is single-consumer (parked sub-batches); serialize
@@ -282,7 +307,15 @@ class ReplayGateway:
                     apply_priorities()  # no request on its heels: apply now
                     continue
                 msg_type, payload = got
-                if msg_type == wire.ADD_BLOCK:
+                if self._fabric is None and msg_type in (
+                        wire.ADD_BLOCK, wire.SAMPLE_REQUEST,
+                        wire.PRIORITY_UPDATE):
+                    raise wire.WireError(
+                        f"fabric-plane message {msg_type} on a policy-only "
+                        "gateway")
+                if msg_type == wire.ACT_REQUEST:
+                    self._serve_act(conn, payload)
+                elif msg_type == wire.ADD_BLOCK:
                     if self._route_block(cid, payload, conn.last_trace_id):
                         conn.send(wire.ADD_ACK)
                     # else: dropped during shutdown — no ACK; the client is
@@ -374,6 +407,28 @@ class ReplayGateway:
             self.stats.transitions_in += n
             self._conn_blocks[cid] += 1
         return True
+
+    def _serve_act(self, conn: transport_lib.Transport,
+                   payload: memoryview) -> None:
+        """One policy-plane rollout: decode the client's slice, block in the
+        shared engine (the batching — every concurrently-blocked handler
+        lands in the same compiled dispatch), reply with the advanced slice.
+        ``STOP`` answers a request the engine refused because the runtime is
+        shutting down; the client treats it like the fabric-plane STOP."""
+        if self._inference is None:
+            raise wire.WireError("ACT_REQUEST on a gateway without an "
+                                 "inference engine (--serve-policy not set)")
+        t0 = time.perf_counter()
+        aslice, sid = wire.decode_act_request(payload, self._act_example)
+        res = self._inference.act(aslice, sid)
+        if res is None:
+            conn.send(wire.STOP)
+            return
+        out_slice, block, metrics = res
+        conn.send(wire.ACT_RESULT,
+                  wire.encode_act_result(out_slice, block, metrics))
+        self._h_act.record(1e6 * (time.perf_counter() - t0))
+        self._bump(act_requests=1)
 
     def _serve_sample(self, conn: transport_lib.Transport,
                       staged: list | None = None) -> list | None:

@@ -351,18 +351,21 @@ class RemoteFabricSource(SampleSource):
 
 
 def parse_hostport(spec: str, default_host: str = "127.0.0.1",
-                   ) -> tuple[str, int]:
+                   allow_ephemeral: bool = False) -> tuple[str, int]:
     """``"host:port"`` (or bare ``"port"``) → ``(host, port)``, with an
     actionable error for anything else — including out-of-range ports,
     which would otherwise surface as an OverflowError (or a futile retry
-    loop, for port 0) deep inside the connect path."""
+    loop, for port 0) deep inside the connect path. ``allow_ephemeral``
+    admits port 0 — meaningful for a *bind* address (the OS picks), never
+    for a connect target."""
     host, _, port = spec.rpartition(":")
     try:
         port_num = int(port)
     except ValueError:
         raise ValueError(
             f"expected HOST:PORT (or just PORT), got {spec!r}") from None
-    if not 1 <= port_num <= 65535:
-        raise ValueError(f"port must be in [1, 65535], got {port_num} "
+    low = 0 if allow_ephemeral else 1
+    if not low <= port_num <= 65535:
+        raise ValueError(f"port must be in [{low}, 65535], got {port_num} "
                          f"(from {spec!r})")
     return (host or default_host, port_num)

@@ -1,0 +1,92 @@
+"""Policy-plane client: remote rollouts against a ``--serve-policy`` gateway.
+
+Gorila's one-policy-many-clients surface (Nair et al., 2015) over this
+repo's transport plane: a client holds its own ``ActorSlice`` (env state,
+rng, return accumulator — the *state* stays client-side) and ships it to
+the policy gateway per rollout; the server admits the slice into the shared
+slot-scheduled ``InferenceServer`` alongside the in-process actors and
+replies with the advanced slice plus the ``TransitionBlock`` it produced.
+The client never holds parameters — param freshness, hot-swap, and
+batching economics all live server-side, which is the point: hundreds of
+CPU-only clients share one device-resident policy.
+
+One request is in flight per client connection (the reply *is* the next
+request's input), so concurrency — and therefore server-side batch
+occupancy — comes from the number of connected clients, exactly like the
+paper's actor fleet.
+
+Wire: ``ACT_REQUEST`` (slice + shard id) / ``ACT_RESULT`` (slice + block +
+metrics), fp32/int32 leaves and PRNG key data round-tripping bit-exactly,
+so a remote rollout equals the in-process rollout bit for bit. A ``STOP``
+reply means the runtime is shutting down: ``act`` returns ``None`` and the
+caller drains out, mirroring ``InferenceServer.act``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.net import transport as transport_lib
+from repro.net import wire
+
+
+class PolicyClient:
+    """Blocking one-request-at-a-time client for the policy plane."""
+
+    def __init__(self, host: str, port: int, *, example: Any,
+                 transport: str = "auto", connect_timeout_s: float = 10.0,
+                 act_timeout_s: float = 120.0,
+                 ring_bytes: int = transport_lib.DEFAULT_RING_BYTES):
+        # ``example`` fixes the wire geometry: the reply slice is unflattened
+        # against a locally built ActorSlice (both sides derive the same
+        # structure from (cfg, env)), so no treedef travels on the wire.
+        self._example = example
+        self._act_timeout_s = act_timeout_s
+        self._conn = transport_lib.connect(
+            host, port, transport, timeout=connect_timeout_s,
+            ring_bytes=ring_bytes)
+        self._conn.send(wire.HELLO, wire.encode_json(
+            {"protocol": wire.PROTOCOL_VERSION, "policy": True}))
+        self.stats = {"acts": 0, "stopped": 0}
+
+    @property
+    def transport_kind(self) -> str:
+        return self._conn.kind
+
+    def act(self, aslice: Any, shard_id: int,
+            ) -> tuple[Any, Any, dict] | None:
+        """One remote rollout: returns (advanced slice, TransitionBlock,
+        metrics), or None when the server answered STOP (runtime shutting
+        down)."""
+        self._conn.send(wire.ACT_REQUEST,
+                        wire.encode_act_request(aslice, shard_id))
+        deadline = time.monotonic() + self._act_timeout_s
+        while True:
+            got = self._conn.recv(timeout=0.05)
+            if got is None:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        "policy gateway never answered ACT_REQUEST "
+                        f"(waited {self._act_timeout_s}s)")
+                continue
+            msg_type, payload = got
+            if msg_type == wire.ACT_RESULT:
+                self.stats["acts"] += 1
+                return wire.decode_act_result(payload, self._example)
+            if msg_type == wire.STOP:
+                self.stats["stopped"] += 1
+                return None
+            raise wire.WireError(
+                f"unexpected message {msg_type} on the policy plane")
+
+    def close(self) -> None:
+        try:
+            self._conn.send(wire.BYE, wire.encode_json(
+                {"rollouts": self.stats["acts"]}))
+        except (OSError, wire.WireError):
+            pass
+        try:
+            self._conn.close()
+        except OSError:
+            pass

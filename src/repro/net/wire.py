@@ -58,6 +58,13 @@ Message inventory (direction, payload):
 ``SHM_ATTACHED``   client → gw     empty (client mapped the arena; the
                                    gateway unlinks the file and switches)
 ``SHM_NACK``       gw → client     JSON ``{reason}`` — stay on TCP
+``ACT_REQUEST``    client → gw     array-tree: one ``ActorSlice`` (leaves in
+                                   tree-flatten order; typed PRNG keys as raw
+                                   uint32 key data) plus the shard id — "run
+                                   one rollout for me on the policy server"
+``ACT_RESULT``     gw → client     array-tree: the advanced slice, the
+                                   rollout's ``TransitionBlock``, and the
+                                   act-phase metrics
 =================  ==============  ==========================================
 
 ``SAMPLE_REQUEST`` .. ``PARAM_PUSH`` are the *sample plane* (remote
@@ -79,6 +86,15 @@ and gateway. ``trace_id = 0`` means untraced — the common case — so the
 cost on every frame is 8 header bytes, nothing else. The id is header
 metadata, not payload: codecs are unchanged and fp32 leaves still travel
 bit-identically.
+
+The ``ACT_*`` frames are the *policy plane* (``--serve-policy``): a thin
+remote client ships its ``ActorSlice`` to a gateway fronting the shared
+:class:`repro.runtime.inference.InferenceServer` and receives the advanced
+slice + transition block back — Gorila's one-policy-many-clients surface.
+They are new message types on the same v3 framing (no version bump: an old
+peer that receives one rejects the *message*, not the stream version).
+fp32/int32 leaves and PRNG key data round-trip bit-identically, so a remote
+rollout equals the in-process rollout bit for bit.
 """
 
 from __future__ import annotations
@@ -120,6 +136,8 @@ SHM_SETUP = 14
 SHM_ATTACHED = 15
 SHM_NACK = 16
 SHM_DOORBELL = 17   # header-only: "a frame was committed to the ring"
+ACT_REQUEST = 18    # policy plane: ActorSlice + shard id -> run one rollout
+ACT_RESULT = 19     # policy plane: advanced slice + TransitionBlock + metrics
 
 # Array-tree leaf header: key_len, dtype_len, ndim  (then key, dtype.str,
 # shape as u32s, nbytes as u64, raw bytes).
@@ -487,6 +505,98 @@ def decode_params(payload: bytes | memoryview) -> tuple[int, dict]:
     except Exception as e:
         raise WireError(f"malformed PARAM payload: {e!r}") from e
     return int(version), dequantize_tree(decode_tree(mv[_U64.size:]))
+
+
+# ---------------------------------------------------------------------------
+# Policy-plane payloads (ACT_REQUEST / ACT_RESULT)
+# ---------------------------------------------------------------------------
+# An ActorSlice is a nested NamedTuple pytree (env state, obs, rng, ...),
+# not a dict — it travels as its tree-flatten leaf list under zero-padded
+# index keys, and the receiver unflattens against a locally derived example
+# slice (both sides rebuild the identical structure from (cfg, env, seed,
+# actor_id), so shipping the treedef would be redundant). Typed PRNG keys
+# cannot be viewed as numpy arrays; they travel as their raw uint32 key
+# data, which round-trips exactly — required for remote rollouts to be
+# bit-identical to in-process ones.
+
+def _is_prng_key(leaf: Any) -> bool:
+    import jax
+    dt = getattr(leaf, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
+
+
+def _slice_tree(aslice: Any) -> dict:
+    import jax
+    leaves = jax.tree_util.tree_leaves(aslice)
+    return {f"{i:04d}": np.asarray(jax.random.key_data(leaf)
+                                   if _is_prng_key(leaf) else leaf)
+            for i, leaf in enumerate(leaves)}
+
+
+def _unflatten_slice(tree: dict, example: Any) -> Any:
+    import jax
+    ex_leaves, treedef = jax.tree_util.tree_flatten(example)
+    if len(tree) != len(ex_leaves):
+        raise WireError(f"slice payload carries {len(tree)} leaves, the "
+                        f"local example slice has {len(ex_leaves)} — "
+                        "mismatched (cfg, env) geometry between peers")
+    leaves = []
+    for i, ex in enumerate(ex_leaves):
+        arr = tree[f"{i:04d}"]
+        if _is_prng_key(ex):
+            leaves.append(jax.random.wrap_key_data(
+                arr, impl=jax.random.key_impl(ex)))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def encode_act_request(aslice: Any, shard_id: int) -> bytes:
+    """``ACT_REQUEST`` payload: one actor's slice + its ladder shard id."""
+    return encode_tree({"sid": np.asarray(int(shard_id), np.int32),
+                        "slice": _slice_tree(aslice)})
+
+
+def decode_act_request(payload: bytes | memoryview,
+                       example: Any) -> tuple[Any, int]:
+    """Inverse of :func:`encode_act_request`; ``example`` is a locally
+    built ActorSlice providing the tree structure and key impls."""
+    tree = decode_tree(payload)
+    try:
+        return (_unflatten_slice(tree["slice"], example),
+                int(np.asarray(tree["sid"]).reshape(())))
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireError(f"malformed ACT_REQUEST payload: {e!r}") from e
+
+
+def encode_act_result(aslice: Any, block: TransitionBlock,
+                      metrics: dict) -> bytes:
+    """``ACT_RESULT`` payload: the advanced slice, the rollout's transition
+    block, and the act-phase metrics (scalar leaves)."""
+    return encode_tree({
+        "slice": _slice_tree(aslice),
+        "block": {"items": jax_to_np(block.items),
+                  "priorities": np.asarray(block.priorities)},
+        "metrics": {str(k): np.asarray(v) for k, v in metrics.items()},
+    })
+
+
+def decode_act_result(payload: bytes | memoryview, example: Any,
+                      ) -> tuple[Any, TransitionBlock, dict]:
+    """Inverse of :func:`encode_act_result` (numpy block leaves, exactly
+    like :func:`decode_block`)."""
+    tree = decode_tree(payload)
+    try:
+        aslice = _unflatten_slice(tree["slice"], example)
+        block = TransitionBlock(items=tree["block"]["items"],
+                                priorities=tree["block"]["priorities"])
+        return aslice, block, dict(tree.get("metrics", {}))
+    except WireError:
+        raise
+    except Exception as e:
+        raise WireError(f"malformed ACT_RESULT payload: {e!r}") from e
 
 
 # ---------------------------------------------------------------------------

@@ -133,10 +133,24 @@ def load_report(directory: str) -> dict:
         if any(tok in name for tok in _RECOVERY_TOKENS):
             recovery[name] = val
 
+    # --- inference plane -------------------------------------------------
+    # The wave scheduler's padding tax, made honest: lifetime fraction of
+    # dispatched lanes that were replicated padding (recomputed duplicate
+    # rollouts, dropped on return). A slot-scheduled run pads nothing.
+    inference = {}
+    lanes = counters.get("inference/wave_lanes", 0)
+    if lanes:
+        inference["wave_lanes"] = lanes
+        inference["padded_lanes"] = counters.get("inference/padded_lanes", 0)
+        inference["pad_fraction"] = inference["padded_lanes"] / lanes
+        if "inference/slot_occupancy" in gauges:
+            inference["slot_occupancy"] = gauges["inference/slot_occupancy"]
+
     return {"directory": directory, "window_s": window_s,
             "num_spans": len(spans), "num_snapshots": len(metrics),
             "stages": stages, "gaps": gaps, "gauges": gauges,
             "counters": counters, "stalls": stalls, "recovery": recovery,
+            "inference": inference,
             "histograms": dict(last.get("histograms", {}))}
 
 
@@ -191,6 +205,18 @@ def render(report: dict) -> str:
         lines.append("starvation / backpressure counters")
         for name in sorted(report["stalls"]):
             lines.append(f"  {name} = {report['stalls'][name]}")
+
+    if report.get("inference"):
+        inf = report["inference"]
+        lines.append("")
+        lines.append("inference plane (shared batched engine)")
+        lines.append(f"  dispatched lanes = {inf['wave_lanes']:g}")
+        lines.append(f"  padded lanes     = {inf['padded_lanes']:g}  "
+                     f"(pad fraction {inf['pad_fraction']:.3f} — wasted "
+                     "duplicate rollouts under wave coalescing)")
+        if "slot_occupancy" in inf:
+            lines.append(f"  slot occupancy   = {inf['slot_occupancy']:.3f}"
+                         "  (last dispatch, live/max slots)")
 
     if report.get("recovery"):
         lines.append("")

@@ -82,6 +82,21 @@ class AsyncConfig:
                                      # fabric through a ReplayGateway socket
     replay_shards: int = 1           # ReplayShard owner threads in the fabric
     inference_batching: bool = False # one vmapped act dispatch for all actors
+    inference_mode: str = "wave"     # scheduling inside the shared engine:
+                                     # "wave" coalesces up to coalesce_s and
+                                     # pads short waves; "slots" admits
+                                     # pending requests into free slots the
+                                     # moment the previous dispatch returns
+                                     # (continuous batching — no window tax,
+                                     # params hot-swap at dispatch bounds)
+    serve_policy: str | None = None  # "host:port": ALSO serve the shared
+                                     # engine over the transport plane (a
+                                     # second, policy-only gateway speaking
+                                     # ACT_REQUEST/ACT_RESULT); actor procs
+                                     # then run as thin clients that ship
+                                     # their slice per rollout instead of
+                                     # pulling params (requires
+                                     # inference_batching)
     learn_batches_per_step: int = 1  # prefetched batches consumed per jitted
                                      # learner call (lax.scan — amortizes
                                      # dispatch for small batches; the run
@@ -194,6 +209,8 @@ class RuntimeResult:
     last_actor_metrics: dict | None  # last act_phase metrics (any actor)
     inference_stats: InferenceStats | None = None  # when inference_batching
     gateway_stats: Any = None        # net.GatewayStats when a gateway ran
+    policy_stats: Any = None         # net.GatewayStats of the policy-plane
+                                     # gateway (serve_policy)
     source_stats: SourceStats | None = None  # learner-plane SampleSource
                                      # counters (None in serve mode)
 
@@ -302,8 +319,18 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             ">= 1: the runtime relies on bounded queues for actor "
             "backpressure and learner double buffering (got "
             f"add={acfg.add_queue_depth}, sample={acfg.sample_queue_depth})")
-    if acfg.inference_batching and acfg.actor_threads < 1:
-        raise ValueError("inference_batching needs in-process actor threads")
+    if acfg.inference_mode not in ("wave", "slots"):
+        raise ValueError("AsyncConfig.inference_mode must be 'wave' or "
+                         f"'slots', got {acfg.inference_mode!r}")
+    if acfg.serve_policy is not None and not acfg.inference_batching:
+        raise ValueError(
+            "AsyncConfig.serve_policy serves the shared inference engine "
+            "over the transport plane — it requires inference_batching")
+    if (acfg.inference_batching and acfg.actor_threads < 1
+            and acfg.serve_policy is None):
+        raise ValueError("inference_batching needs in-process actor threads "
+                         "(or serve_policy, which feeds the engine from "
+                         "remote clients)")
     if not 0.0 <= acfg.trace_sample_rate <= 1.0:
         raise ValueError(
             "AsyncConfig.trace_sample_rate is a sampling fraction in "
@@ -380,10 +407,31 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
             obslog.emit("resume", path=restored["path"], step=resume_steps,
                         params_v=store_version)
     store = ParamStore(params, version=store_version)
+    # With a policy plane, remote actor procs land in the same engine as
+    # the in-process threads, so the slot count covers both populations.
+    infer_batch = acfg.actor_threads + (
+        acfg.actor_procs if acfg.serve_policy is not None else 0)
     server = (InferenceServer(cfg, env, agent, store,
-                              max_batch=acfg.actor_threads,
-                              coalesce_s=acfg.coalesce_s, telemetry=tel)
+                              max_batch=max(infer_batch, 1),
+                              coalesce_s=acfg.coalesce_s,
+                              mode=acfg.inference_mode, telemetry=tel)
               if acfg.inference_batching else None)
+    policy_gateway = None
+    if acfg.serve_policy is not None:
+        from repro.net import ReplayGateway
+        from repro.net import transport as transport_lib
+        from repro.net.learner_client import parse_hostport
+        policy_host, policy_port = parse_hostport(acfg.serve_policy,
+                                                  allow_ephemeral=True)
+        # A second, policy-only gateway (fabric=None): ACT_REQUEST frames
+        # from thin clients block in the shared engine and batch with the
+        # in-process actors' requests.
+        policy_gateway = ReplayGateway(
+            None, store, host=policy_host, port=policy_port,
+            accept_shm=acfg.transport != "tcp",
+            ring_bytes=(acfg.transport_ring_bytes
+                        or transport_lib.DEFAULT_RING_BYTES),
+            inference=server, act_example=slices[0], telemetry=tel)
     gateway = None
     if acfg.actor_procs > 0 or serving:
         # Deferred import: repro.net sits on top of this module's siblings.
@@ -714,6 +762,10 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         fabric.start()
     if server is not None:
         server.start()
+    if policy_gateway is not None:
+        policy_gateway.start()
+        obslog.emit("serve-policy", listening=True,
+                    host=policy_gateway.host, port=policy_gateway.port)
     if gateway is not None:
         from repro.net import RemoteActorSpec
         from repro.net.actor_client import run_remote_actor
@@ -728,10 +780,15 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         # loopback rather than the unroutable 0.0.0.0.
         dial_host = ("127.0.0.1" if gateway.host in ("0.0.0.0", "::")
                      else gateway.host)
+        policy_dial = None
+        if policy_gateway is not None:
+            ph = ("127.0.0.1" if policy_gateway.host in ("0.0.0.0", "::")
+                  else policy_gateway.host)
+            policy_dial = f"{ph}:{policy_gateway.port}"
         for j in range(acfg.actor_procs):
             proc_specs.append(RemoteActorSpec(
                 cfg=cfg, env=env, agent=agent,
-                host=dial_host, port=gateway.port,
+                host=dial_host, port=gateway.port, policy=policy_dial,
                 actor_id=acfg.actor_threads + j, seed=acfg.seed,
                 max_inflight=acfg.ingest_max_inflight,
                 quantize_obs=acfg.wire_quantize_obs,
@@ -791,6 +848,15 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
     if progress is not None:
         progress.join()
     dt = time.perf_counter() - t0
+    pg_snap = None
+    if policy_gateway is not None:
+        # Before the ingest gateway joins the actor processes: a thin
+        # client parked in an ACT round trip must see its STOP (the engine
+        # is already stopping, so pending requests answer STOP immediately).
+        policy_gateway.stop()
+        if policy_gateway.error is not None:
+            thread_errors.append(policy_gateway.error)
+        pg_snap = policy_gateway.snapshot()
     if server is not None:
         server.stop()
         if server.error is not None:
@@ -891,6 +957,9 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         stats["gateway_transitions"] = float(gw_snap.transitions_in)
         stats["gateway_param_sends"] = float(gw_snap.param_sends)
         stats["gateway_bytes_in"] = float(gw_snap.bytes_in)
+    if pg_snap is not None:
+        stats["policy_acts"] = float(pg_snap.act_requests)
+        stats["policy_bytes_out"] = float(pg_snap.bytes_out)
     stats["generate_consume_ratio"] = (
         stats["actor_tps"] / stats["learner_tps"]
         if stats["learner_tps"] > 0 else float("inf"))
@@ -901,5 +970,5 @@ def run_async(cfg, acfg: AsyncConfig, env, agent, optimizer,
         last_actor_metrics=(
             {k: float(v) for k, v in m.items()} if m is not None else None),
         inference_stats=server.snapshot() if server is not None else None,
-        gateway_stats=gw_snap,
+        gateway_stats=gw_snap, policy_stats=pg_snap,
         source_stats=source.stats if source is not None else None)

@@ -1,0 +1,22 @@
+"""Suite-wide fixtures.
+
+The full suite JIT-compiles several hundred distinct XLA programs in one
+process. On some jaxlib builds the accumulated live executables eventually
+segfault LLVM's code emission partway through the run (observed: a plain
+`lax.scan` compile crashing in `backend_compile` only when every earlier
+module had run first — each half of the suite passes in isolation).
+Dropping compiled-program caches between modules keeps the live-executable
+population bounded; modules recompile what they actually use.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()
+    gc.collect()

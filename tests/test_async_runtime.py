@@ -25,6 +25,10 @@ INGEST_STAGING = bool(os.environ.get("REPRO_TEST_INGEST_STAGING"))
 # with the telemetry plane enabled (JSONL sink + full-rate tracing), and
 # CI uploads the resulting metrics/spans JSONL as a workflow artifact.
 METRICS_DIR = os.environ.get("REPRO_TEST_METRICS_DIR") or None
+# CI matrix leg: REPRO_TEST_INFERENCE_MODE=slots re-runs the end-to-end
+# test with the shared inference engine in slot-scheduled continuous-
+# batching mode (wave also accepted; empty = per-thread dispatch).
+INFERENCE_MODE = os.environ.get("REPRO_TEST_INFERENCE_MODE") or None
 
 
 # --- shared phases ----------------------------------------------------------
@@ -270,6 +274,8 @@ def test_run_async_end_to_end():
     acfg = AsyncConfig(actor_threads=2, total_learner_steps=8,
                        max_seconds=60.0, seed=3,
                        ingest_staging=INGEST_STAGING,
+                       inference_batching=bool(INFERENCE_MODE),
+                       inference_mode=INFERENCE_MODE or "wave",
                        metrics_dir=METRICS_DIR,
                        trace_sample_rate=1.0 if METRICS_DIR else 0.0)
     res = run_async(preset.apex, acfg, preset.env, preset.agent,

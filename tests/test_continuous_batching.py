@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.serve import ContinuousBatcher
+from repro.launch.serve import ContinuousBatcher, WaveBatcher
 from repro.models import registry, transformer
+from repro.runtime import ParamStore
 
 ARCHS = ["llama3.2-1b", "deepseek-v2-236b", "h2o-danube-1.8b", "stablelm-1.6b"]
 
@@ -59,6 +60,88 @@ def test_continuous_batcher_serves_ragged_requests():
     for i, out in results.items():
         assert 1 <= len(out) <= 5
         assert all(0 <= t < cfg.vocab_size for t in out)
+
+
+def _ragged_prompts(cfg, n, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, size=rng.randint(3, 11))
+            for _ in range(n)]
+
+
+def test_wave_and_continuous_emit_identical_tokens():
+    """Scheduling must not change tokens: the wave-coalescing baseline and
+    the continuous scheduler run the same compiled step/prefill, so every
+    request's greedy output is identical — only the step count (the barrier
+    tax) differs."""
+    cfg = registry.get_config("llama3.2-1b").reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    prompts = _ragged_prompts(cfg, 7)
+    budgets = [1 + (i * 3) % 6 for i in range(7)]  # ragged new-token budgets
+    cont = ContinuousBatcher(cfg, params, slots=3, max_len=32,
+                             max_new_tokens=6)
+    wave = WaveBatcher(cfg, params, slots=3, max_len=32, max_new_tokens=6)
+    out_c = cont.run(prompts, new_tokens=budgets)
+    out_w = wave.run(prompts, new_tokens=budgets)
+    assert out_c == out_w
+    assert all(len(out_c[i]) == budgets[i] for i in range(7))
+    # the barrier really was a barrier: wave pays at least as many steps
+    assert wave.steps >= cont.steps
+
+
+def test_chunked_prefill_is_a_pure_optimization():
+    """prefill_chunk on vs off must emit identical tokens (the chunk path
+    only changes how prompts enter the cache, never what comes out)."""
+    cfg = registry.get_config("llama3.2-1b").reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    prompts = _ragged_prompts(cfg, 5, seed=11)
+    chunked = ContinuousBatcher(cfg, params, slots=2, max_len=32,
+                                max_new_tokens=4, prefill_chunk=4)
+    stepwise = ContinuousBatcher(cfg, params, slots=2, max_len=32,
+                                 max_new_tokens=4, prefill_chunk=0)
+    assert chunked._chunk == 4 and stepwise._chunk == 0
+    out_a, out_b = chunked.run(prompts), stepwise.run(prompts)
+    assert out_a == out_b
+    # the chunk path genuinely replaced prompt decode steps
+    assert chunked.steps < stepwise.steps
+
+
+def test_hot_swap_drains_in_flight_requests_under_churn():
+    """Version churn mid-run: the batcher must finish every admitted request
+    on its admission-time params (admission == completion version), take the
+    swap only when slots drain, and drop nothing."""
+    cfg = registry.get_config("llama3.2-1b").reduced()
+    params = transformer.init(cfg, jax.random.key(0))
+    store = ParamStore(params)
+    prompts = _ragged_prompts(cfg, 8, seed=5)
+
+    published = []
+
+    def churn(step):
+        # publish twice at deterministic schedule points; identical params
+        # (fresh version) keep outputs comparable to the no-churn run
+        if step in (3, 9):
+            published.append(store.publish(params))
+
+    batcher = ContinuousBatcher(cfg, params, slots=3, max_len=32,
+                                max_new_tokens=4, param_store=store,
+                                on_step=churn)
+    out = batcher.run(prompts)
+    assert len(out) == len(prompts)            # zero drops
+    assert len(published) == 2
+    assert batcher.swaps >= 1                  # churn was observed and taken
+    for rid in range(len(prompts)):
+        assert rid in batcher.admission_version
+        # the hot-swap contract: a request completes on the params it was
+        # admitted under — the swap waited for it
+        assert (batcher.admission_version[rid]
+                == batcher.completion_version[rid])
+    # final version converged onto the last publication
+    assert batcher._version == store.version
+    # and because the published trees were identical, the served tokens
+    # match a churn-free run exactly
+    baseline = ContinuousBatcher(cfg, params, slots=3, max_len=32,
+                                 max_new_tokens=4)
+    assert out == baseline.run(prompts)
 
 
 def test_continuous_batcher_ssm_state_isolation():

@@ -39,6 +39,42 @@ def test_decode_matches_full_forward(arch):
                                    rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("arch", DECODERS)
+def test_chunked_prefill_matches_full_prefill(arch):
+    """prefill_chunk consuming the prompt C tokens at a time (+ decode tail)
+    must land the cache exactly where one full prefill would — the invariant
+    the ContinuousBatcher's admission path rests on."""
+    cfg = registry.get_config(arch).reduced()
+    if getattr(cfg, "swa_ring_cache", False):
+        pytest.skip("ring cache layout takes the unchunked path")
+    params = transformer.init(cfg, jax.random.key(0))
+    B, S, prompt, C = 2, 16, 11, 4
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    full = transformer.apply(params, toks, cfg=cfg)
+
+    # chunked: (prompt-1)//C full chunks, remainder + last token via decode
+    cache = transformer.init_cache(cfg, B, S)
+    nfull = (prompt - 1) // C
+    for k in range(nfull):
+        _, cache = transformer.prefill_chunk(
+            params, toks[:, k * C:(k + 1) * C], jnp.asarray(k * C),
+            cfg=cfg, cache=cache)
+    logits = None
+    for t in range(nfull * C, prompt):
+        logits, cache = transformer.decode_step(
+            params, toks[:, t:t + 1], jnp.asarray(t), cfg=cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, prompt - 1]),
+                               rtol=2e-3, atol=2e-3)
+    # and continued decode stays on the full-forward trajectory
+    for t in range(prompt, S):
+        logits, cache = transformer.decode_step(
+            params, toks[:, t:t + 1], jnp.asarray(t), cfg=cfg, cache=cache)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
 @pytest.mark.parametrize("arch", ["h2o-danube-1.8b"])
 def test_sliding_window_decode(arch):
     """SWA decode with positions beyond the window stays consistent."""

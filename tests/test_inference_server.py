@@ -7,13 +7,14 @@ import threading
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from _apex_helpers import init_actor, tiny_preset
 
 from repro.runtime import InferenceServer, ParamStore, phases
 
 
-def _setup(num_actors: int, coalesce_s: float = 0.002):
+def _setup(num_actors: int, coalesce_s: float = 0.002, mode: str = "wave"):
     preset = tiny_preset()
     cfg = dataclasses.replace(preset.apex, num_shards=num_actors)
     env, agent = preset.env, preset.agent
@@ -22,8 +23,39 @@ def _setup(num_actors: int, coalesce_s: float = 0.002):
     params = agent.init(jax.random.key(7), slices[0].obs[:1])
     store = ParamStore(params)
     server = InferenceServer(cfg, env, agent, store, max_batch=num_actors,
-                             coalesce_s=coalesce_s)
+                             coalesce_s=coalesce_s, mode=mode)
     return cfg, env, agent, slices, params, store, server
+
+
+def _raw(leaf):
+    """Bitwise-comparable view of a leaf (typed PRNG keys included)."""
+    if jnp.issubdtype(getattr(leaf, "dtype", None), jax.dtypes.prng_key):
+        leaf = jax.random.key_data(leaf)
+    return np.asarray(leaf)
+
+
+def _collect_full_wave(server, slices, num):
+    """Submit ``num`` requests from threads and return their results in
+    actor order, starting the server only once every request is parked —
+    both modes then admit the identical stacked wave."""
+    results = {}
+    threads = [threading.Thread(target=lambda t=t: results.__setitem__(
+        t, server.act(slices[t], t)), daemon=True) for t in range(num)]
+    for th in threads:
+        th.start()
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline:
+        with server._cond:
+            if len(server._pending) == num:
+                break
+        time.sleep(0.005)
+    with server._cond:
+        assert len(server._pending) == num
+    server.start()
+    for th in threads:
+        th.join(timeout=120.0)
+        assert not th.is_alive()
+    return results
 
 
 def test_wave_coalescing_under_concurrent_resubmits():
@@ -107,6 +139,152 @@ def test_short_wave_padding_matches_direct_act():
     finally:
         server.stop()
     assert server.error is None
+
+
+def test_slots_mode_matches_direct_act():
+    """Slot scheduling admits without a coalesce window; per-actor numerics
+    must still equal the actor's own direct act_phase rollout chain."""
+    K, R = 3, 6
+    cfg, env, agent, slices, params, store, server = _setup(K, mode="slots")
+    server.warm(slices[0])
+    server.start()
+    results = [[] for _ in range(K)]
+    try:
+        def worker(t):
+            sl = slices[t]
+            for _ in range(R):
+                out = server.act(sl, t)
+                assert out is not None
+                sl, block, _ = out
+                results[t].append(block)
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in range(K)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120.0)
+            assert not th.is_alive()
+    finally:
+        server.stop()
+    assert server.error is None
+    stats = server.snapshot()
+    assert stats.requests == K * R
+    for t in range(K):
+        sl = slices[t]
+        for r in range(R):
+            sl, ref_block, _ = phases.act_phase(cfg, env, agent, params, sl, t)
+            np.testing.assert_allclose(
+                np.asarray(results[t][r].priorities),
+                np.asarray(ref_block.priorities), rtol=1e-5, atol=1e-6)
+
+
+def test_wave_and_slots_bit_identical_on_full_wave():
+    """A full wave carries the exact same stacked content through the same
+    compiled function in either mode — per-actor results are bit-identical,
+    not merely close (the acceptance property for switching the runner's
+    default scheduler)."""
+    K = 3
+    _, _, _, slices_w, _, _, wave_srv = _setup(K, coalesce_s=30.0)
+    _, _, _, slices_s, _, _, slot_srv = _setup(K, mode="slots")
+    try:
+        wave_out = _collect_full_wave(wave_srv, slices_w, K)
+        slot_out = _collect_full_wave(slot_srv, slices_s, K)
+    finally:
+        wave_srv.stop()
+        slot_srv.stop()
+    assert wave_srv.error is None and slot_srv.error is None
+    assert wave_srv.snapshot().full_waves == 1
+    for t in range(K):
+        assert wave_out[t] is not None and slot_out[t] is not None
+        w_slice, w_block, _ = wave_out[t]
+        s_slice, s_block, _ = slot_out[t]
+        for wl, sl in zip(jax.tree.leaves(w_slice), jax.tree.leaves(s_slice)):
+            np.testing.assert_array_equal(_raw(wl), _raw(sl))
+        np.testing.assert_array_equal(np.asarray(w_block.priorities),
+                                      np.asarray(s_block.priorities))
+        for wl, sl in zip(jax.tree.leaves(w_block.items),
+                          jax.tree.leaves(s_block.items)):
+            np.testing.assert_array_equal(_raw(wl), _raw(sl))
+
+
+def test_hot_swap_under_version_churn_zero_drops():
+    """Slot mode under param churn: every request completes (none dropped,
+    none None), swaps land only at dispatch boundaries, and the engine ends
+    on the latest published version."""
+    K, R = 2, 10
+    cfg, env, agent, slices, params, store, server = _setup(K, mode="slots")
+    server.warm(slices[0])
+    server.start()
+    served = [0] * K
+    stop_churn = threading.Event()
+
+    def churner():
+        rng = jax.random.key(99)
+        while not stop_churn.is_set():
+            rng, sub = jax.random.split(rng)
+            store.publish(agent.init(sub, slices[0].obs[:1]))
+            time.sleep(0.002)
+
+    churn = threading.Thread(target=churner, daemon=True)
+    churn.start()
+    try:
+        def worker(t):
+            sl = slices[t]
+            for _ in range(R):
+                out = server.act(sl, t)
+                assert out is not None, "request dropped during hot swap"
+                sl, _, _ = out
+                served[t] += 1
+
+        threads = [threading.Thread(target=worker, args=(t,), daemon=True)
+                   for t in range(K)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120.0)
+            assert not th.is_alive()
+    finally:
+        stop_churn.set()
+        churn.join(timeout=10.0)
+        server.stop()
+    assert server.error is None
+    assert served == [R] * K
+    stats = server.snapshot()
+    assert stats.requests == K * R
+    assert stats.hot_swaps >= 1          # churn was actually observed
+    assert stats.hot_swaps <= stats.dispatches  # only at dispatch boundaries
+    # the engine's snapshot converged onto a published version
+    assert server._snap.version <= store.version
+
+
+def test_stop_wakes_parked_client_immediately():
+    """act() parks on its event, not a poll loop: stop() must wake a parked
+    client well inside any poll quantum."""
+    K = 2
+    _, _, _, slices, _, _, server = _setup(K, coalesce_s=30.0)
+    server.warm(slices[0])
+    server.start()
+    woke = {}
+
+    def worker():
+        woke["result"] = server.act(slices[0], 0)
+        woke["at"] = time.monotonic()
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        with server._cond:
+            if server._pending:
+                break
+        time.sleep(0.005)
+    t0 = time.monotonic()
+    server.stop()
+    th.join(timeout=5.0)
+    assert not th.is_alive()
+    assert woke["result"] is None
+    assert woke["at"] - t0 < 2.0  # event-direct, not a timeout poll expiring
 
 
 def test_clean_stop_while_actors_blocked():

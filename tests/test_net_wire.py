@@ -137,6 +137,59 @@ def test_params_round_trip():
     assert_tree_equal(wire.jax_to_np(params), dec)
 
 
+# --- policy plane: ACT_REQUEST / ACT_RESULT ----------------------------------
+
+def _key_safe(leaf):
+    import jax.random as jr
+    if jax.dtypes.issubdtype(getattr(leaf, "dtype", None),
+                             jax.dtypes.prng_key):
+        leaf = jr.key_data(leaf)
+    return np.asarray(leaf)
+
+
+def test_act_round_trip_bit_identical():
+    """An ActorSlice survives ACT_REQUEST/ACT_RESULT bit-for-bit, typed PRNG
+    key included — the receiver rebuilds it against its own locally derived
+    example slice, so only leaf bytes cross the wire, never pickled trees."""
+    preset = _cached_preset()
+    cfg, env, agent = preset.apex, preset.env, preset.agent
+    sl = phases.initial_actor_slice(cfg, env, seed=3, actor_id=1)
+    example = phases.initial_actor_slice(cfg, env, seed=3, actor_id=1)
+
+    dec, sid = wire.decode_act_request(wire.encode_act_request(sl, 1), example)
+    assert sid == 1
+    for a, b in zip(jax.tree.leaves(sl), jax.tree.leaves(dec)):
+        np.testing.assert_array_equal(_key_safe(a), _key_safe(b))
+
+    block = make_block(cfg, env, agent, seed=5)
+    metrics = {"transitions": np.float32(4.0), "eps": np.float32(0.1)}
+    out_sl, out_block, out_metrics = wire.decode_act_result(
+        wire.encode_act_result(sl, block, metrics), example)
+    for a, b in zip(jax.tree.leaves(sl), jax.tree.leaves(out_sl)):
+        np.testing.assert_array_equal(_key_safe(a), _key_safe(b))
+    assert_tree_equal({"items": wire.jax_to_np(block.items),
+                       "priorities": np.asarray(block.priorities)},
+                      {"items": out_block.items,
+                       "priorities": np.asarray(out_block.priorities)})
+    assert set(out_metrics) == set(metrics)
+    for k in metrics:
+        np.testing.assert_array_equal(out_metrics[k], metrics[k])
+
+
+def test_act_request_rejects_geometry_mismatch():
+    """A peer built against different (cfg, env) geometry must die with a
+    WireError naming the leaf mismatch, not a deep unflatten crash."""
+    preset = _cached_preset()
+    cfg, env = preset.apex, preset.env
+    sl = phases.initial_actor_slice(cfg, env, seed=3, actor_id=0)
+    payload = wire.encode_act_request(sl, 0)
+    with pytest.raises(wire.WireError, match="leaves"):
+        wire.decode_act_request(payload, {"just": np.zeros(3),
+                                          "two": np.zeros(2)})
+    with pytest.raises(wire.WireError, match="ACT_REQUEST"):
+        wire.decode_act_request(wire.encode_tree({"nope": np.zeros(3)}), sl)
+
+
 # --- framing -----------------------------------------------------------------
 
 def _socketpair_reader():

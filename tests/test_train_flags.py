@@ -108,6 +108,49 @@ def test_inference_batching_needs_threads(capsys):
                     "nothing to batch", capsys)
 
 
+def test_serve_policy_relaxes_nothing_to_batch():
+    # proc actors dial the policy gateway as thin clients, so the shared
+    # engine has remote work even with zero in-process threads
+    args = validate(["--runtime", "async", "--actor-threads", "0",
+                     "--actor-procs", "1", "--inference-batching",
+                     "--serve-policy", "127.0.0.1:0"])
+    assert args.serve_policy == "127.0.0.1:0"
+
+
+def test_inference_plane_flags_accepted_under_async():
+    args = validate(["--runtime", "async", "--inference-batching",
+                     "--inference-mode", "slots",
+                     "--serve-policy", "0.0.0.0:7901"])
+    assert args.inference_mode == "slots"
+    assert args.serve_policy == "0.0.0.0:7901"
+
+
+def test_inference_plane_flags_rejected_under_sync(capsys):
+    assert_rejected(["--inference-mode", "slots"], "--runtime async", capsys)
+    assert_rejected(["--serve-policy", "h:1"], "--runtime async", capsys)
+
+
+def test_inference_plane_flags_need_batching_engine(capsys):
+    assert_rejected(["--runtime", "async", "--inference-mode", "slots"],
+                    "--inference-batching", capsys)
+    assert_rejected(["--runtime", "async", "--serve-policy", "h:1"],
+                    "--inference-batching", capsys)
+
+
+def test_serve_policy_spec_validated(capsys):
+    assert_rejected(["--runtime", "async", "--inference-batching",
+                     "--serve-policy", "nonsense"], "HOST:PORT", capsys)
+    assert_rejected(["--runtime", "async", "--inference-batching",
+                     "--serve-policy", "h:99999"], "65535", capsys)
+
+
+def test_inference_plane_conflicts_with_learner_remote(capsys):
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--inference-mode", "slots"], "learner-only", capsys)
+    assert_rejected(["--runtime", "async", "--learner-remote", "h:1",
+                     "--serve-policy", "h:2"], "learner-only", capsys)
+
+
 def test_llm_mode_conflicts(capsys):
     assert_rejected(["--mode", "llm"], "--arch", capsys)
     assert_rejected(["--mode", "llm", "--arch", "llama3.2-1b",
